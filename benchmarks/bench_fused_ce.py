@@ -1,0 +1,103 @@
+"""Paper Table 2 analogs.
+
+latency: wall-clock canonical vs fused at CPU-feasible sizes (the paper's
+GB200 grid scaled down; the V-scaling TREND is the reproduced claim).
+
+memory: compile-only `memory_analysis()` at the paper's EXACT sizes
+(d=4096, B*T x V grid) — temp bytes of a loss+grad step, canonical vs
+fused.  No allocation happens, so the full 72 GiB canonical points run
+fine on CPU; this reproduces the paper's Fig. 5 memory curves exactly.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import LossConfig, canonical_loss, streaming_loss
+from repro.kernels.fused_ce.ops import pallas_loss
+
+_LAT_GRID = [(256, 8192), (256, 32768), (1024, 8192), (1024, 32768)]
+_LAT_D = 512
+_MEM_GRID = [(bt, v)
+             for bt in (1024, 4096, 8192, 16384, 32768)
+             for v in (32768, 65536, 131072, 262144)]
+_MEM_D = 4096
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench_latency(emit):
+    cfg = LossConfig(block_v=2048)
+    for bt, v in _LAT_GRID:
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        h = jax.random.normal(ks[0], (bt, _LAT_D), jnp.float32)
+        w = jax.random.normal(ks[1], (v, _LAT_D), jnp.float32) * 0.02
+        y = jax.random.randint(ks[2], (bt,), 0, v)
+
+        fns = {
+            "canonical": jax.jit(lambda h, w: jax.value_and_grad(
+                lambda h, w: canonical_loss(h, w, y, cfg), (0, 1))(h, w)),
+            "fused_streaming": jax.jit(lambda h, w: jax.value_and_grad(
+                lambda h, w: streaming_loss(h, w, y, cfg), (0, 1))(h, w)),
+        }
+        base = None
+        for name, fn in fns.items():
+            us = _time(fn, h, w)
+            if base is None:
+                base = us
+            emit(f"lat_{name}_bt{bt}_v{v}", us,
+                 f"speedup_vs_canonical={base / us:.3f}")
+
+
+def bench_memory(emit):
+    """Compile-only; derived column = canonical/proposed temp-bytes ratio
+    (paper reports >96% reduction at BT=32768, V=262144)."""
+    cfg = LossConfig(block_v=2048)
+    for bt, v in _MEM_GRID:
+        h = jax.ShapeDtypeStruct((bt, _MEM_D), jnp.bfloat16)
+        w = jax.ShapeDtypeStruct((v, _MEM_D), jnp.bfloat16)
+        y = jax.ShapeDtypeStruct((bt,), jnp.int32)
+
+        def value_grad(lossfn):
+            def f(h, w, y):
+                return jax.value_and_grad(
+                    lambda h, w: lossfn(h, w, y, cfg), (0, 1))(h, w)
+            return f
+
+        sizes = {}
+        for name, lossfn in (("canonical", canonical_loss),
+                             ("proposed", streaming_loss)):
+            t0 = time.perf_counter()
+            compiled = jax.jit(value_grad(lossfn)).lower(h, w, y).compile()
+            dt = (time.perf_counter() - t0) * 1e6
+            ma = compiled.memory_analysis()
+            mb = ma.temp_size_in_bytes / 2 ** 20
+            sizes[name] = mb
+            emit(f"mem_{name}_bt{bt}_v{v}", dt, f"temp_mb={mb:.0f}")
+        emit(f"mem_ratio_bt{bt}_v{v}", 0.0,
+             f"canonical/proposed={sizes['canonical'] / max(sizes['proposed'], 1e-9):.1f}x")
+        jax.clear_caches()
+
+
+def bench_pallas_interpret(emit):
+    """Pallas kernel (interpret) sanity timing at small size — correctness
+    costs dominate on CPU; real perf is the TPU target."""
+    cfg = LossConfig(block_v=512)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    h = jax.random.normal(ks[0], (128, 256), jnp.float32)
+    w = jax.random.normal(ks[1], (2048, 256), jnp.float32) * 0.02
+    y = jax.random.randint(ks[2], (128,), 0, 2048)
+    fn = jax.jit(lambda h, w: pallas_loss(h, w, y, cfg))
+    us = _time(fn, h, w, iters=3)
+    emit("lat_pallas_interpret_bt128_v2048", us, "cpu_interpret_mode")

@@ -1,0 +1,34 @@
+"""Roofline summary from the dry-run artifacts (results/dryrun/*.json)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_records(pattern="*.json"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(_DIR, pattern))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def bench_roofline_summary(emit):
+    recs = [r for r in load_records() if r.get("status") == "ok"
+            and r.get("variant") == "baseline"]
+    if not recs:
+        emit("roofline_summary", 0.0, "no dryrun artifacts; run "
+             "python -m repro.launch.dryrun first")
+        return
+    for r in recs:
+        rl = r["roofline"]
+        emit(
+            f"roofline_{r['cell']}",
+            rl["step_time_s"] * 1e6,
+            f"dom={rl['dominant']};frac={rl['roofline_fraction']:.3f};"
+            f"mem_gib={r['memory']['peak_bytes_per_device'] / 2**30:.2f};"
+            f"coll_gb={rl['collective_bytes_per_device'] / 1e9:.2f}")

@@ -1,0 +1,60 @@
+"""End-to-end train-step throughput: canonical vs fused loss in the same
+tiny-model pipeline (the claim is the OUTPUT-LAYER delta, so the model is
+kept small and vocab large — the paper's regime)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import get_arch
+from repro.train import TrainConfig, build_train_step
+from repro.data import DataConfig, SyntheticLM
+
+
+def bench_train_throughput(emit, steps=6):
+    arch = get_arch("paper-lm", reduced=True)   # d=128, V=1024 miniature
+    data = SyntheticLM(DataConfig(vocab_size=arch.vocab_size, seq_len=128,
+                                  global_batch=8, seed=0))
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    tokens = batch["tokens"].size
+    base = None
+    for impl in ("canonical", "streaming", "pallas"):
+        tc = TrainConfig(optimizer="adamw", peak_lr=1e-3, loss_impl=impl,
+                         loss_block_v=256)
+        init_fn, step_fn = build_train_step(arch, tc)
+        state = init_fn(jax.random.PRNGKey(0))
+        jstep = jax.jit(step_fn, donate_argnums=0)
+        state, m = jstep(state, batch)          # compile
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, m = jstep(state, batch)
+        jax.block_until_ready(m["loss"])
+        us = (time.perf_counter() - t0) / steps * 1e6
+        if base is None:
+            base = us
+        emit(f"train_step_{impl}", us,
+             f"tok_per_s={tokens / (us / 1e6):.0f};"
+             f"vs_canonical={base / us:.3f}")
+
+
+def bench_streaming_topk(emit):
+    """Serving-side: streaming top-k (no logits materialization) vs dense."""
+    from repro.serve.sampler import streaming_topk
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    h = jax.random.normal(ks[0], (32, 512))
+    w = jax.random.normal(ks[1], (65536, 512)) * 0.02
+
+    dense = jax.jit(lambda h, w: jax.lax.top_k(h @ w.T, 8))
+    stream = jax.jit(lambda h, w: streaming_topk(h, w, 8, block_v=8192))
+    for name, fn in (("dense", dense), ("streaming", stream)):
+        jax.block_until_ready(fn(h, w))
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = fn(h, w)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        emit(f"topk_{name}_b32_v65536", us, "k=8")

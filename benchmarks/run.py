@@ -1,0 +1,52 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.
+
+  Table 2 latency  -> bench_fused_ce.bench_latency   (CPU-feasible sizes)
+  Table 2 memory   -> bench_fused_ce.bench_memory    (paper's exact sizes,
+                                                      compile-only bytes)
+  §4.2 throughput  -> bench_train.bench_train_throughput
+  Online-topk      -> bench_train.bench_streaming_topk (serving twin)
+  §Roofline        -> bench_roofline.bench_roofline_summary (dry-run)
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--only lat,mem,train,topk,roof]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="lat,mem,train,topk,roof")
+    args = ap.parse_args()
+    parts = set(args.only.split(","))
+
+    def emit(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+    print("name,us_per_call,derived")
+    if "lat" in parts:
+        from benchmarks.bench_fused_ce import (bench_latency,
+                                               bench_pallas_interpret)
+        bench_latency(emit)
+        bench_pallas_interpret(emit)
+    if "mem" in parts:
+        from benchmarks.bench_fused_ce import bench_memory
+        bench_memory(emit)
+    if "train" in parts:
+        from benchmarks.bench_train import bench_train_throughput
+        bench_train_throughput(emit)
+    if "topk" in parts:
+        from benchmarks.bench_train import bench_streaming_topk
+        bench_streaming_topk(emit)
+    if "roof" in parts:
+        from benchmarks.bench_roofline import bench_roofline_summary
+        bench_roofline_summary(emit)
+
+
+if __name__ == "__main__":
+    main()

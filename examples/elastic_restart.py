@@ -1,0 +1,73 @@
+"""Fault-tolerance walkthrough: train -> preempt -> restore -> continue.
+
+Simulates a preemption mid-run (SIGTERM-style request), checkpoints,
+then resumes from the checkpoint into a fresh process state and finishes
+training — the recovery loop a 1000-node deployment runs on every
+maintenance event.  (Elastic mesh-resize restore is exercised in
+tests/test_distributed.py, which needs forced multi-device.)
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.data import DataConfig, SyntheticLM, ShardedLoader
+from repro.distributed.fault import PreemptionHandler, StragglerMonitor
+from repro.models.registry import get_arch
+from repro.train import (TrainConfig, build_train_step, train_loop,
+                         resume_or_init)
+
+
+def main():
+    arch = get_arch("qwen3-0.6b", reduced=True)
+    tc = TrainConfig(optimizer="adamw", peak_lr=2e-3, warmup_steps=3,
+                     total_steps=30, loss_impl="streaming",
+                     loss_block_v=128)
+    init_fn, step_fn = build_train_step(arch, tc)
+    jstep = jax.jit(step_fn, donate_argnums=0)
+
+    def data():
+        return ShardedLoader(SyntheticLM(DataConfig(
+            vocab_size=arch.vocab_size, seq_len=48, global_batch=8,
+            seed=3)))
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        ck = Checkpointer(ckdir, keep_n=2)
+
+        # ---- phase 1: train, then a "maintenance event" hits ----
+        state = resume_or_init(ck, init_fn, jax.random.PRNGKey(0))
+        ph = PreemptionHandler()
+
+        fired = {"done": False}
+
+        def metrics_hook(step, m):
+            if step >= 9 and not fired["done"]:
+                print(f"  !! simulated preemption signal at step {step}")
+                ph.request_stop()
+                fired["done"] = True
+
+        state, hist = train_loop(
+            state=state, step_fn=jstep, data=data(), num_steps=30,
+            checkpointer=ck, checkpoint_every=5, log_every=5,
+            preemption=ph, straggler=StragglerMonitor(),
+            metrics_hook=metrics_hook)
+        stopped_at = int(jax.device_get(state["step"]))
+        print(f"phase 1 stopped at step {stopped_at}; "
+              f"checkpoints: {ck.all_steps()}")
+
+        # ---- phase 2: new process, resume and finish ----
+        state2 = resume_or_init(ck, init_fn, jax.random.PRNGKey(0))
+        print(f"phase 2 resumed at step {int(state2['step'])}")
+        state2, hist2 = train_loop(
+            state=state2, step_fn=jstep, data=data(), num_steps=30,
+            checkpointer=ck, checkpoint_every=10, log_every=10)
+        print(f"finished at step {int(jax.device_get(state2['step']))}, "
+              f"final loss {hist2[-1][1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

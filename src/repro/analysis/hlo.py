@@ -1,0 +1,118 @@
+"""Parse compiled (post-SPMD) HLO text: collective bytes by kind.
+
+The compiled module is the PER-DEVICE program, so sizes extracted here are
+per-chip.  Collective operand bytes are derived from the result type and
+the replica-group size (all-gather results are group_size x the operand;
+reduce-scatter results are 1/group_size; all-reduce/all-to-all/
+collective-permute are size-preserving).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(result_type: str) -> int:
+    """Sum of shape bytes in the result type (tuples: sum components)."""
+    shapes = _SHAPE_RE.findall(result_type)
+    return sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def to_dict(self):
+        return {"bytes_by_kind": dict(self.bytes_by_kind),
+                "count_by_kind": dict(self.count_by_kind),
+                "total_bytes": self.total_bytes}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Per-device collective operand bytes summed per op kind."""
+    bytes_by = defaultdict(int)
+    count_by = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind, variant = m.group(2), m.group(3)
+        if variant == "-done":
+            continue                       # counted at -start
+        rb = _result_bytes(m.group(1))
+        g = _group_size(line)
+        if kind == "all-gather":
+            operand = rb // max(g, 1)
+        elif kind == "reduce-scatter":
+            operand = rb * g
+        else:
+            operand = rb
+        bytes_by[kind] += operand
+        count_by[kind] += 1
+    return CollectiveStats(dict(bytes_by), dict(count_by))
+
+
+def cost_dict(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0))}
+
+
+def memory_dict(compiled) -> Dict[str, int]:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "temp_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {k: int(getattr(ma, k, 0)) for k in keys}
+    out["peak_bytes_per_device"] = (
+        out["argument_size_in_bytes"] + out["output_size_in_bytes"]
+        + out["temp_size_in_bytes"] - out["alias_size_in_bytes"])
+    return out

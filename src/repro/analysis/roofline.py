@@ -1,0 +1,115 @@
+"""Roofline terms for TPU v5e from dry-run artifacts.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs        [s]
+    memory     = HLO_bytes_per_device / HBM_bw            [s]
+    collective = collective_bytes_per_device / link_bw    [s]
+
+(The assignment's global formulation `X_global / (chips * rate)` equals the
+per-device formulation for a balanced SPMD program; the compiled module IS
+the per-device program, so we use per-device numerators directly.)
+
+Caveat recorded per cell: XLA's `cost_analysis` counts `while` bodies
+ONCE, so programs dominated by scan loops (layer scan, vocab-streaming
+loop, flash-attention kv loop) under-report FLOPs/bytes.  We therefore also
+compute an *analytic* estimate (loop trip counts x per-body cost is
+reconstructed from the model config) and report both; bottleneck calls use
+the analytic numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (assignment figure)
+HBM_BYTES = 16 * 2 ** 30     # 16 GiB
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    model_flops_per_device: float = 0.0
+    analytic_compute_s: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": max(self.compute_s, self.analytic_compute_s),
+                 "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound on the step time."""
+        return (max(self.compute_s, self.analytic_compute_s)
+                + self.memory_s + self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute-time / modeled-step-time: 1.0 == compute-bound at
+        peak MXU with everything else fully overlapped."""
+        useful = self.model_flops_per_device / PEAK_FLOPS
+        denom = max(self.step_time_s, 1e-12)
+        return min(useful / denom, 1.0)
+
+    def to_dict(self) -> Dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "analytic_compute_s": self.analytic_compute_s,
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "collective_bytes_per_device": self.collective_bytes,
+            "model_flops_per_device": self.model_flops_per_device,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_from_stats(flops: float, bytes_accessed: float,
+                        collective_bytes: float,
+                        model_flops_per_device: float = 0.0,
+                        analytic_flops_per_device: float = 0.0) -> Roofline:
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_accessed / HBM_BW,
+        collective_s=collective_bytes / ICI_BW,
+        flops=flops,
+        bytes_accessed=bytes_accessed,
+        collective_bytes=collective_bytes,
+        model_flops_per_device=model_flops_per_device,
+        analytic_compute_s=analytic_flops_per_device / PEAK_FLOPS,
+    )
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS (the assignment's 6*N*D / 2*N*D convention)
+# ---------------------------------------------------------------------------
+
+
+def model_flops(n_active_params: int, tokens: int, kind: str) -> float:
+    """6*N*D for training, 2*N*D for inference forward passes."""
+    per_tok = 6.0 if kind == "train" else 2.0
+    return per_tok * float(n_active_params) * float(tokens)
+
+
+def attention_flops(n_layers: int, n_heads: int, head_dim: int,
+                    seq: int, batch: int, kind: str,
+                    window: Optional[int] = None,
+                    n_attn_layers: Optional[int] = None) -> float:
+    """Score+PV matmul FLOPs (causal halves the full T^2)."""
+    la = n_attn_layers if n_attn_layers is not None else n_layers
+    eff = min(window, seq) if window else seq
+    per_layer = 2 * 2 * batch * n_heads * head_dim * seq * eff * 0.5
+    total = per_layer * la
+    return total * (3.0 if kind == "train" else 1.0)

@@ -1,0 +1,121 @@
+"""Architecture registry base types + the assigned input-shape grid.
+
+Every assigned architecture provides `get_config()` (exact public config)
+and `reduced()` (same family, tiny dims — used by CPU smoke tests).
+`input_specs(arch, shape)` builds ShapeDtypeStruct stand-ins for the
+dry-run (no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import LossConfig
+
+# ---------------------------------------------------------------------------
+# shape grid (assignment: LM shapes are seq_len x global_batch)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# encoder frame length used for enc-dec serve shapes (decoder gets seq_len)
+ENCDEC_SERVE_ENC_LEN = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    """One selectable architecture (--arch <id>)."""
+
+    arch_id: str
+    family: str                   # transformer | xlstm | griffin | encdec
+    cfg: Any                      # family config dataclass
+    tags: tuple = ()              # ('moe',), ('ssm',), ...
+    vocab_pad_multiple: int = 256  # lm_head rows padded to this multiple
+
+    @property
+    def vocab_size(self) -> int:
+        return self.cfg.vocab_size
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def sub_quadratic(self) -> bool:
+        return self.family in ("xlstm", "griffin")
+
+    def loss_config(self, **kw) -> LossConfig:
+        kw.setdefault("valid_vocab", self.vocab_size)
+        return LossConfig(**kw)
+
+    def supports(self, shape: str) -> bool:
+        s = SHAPES[shape]
+        if s.name == "long_500k":
+            return self.sub_quadratic     # spec: full-attention archs skip
+        return True
+
+
+def _ids(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _f(shape, dtype=jnp.bfloat16):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: Arch, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train:    tokens + targets (+ frontend embeds for vlm/audio stubs)
+    prefill:  tokens (+ frontend embeds)
+    decode:   one new token; the KV/recurrent cache specs come separately
+              from `serve.cache_specs` (they are step state, not input).
+    """
+    s = SHAPES[shape_name]
+    b = s.global_batch
+    d = arch.cfg.d_model
+    cdt = jnp.dtype(getattr(arch.cfg, "compute_dtype", "float32"))
+
+    if arch.family == "encdec":
+        enc_len = s.seq_len if s.kind == "train" else ENCDEC_SERVE_ENC_LEN
+        if s.kind == "train":
+            return {"frontend_embeds": _f((b, enc_len, d), cdt),
+                    "tokens": _ids((b, s.seq_len)),
+                    "targets": _ids((b, s.seq_len))}
+        if s.kind == "prefill":
+            return {"frontend_embeds": _f((b, enc_len, d), cdt),
+                    "tokens": _ids((b, s.seq_len))}
+        return {"tokens": _ids((b, 1))}
+
+    front = getattr(arch.cfg, "frontend_len", 0)
+    if s.kind == "train":
+        spec = {"tokens": _ids((b, s.seq_len - front)),
+                "targets": _ids((b, s.seq_len))}
+        if front:
+            spec["frontend_embeds"] = _f((b, front, d), cdt)
+        return spec
+    if s.kind == "prefill":
+        spec = {"tokens": _ids((b, s.seq_len - front))}
+        if front:
+            spec["frontend_embeds"] = _f((b, front, d), cdt)
+        return spec
+    return {"tokens": _ids((b, 1))}

@@ -1,0 +1,17 @@
+"""Paper core: fused output projection + cross-entropy prediction."""
+
+from repro.core.types import LossConfig, IGNORE_INDEX
+from repro.core.fused_ce import fused_cross_entropy
+from repro.core.canonical import canonical_loss
+from repro.core.streaming import streaming_loss
+from repro.core.windows import choose_blocks, BlockPlan
+
+__all__ = [
+    "LossConfig",
+    "IGNORE_INDEX",
+    "fused_cross_entropy",
+    "canonical_loss",
+    "streaming_loss",
+    "choose_blocks",
+    "BlockPlan",
+]

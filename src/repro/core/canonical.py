@@ -1,0 +1,92 @@
+"""Canonical two-stage output pipeline (the paper's baseline, §3.1).
+
+    Z = H @ W^T            -- logits fully materialized, O(B*T*V)
+    L = cross_entropy(Z, Y)
+
+This is the comparator for every experiment (paper Table 2 "Canonical") and
+the semantic oracle for the fused implementations.  It intentionally
+materializes the full logits tensor in fp32, exactly like the upcast-in-GEMM
+behaviour the paper describes for BF16 training.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import LossConfig
+
+_NEG_INF = float("-inf")
+
+
+def compute_logits(h: jax.Array, w: jax.Array, cfg: LossConfig) -> jax.Array:
+    """Full logits Z = H W^T with pad-column masking and optional softcap."""
+    v_padded = w.shape[0]
+    z = jnp.dot(h, w.T, preferred_element_type=jnp.float32)
+    if cfg.logit_softcap is not None:
+        cap = jnp.float32(cfg.logit_softcap)
+        z = cap * jnp.tanh(z / cap)
+    valid = cfg.resolve_vocab(v_padded)
+    if valid != v_padded:
+        col = jnp.arange(v_padded)
+        z = jnp.where(col[None, :] < valid, z, _NEG_INF)
+    return z
+
+
+def per_row_loss_from_logits(
+    z: jax.Array, y: jax.Array, cfg: LossConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-row CE (+ label smoothing + z-loss) from materialized logits.
+
+    Returns (loss_rows, lse_rows); ignored rows produce 0 loss.
+    """
+    v_padded = z.shape[-1]
+    valid = cfg.resolve_vocab(v_padded)
+    lse = jax.nn.logsumexp(z, axis=-1)
+    y_safe = jnp.clip(y, 0, v_padded - 1)
+    z_tgt = jnp.take_along_axis(z, y_safe[:, None], axis=-1)[:, 0]
+    loss = lse - z_tgt
+    if cfg.label_smoothing > 0.0:
+        eps = jnp.float32(cfg.label_smoothing)
+        # mean over *valid* columns only; pad columns hold -inf.
+        col = jnp.arange(v_padded)
+        z_valid = jnp.where(col[None, :] < valid, z, 0.0)
+        z_mean = jnp.sum(z_valid, axis=-1) / valid
+        loss = (1.0 - eps) * loss + eps * (lse - z_mean)
+    if cfg.z_loss > 0.0:
+        loss = loss + jnp.float32(cfg.z_loss) * lse * lse
+    keep = (y != cfg.ignore_index)
+    loss = jnp.where(keep, loss, 0.0)
+    return loss, lse
+
+
+def reduce_loss(loss_rows: jax.Array, y: jax.Array, cfg: LossConfig) -> jax.Array:
+    if cfg.reduction == "none":
+        return loss_rows
+    if cfg.reduction == "sum":
+        return jnp.sum(loss_rows)
+    keep = (y != cfg.ignore_index)
+    denom = jnp.maximum(jnp.sum(keep.astype(jnp.float32)), 1.0)
+    return jnp.sum(loss_rows) / denom
+
+
+def canonical_loss(
+    h: jax.Array,
+    w: jax.Array,
+    y: jax.Array,
+    cfg: Optional[LossConfig] = None,
+) -> jax.Array:
+    """The two-stage baseline: materialize logits, then CE.
+
+    Args:
+      h: (N, d) hidden states (any float dtype; upcast to f32 in the GEMM).
+      w: (V_padded, d) output-projection weights.
+      y: (N,) int targets in [0, valid_vocab) or == ignore_index.
+      cfg: loss configuration.
+    """
+    cfg = cfg or LossConfig()
+    z = compute_logits(h, w, cfg)
+    loss_rows, _ = per_row_loss_from_logits(z, y, cfg)
+    return reduce_loss(loss_rows, y, cfg)

@@ -1,0 +1,70 @@
+"""Shared configuration types for the fused projection->prediction loss.
+
+The paper fuses the lm_head projection and the cross-entropy loss into a
+single streaming operation (Alg. 1/2).  Every implementation in this package
+(`canonical`, `streaming`, `pallas`, `sharded`) consumes the same
+:class:`LossConfig` so they are drop-in interchangeable and can be verified
+against each other.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+IGNORE_INDEX = -100
+
+
+@dataclasses.dataclass(frozen=True)
+class LossConfig:
+    """Static configuration of the fused output-projection + CE loss.
+
+    Attributes:
+      reduction: 'mean' | 'sum' | 'none'.  'mean' averages over non-ignored
+        rows (the paper's 1/(B*T) with ignore masking).
+      ignore_index: target value marking rows excluded from the loss.
+      label_smoothing: epsilon of standard label smoothing.  Needs only one
+        extra running statistic (sum of valid logits) in the streaming form —
+        one of the paper's §5 "extensibility" claims, implemented.
+      z_loss: coefficient of the auxiliary z-loss  z * lse^2  (PaLM-style).
+        Free in the fused form because lse is already computed.
+      logit_softcap: optional tanh soft-capping  cap*tanh(z/cap)  applied to
+        every logit before the softmax (Gemma-2 style).  Applied tile-locally
+        in the streaming form.
+      valid_vocab: number of real vocabulary entries.  Rows of W beyond this
+        are *padding* (added so the vocab axis divides the mesh) and are
+        masked to -inf inside every implementation.  None means W.shape[0].
+      block_v: vocabulary chunk ("window size" in paper §3.2.1) used by the
+        streaming implementation.  The Pallas kernel picks its own BlockSpec
+        tiling via `windows.choose_blocks` unless overridden.
+      accum_dtype: accumulator dtype for the online softmax state (paper
+        upcasts BF16 tiles to FP32 in registers; we do the same in VMEM).
+    """
+
+    reduction: str = "mean"
+    ignore_index: int = IGNORE_INDEX
+    label_smoothing: float = 0.0
+    z_loss: float = 0.0
+    logit_softcap: Optional[float] = None
+    valid_vocab: Optional[int] = None
+    block_v: int = 2048
+    accum_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.reduction not in ("mean", "sum", "none"):
+            raise ValueError(f"bad reduction {self.reduction!r}")
+        if not 0.0 <= self.label_smoothing < 1.0:
+            raise ValueError("label_smoothing must be in [0, 1)")
+        if self.z_loss < 0.0:
+            raise ValueError("z_loss must be >= 0")
+        if self.logit_softcap is not None and self.logit_softcap <= 0.0:
+            raise ValueError("logit_softcap must be > 0")
+        if self.block_v <= 0:
+            raise ValueError("block_v must be positive")
+
+    def resolve_vocab(self, padded_vocab: int) -> int:
+        v = self.valid_vocab if self.valid_vocab is not None else padded_vocab
+        if v > padded_vocab:
+            raise ValueError(
+                f"valid_vocab={v} exceeds weight rows {padded_vocab}")
+        return v

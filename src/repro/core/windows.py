@@ -1,0 +1,88 @@
+"""Window / block-size selection (paper §3.2.1, adapted to TPU VMEM).
+
+The paper exposes a tunable "window size" W that splits the vocabulary loop
+into chunks so small-(B*T) problems still saturate the GPU.  On TPU the
+analogous knobs are the Pallas BlockSpec tile shapes:
+
+  block_rows — rows of H per grid step         (bm)
+  block_v    — vocab columns per grid step     (bv)
+
+The VMEM working set of one forward grid step is
+
+  bm*d (H tile, bf16/f32) + bv*d (W tile) + bm*bv (logits tile, f32)
+  + O(bm) state
+
+and must fit the ~16 MiB/core VMEM of TPU v5e with headroom for double
+buffering.  MXU efficiency wants every matmul dim to be a multiple of 128
+(lanes) and the sublane dim a multiple of 8.  `choose_blocks` encodes that
+napkin math so callers never hand-tune.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# v5e: 16 MiB VMEM per core; keep ~45% headroom for double buffering +
+# spills (Pallas pipelines input windows, so ~2x the W tile is resident).
+VMEM_BYTES = 16 * 1024 * 1024
+_DEFAULT_BUDGET = int(VMEM_BYTES * 0.55)
+
+_LANE = 128
+_SUBLANE = 8
+
+
+def _round_down(x: int, m: int) -> int:
+    return max((x // m) * m, m)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    block_rows: int
+    block_v: int
+    vmem_bytes: int
+
+    @property
+    def shape(self):
+        return (self.block_rows, self.block_v)
+
+
+def tile_bytes(bm: int, bv: int, d: int, in_bytes: int = 2) -> int:
+    """Forward-pass VMEM bytes of one grid step (double-buffered inputs)."""
+    h_tile = bm * d * in_bytes
+    w_tile = bv * d * in_bytes
+    logits = bm * bv * 4
+    state = 4 * bm * 4  # m, a, z_sum, z_tgt in f32
+    return 2 * (h_tile + w_tile) + logits + state
+
+
+def choose_blocks(
+    n_rows: int,
+    vocab: int,
+    d: int,
+    *,
+    in_bytes: int = 2,
+    vmem_budget: int = _DEFAULT_BUDGET,
+    max_block_rows: int = 1024,
+    max_block_v: int = 4096,
+) -> BlockPlan:
+    """Pick (block_rows, block_v) fitting the VMEM budget.
+
+    Strategy (mirrors the paper's occupancy reasoning):
+      * prefer rows tiles of 128-512 — enough MXU work per step;
+      * spend the remaining budget on the vocab tile: a larger bv amortizes
+        the H-tile fetch across more columns (arithmetic intensity of the
+        tile GEMM is ~ 1/(1/bm + 1/bv) MACs/byte);
+      * when n_rows is tiny (decode: B*T == B), shrink bm to the real row
+        count and grow bv — the TPU analogue of the paper's window strategy
+        for small B*T.
+    """
+    bm = min(_round_down(min(n_rows, 512), _SUBLANE), max_block_rows)
+    if n_rows < _SUBLANE:
+        bm = _SUBLANE  # pallas pads; rows beyond n are masked by the caller
+    bv = max_block_v
+    while bv > _LANE and tile_bytes(bm, bv, d, in_bytes) > vmem_budget:
+        bv //= 2
+    while bm > _SUBLANE and tile_bytes(bm, bv, d, in_bytes) > vmem_budget:
+        bm //= 2
+    bv = max(_round_down(min(bv, vocab), _LANE), _LANE)
+    return BlockPlan(bm, bv, tile_bytes(bm, bv, d, in_bytes))

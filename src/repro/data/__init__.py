@@ -1,0 +1,4 @@
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.data.loader import ShardedLoader
+
+__all__ = ["DataConfig", "SyntheticLM", "ShardedLoader"]

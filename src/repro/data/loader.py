@@ -1,0 +1,71 @@
+"""Device loader: host batches -> sharded global jax.Arrays, prefetched.
+
+`ShardedLoader` turns the host-local numpy stream into global arrays laid
+out per the mesh (batch over ("pod","data")), double-buffering the next
+batch on a background thread so host generation overlaps device compute.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class ShardedLoader:
+    def __init__(self, source, mesh: Optional[Mesh] = None,
+                 batch_axes=("pod", "data"), prefetch: int = 2,
+                 extra_specs: Optional[Dict[str, P]] = None):
+        self.source = source
+        self.mesh = mesh
+        self.batch_axes = batch_axes
+        self.prefetch = prefetch
+        self.extra_specs = extra_specs or {}
+        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    def _spec_for(self, name: str) -> P:
+        if name in self.extra_specs:
+            return self.extra_specs[name]
+        axes = tuple(a for a in self.batch_axes
+                     if self.mesh and a in self.mesh.axis_names)
+        return P(axes if len(axes) > 1 else (axes[0] if axes else None))
+
+    def _put_device(self, host_batch: Dict[str, np.ndarray]):
+        if self.mesh is None:
+            return {k: jax.numpy.asarray(v) for k, v in host_batch.items()}
+        out = {}
+        for k, v in host_batch.items():
+            spec = self._spec_for(k)
+            spec = P(spec[0], *([None] * (v.ndim - 1)))
+            sh = NamedSharding(self.mesh, spec)
+            out[k] = jax.device_put(v, sh)
+        return out
+
+    def _worker(self, it):
+        try:
+            for hb in it:
+                if self._stop.is_set():
+                    return
+                self._q.put(hb)
+        finally:
+            self._q.put(None)
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        it = iter(self.source)
+        self._thread = threading.Thread(target=self._worker, args=(it,),
+                                        daemon=True)
+        self._thread.start()
+        while True:
+            hb = self._q.get()
+            if hb is None:
+                return
+            yield self._put_device(hb)
+
+    def close(self):
+        self._stop.set()

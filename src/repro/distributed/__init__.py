@@ -1,0 +1,11 @@
+from repro.distributed.compression import (
+    quantize_ef, dequantize, init_residuals, compressed_psum_tree)
+from repro.distributed.elastic import reshard, reshard_params, plan_batch
+from repro.distributed.fault import (
+    PreemptionHandler, StragglerMonitor, retry)
+
+__all__ = [
+    "quantize_ef", "dequantize", "init_residuals", "compressed_psum_tree",
+    "reshard", "reshard_params", "plan_batch",
+    "PreemptionHandler", "StragglerMonitor", "retry",
+]

@@ -1,0 +1,55 @@
+"""Elastic scaling: re-shard live training state across a resized mesh.
+
+When nodes join/leave, the job restarts with a different device count; the
+surviving state (params + optimizer) must be redistributed.  Two paths:
+
+  * `reshard(tree, rules_new)` — in-memory redistribution when the same
+    process sees the new mesh (device_put with the new NamedShardings;
+    XLA moves only the bytes that change owner).
+  * checkpoint-based — `Checkpointer.restore(..., shardings=new)` already
+    restores any checkpoint onto any mesh (shape-checked), which is the
+    cross-restart elastic path.
+
+`plan_batch(global_batch, mesh)` re-derives per-device batch so the GLOBAL
+batch (and thus the optimizer trajectory) is invariant under scaling —
+only throughput changes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.rules import AxisRules, param_shardings
+
+
+def reshard(tree: Any, shardings: Any) -> Any:
+    """device_put every leaf with its new sharding (cross-mesh OK)."""
+    flat, treedef = jax.tree.flatten(tree)
+    flat_sh = treedef.flatten_up_to(shardings)
+    return jax.tree.unflatten(
+        treedef, [jax.device_put(x, s) for x, s in zip(flat, flat_sh)])
+
+
+def reshard_params(params: Any, new_mesh: Mesh,
+                   rules: Optional[AxisRules] = None) -> Any:
+    rules = (rules or AxisRules()).__class__(mesh=new_mesh,
+                                             rules=(rules or AxisRules()).rules)
+    return reshard(params, param_shardings(params, rules))
+
+
+def plan_batch(global_batch: int, mesh: Mesh,
+               batch_axes: Sequence[str] = ("pod", "data")) -> dict:
+    """Derive per-device batch under the (possibly resized) mesh."""
+    ways = 1
+    for a in batch_axes:
+        if a in mesh.axis_names:
+            ways *= mesh.shape[a]
+    if global_batch % ways:
+        raise ValueError(
+            f"global_batch {global_batch} not divisible by batch shards "
+            f"{ways} on mesh {dict(mesh.shape)}")
+    return {"global_batch": global_batch, "batch_shards": ways,
+            "per_shard": global_batch // ways}

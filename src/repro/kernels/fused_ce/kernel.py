@@ -1,0 +1,324 @@
+"""Pallas TPU kernels for fused output projection + cross-entropy.
+
+TPU adaptation of the paper's CUDA design (DESIGN.md §2):
+
+  * the logits tile `z = H_tile @ W_tile^T` exists only in VMEM/VREGs —
+    the (N, V) logits tensor is never written to HBM;
+  * the online-softmax state (m, a) plus the auxiliary sums (z_target,
+    z_sum) live in f32 VMEM scratch, carried across the *innermost,
+    sequential* vocab grid axis ("arbitrary" dimension semantics);
+  * the MXU computes the tile GEMM while the VPU performs the
+    max/exp/accumulate updates — the TPU analogue of the paper's
+    CUDA-core/Tensor-core overlap;
+  * backward is TWO passes (no TPU atomics): a dH kernel accumulating over
+    vocab tiles for fixed row tiles, and a dW kernel accumulating over row
+    tiles for fixed vocab tiles.  Both recompute the logit tile (paper
+    Alg. 2 "logit recompute").
+
+Grid layouts (R = n_rows/bm, Vb = V_padded/bv):
+
+  forward : grid=(R, Vb)  — vocab innermost, state scratch per row tile
+  dH      : grid=(R, Vb)  — vocab innermost, dH scratch per row tile
+  dW      : grid=(Vb, R)  — rows  innermost, dW scratch per vocab tile
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.types import LossConfig
+from repro.core.windows import choose_blocks, BlockPlan
+
+_NEG_INF = float("-inf")
+
+
+def _compiler_params(n_parallel_first: bool):
+    """dimension_semantics: first axis parallel, second sequential."""
+    sem = ("parallel", "arbitrary")
+    try:
+        return pltpu.CompilerParams(dimension_semantics=sem)
+    except (AttributeError, TypeError):  # pragma: no cover - older jax
+        return pltpu.TPUCompilerParams(dimension_semantics=sem)
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _tile_logits(h_tile, w_tile, cfg: LossConfig):
+    """(bm, bv) logits tile on the MXU, f32 accumulate; softcap applied."""
+    z = jax.lax.dot_general(
+        h_tile, w_tile,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    if cfg.logit_softcap is not None:
+        cap = jnp.float32(cfg.logit_softcap)
+        z = cap * jnp.tanh(z / cap)
+    return z
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(off_ref, y_ref, h_ref, w_ref,   # inputs
+                lse_ref, ztgt_ref, zsum_ref,    # outputs
+                m_sc, a_sc, zt_sc, zs_sc,       # scratch (bm, 1) f32
+                *, cfg: LossConfig, valid: int, v_orig: int, bv: int,
+                num_v: int):
+    v = pl.program_id(1)
+
+    @pl.when(v == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc[...], _NEG_INF)
+        a_sc[...] = jnp.zeros_like(a_sc[...])
+        zt_sc[...] = jnp.zeros_like(zt_sc[...])
+        zs_sc[...] = jnp.zeros_like(zs_sc[...])
+
+    z = _tile_logits(h_ref[...], w_ref[...], cfg)           # (bm, bv) f32
+    bm = z.shape[0]
+    local_col = v * bv + jax.lax.broadcasted_iota(jnp.int32, (bm, bv), 1)
+    col = local_col + off_ref[0, 0]                         # global vocab id
+    col_valid = (local_col < v_orig) & (col < valid)
+    z = jnp.where(col_valid, z, _NEG_INF)
+
+    # online max / accumulator update (paper Alg. 1 lines 8-14)
+    m_prev = m_sc[...]                                      # (bm, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(z, axis=1, keepdims=True))
+    safe_m = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+    a_sc[...] = (a_sc[...] * jnp.exp(m_prev - safe_m)
+                 + jnp.sum(jnp.exp(z - safe_m), axis=1, keepdims=True))
+    m_sc[...] = m_new
+
+    # target logit (line 15-16) and valid-logit sum (label smoothing);
+    # col_valid guard: local pad columns alias other shards' global ids
+    y = y_ref[...]                                          # (bm, 1) int32
+    zt_sc[...] += jnp.sum(jnp.where((col == y) & col_valid, z, 0.0),
+                          axis=1, keepdims=True)
+    zs_sc[...] += jnp.sum(jnp.where(col_valid, z, 0.0), axis=1, keepdims=True)
+
+    @pl.when(v == num_v - 1)
+    def _epilogue():
+        lse_ref[...] = m_sc[...] + jnp.log(a_sc[...])
+        ztgt_ref[...] = zt_sc[...]
+        zsum_ref[...] = zs_sc[...]
+
+
+def fwd_stats(
+    h: jax.Array, w: jax.Array, y: jax.Array, cfg: LossConfig,
+    plan: Optional[BlockPlan] = None, interpret: Optional[bool] = None,
+    *, col_offset=0, total_valid: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-row (lse, z_target, z_sum) via the forward Pallas kernel.
+
+    h: (N, d), w: (V, d), y: (N,) int32.  N and V are padded internally to
+    the block plan; pad rows/cols never influence real outputs.
+
+    Tensor-parallel shards pass `col_offset` (traced scalar: global id of
+    w's first row) and `total_valid` (global valid vocab); `y` stays global.
+    """
+    n, d = h.shape
+    v_orig = w.shape[0]
+    valid = total_valid if total_valid is not None else (
+        cfg.resolve_vocab(v_orig))
+    plan = plan or choose_blocks(n, v_orig, d, in_bytes=h.dtype.itemsize)
+    bm, bv = plan.block_rows, plan.block_v
+    interpret = _interpret_default() if interpret is None else interpret
+
+    n_pad = (-n) % bm
+    v_pad = (-v_orig) % bv
+    if n_pad:
+        h = jnp.pad(h, ((0, n_pad), (0, 0)))
+        y = jnp.pad(y, (0, n_pad), constant_values=0)
+    if v_pad:
+        w = jnp.pad(w, ((0, v_pad), (0, 0)))
+    np_, vp = h.shape[0], w.shape[0]
+    num_r, num_v = np_ // bm, vp // bv
+
+    off = jnp.asarray(col_offset, jnp.int32).reshape(1, 1)
+    y2 = y.astype(jnp.int32)[:, None]                       # (N, 1)
+    out_shape = [jax.ShapeDtypeStruct((np_, 1), jnp.float32)] * 3
+    kern = functools.partial(_fwd_kernel, cfg=cfg, valid=valid,
+                             v_orig=v_orig, bv=bv, num_v=num_v)
+    row_spec = pl.BlockSpec((bm, 1), lambda r, v: (r, 0))
+    lse, ztgt, zsum = pl.pallas_call(
+        kern,
+        grid=(num_r, num_v),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda r, v: (0, 0)),      # col offset
+            pl.BlockSpec((bm, 1), lambda r, v: (r, 0)),     # y
+            pl.BlockSpec((bm, d), lambda r, v: (r, 0)),     # h
+            pl.BlockSpec((bv, d), lambda r, v: (v, 0)),     # w
+        ],
+        out_specs=[row_spec, row_spec, row_spec],
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bm, 1), jnp.float32) for _ in range(4)],
+        compiler_params=_compiler_params(True),
+        interpret=interpret,
+    )(off, y2, h, w)
+    return lse[:n, 0], ztgt[:n, 0], zsum[:n, 0]
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels (two-pass; logit recompute per tile)
+# ---------------------------------------------------------------------------
+
+
+def _grad_tile(h_tile, w_tile, y_tile, lse_tile, gamma_tile, pc_tile,
+               v_start, col_offset, cfg: LossConfig, valid: int,
+               v_orig: int):
+    """g = Γ·(p·(1+2λ_z·lse) − (1−ε)·onehot − ε/valid) for one tile."""
+    z = jax.lax.dot_general(
+        h_tile, w_tile, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if cfg.logit_softcap is not None:
+        cap = jnp.float32(cfg.logit_softcap)
+        zc = cap * jnp.tanh(z / cap)
+    else:
+        zc = z
+    bm, bv = zc.shape
+    local_col = v_start + jax.lax.broadcasted_iota(jnp.int32, (bm, bv), 1)
+    col = local_col + col_offset
+    col_valid = (local_col < v_orig) & (col < valid)
+    p = jnp.exp(jnp.where(col_valid, zc, _NEG_INF) - lse_tile)
+    onehot = (col == y_tile).astype(jnp.float32)
+    eps = jnp.float32(cfg.label_smoothing)
+    g = pc_tile * p - gamma_tile * ((1.0 - eps) * onehot + eps / valid)
+    if cfg.logit_softcap is not None:
+        g = g * (1.0 - (zc / jnp.float32(cfg.logit_softcap)) ** 2)
+    return jnp.where(col_valid, g, 0.0)
+
+
+def _dh_kernel(off_ref, y_ref, lse_ref, gm_ref, pc_ref, h_ref, w_ref,
+               dh_ref, dh_sc,
+               *, cfg: LossConfig, valid: int, v_orig: int, bv: int,
+               num_v: int):
+    v = pl.program_id(1)
+
+    @pl.when(v == 0)
+    def _init():
+        dh_sc[...] = jnp.zeros_like(dh_sc[...])
+
+    g = _grad_tile(h_ref[...], w_ref[...], y_ref[...], lse_ref[...],
+                   gm_ref[...], pc_ref[...], v * bv, off_ref[0, 0], cfg,
+                   valid, v_orig)
+    # dH_tile += g @ W_tile      (bm,bv)x(bv,d) on the MXU
+    dh_sc[...] += jax.lax.dot_general(
+        g, w_ref[...].astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(v == num_v - 1)
+    def _epilogue():
+        dh_ref[...] = dh_sc[...]
+
+
+def _dw_kernel(off_ref, y_ref, lse_ref, gm_ref, pc_ref, h_ref, w_ref,
+               dw_ref, dw_sc,
+               *, cfg: LossConfig, valid: int, v_orig: int, bv: int,
+               num_r: int):
+    r = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _init():
+        dw_sc[...] = jnp.zeros_like(dw_sc[...])
+
+    v = pl.program_id(0)
+    g = _grad_tile(h_ref[...], w_ref[...], y_ref[...], lse_ref[...],
+                   gm_ref[...], pc_ref[...], v * bv, off_ref[0, 0], cfg,
+                   valid, v_orig)
+    # dW_tile += g^T @ H_tile    (bv,bm)x(bm,d) on the MXU
+    dw_sc[...] += jax.lax.dot_general(
+        g, h_ref[...].astype(jnp.float32),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(r == num_r - 1)
+    def _epilogue():
+        dw_ref[...] = dw_sc[...]
+
+
+def bwd_grads(
+    h: jax.Array, w: jax.Array, y: jax.Array,
+    lse: jax.Array, gamma: jax.Array, p_coeff: jax.Array,
+    cfg: LossConfig, plan: Optional[BlockPlan] = None,
+    interpret: Optional[bool] = None,
+    *, col_offset=0, total_valid: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """(dH, dW) via the two backward Pallas kernels (f32 outputs)."""
+    n, d = h.shape
+    v_orig = w.shape[0]
+    valid = total_valid if total_valid is not None else (
+        cfg.resolve_vocab(v_orig))
+    plan = plan or choose_blocks(n, v_orig, d, in_bytes=h.dtype.itemsize)
+    bm, bv = plan.block_rows, plan.block_v
+    interpret = _interpret_default() if interpret is None else interpret
+
+    n_pad = (-n) % bm
+    v_pad = (-v_orig) % bv
+    if n_pad:
+        h = jnp.pad(h, ((0, n_pad), (0, 0)))
+        y = jnp.pad(y, (0, n_pad), constant_values=0)
+        lse = jnp.pad(lse, (0, n_pad))
+        gamma = jnp.pad(gamma, (0, n_pad))       # pad rows: gamma == 0
+        p_coeff = jnp.pad(p_coeff, (0, n_pad))
+    if v_pad:
+        w = jnp.pad(w, ((0, v_pad), (0, 0)))
+    np_, vp = h.shape[0], w.shape[0]
+    num_r, num_v = np_ // bm, vp // bv
+
+    off = jnp.asarray(col_offset, jnp.int32).reshape(1, 1)
+    y2 = y.astype(jnp.int32)[:, None]
+    lse2, gm2, pc2 = lse[:, None], gamma[:, None], p_coeff[:, None]
+
+    row_in = lambda r, v: (r, 0)
+    dh = pl.pallas_call(
+        functools.partial(_dh_kernel, cfg=cfg, valid=valid, v_orig=v_orig,
+                          bv=bv, num_v=num_v),
+        grid=(num_r, num_v),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda r, v: (0, 0)),      # col offset
+            pl.BlockSpec((bm, 1), row_in),                  # y
+            pl.BlockSpec((bm, 1), row_in),                  # lse
+            pl.BlockSpec((bm, 1), row_in),                  # gamma
+            pl.BlockSpec((bm, 1), row_in),                  # p_coeff
+            pl.BlockSpec((bm, d), row_in),                  # h
+            pl.BlockSpec((bv, d), lambda r, v: (v, 0)),     # w
+        ],
+        out_specs=pl.BlockSpec((bm, d), row_in),
+        out_shape=jax.ShapeDtypeStruct((np_, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, d), jnp.float32)],
+        compiler_params=_compiler_params(True),
+        interpret=interpret,
+    )(off, y2, lse2, gm2, pc2, h, w)
+
+    row_in2 = lambda v, r: (r, 0)
+    dw = pl.pallas_call(
+        functools.partial(_dw_kernel, cfg=cfg, valid=valid, v_orig=v_orig,
+                          bv=bv, num_r=num_r),
+        grid=(num_v, num_r),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda v, r: (0, 0)),      # col offset
+            pl.BlockSpec((bm, 1), row_in2),                 # y
+            pl.BlockSpec((bm, 1), row_in2),                 # lse
+            pl.BlockSpec((bm, 1), row_in2),                 # gamma
+            pl.BlockSpec((bm, 1), row_in2),                 # p_coeff
+            pl.BlockSpec((bm, d), row_in2),                 # h
+            pl.BlockSpec((bv, d), lambda v, r: (v, 0)),     # w
+        ],
+        out_specs=pl.BlockSpec((bv, d), lambda v, r: (v, 0)),
+        out_shape=jax.ShapeDtypeStruct((vp, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bv, d), jnp.float32)],
+        compiler_params=_compiler_params(True),
+        interpret=interpret,
+    )(off, y2, lse2, gm2, pc2, h, w)
+
+    return dh[:n], dw[:v_orig]

@@ -1,0 +1,406 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers the REAL train_step / prefill / decode_step with full
+     in/out shardings against ShapeDtypeStruct inputs (no allocation),
+  3. compiles (SPMD partitioner runs -> proves the sharding config is
+     coherent; OOM/mismatch/unsupported-collective = failure),
+  4. records memory_analysis / cost_analysis / collective bytes into
+     results/dryrun/<cell>.json for EXPERIMENTS.md and the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun               # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+      --shape train_4k --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo import collective_stats, cost_dict, memory_dict
+from repro.analysis import roofline as RL
+from repro.configs.base import Arch, SHAPES, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import (
+    get_arch, ARCH_IDS, forward_hidden, init_params, serve_cache_specs,
+    param_count)
+from repro.serve.partition import cache_specs, batch_specs
+from repro.serve.sampler import sample_tokens
+from repro.sharding.rules import AxisRules
+from repro.train.state import state_specs
+from repro.train.step import TrainConfig, build_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# >=30B-param archs get factored-moment Adafactor + ZeRO-3 param/grad/opt
+# sharding over the data axis (fits v5e HBM; see DESIGN.md); smaller archs
+# get AdamW with TP-sharded fp32 moments.
+_ADAFACTOR_ARCHS = {"arctic-480b", "qwen3-moe-235b-a22b", "qwen1.5-32b",
+                    "mistral-large-123b"}
+# recurrentgemma-9b: ZeRO-3 (H3.2; 20.1 -> 7.96 GiB).  ZeRO-1 was tried
+# (H3.3 hypothesis: avoid per-microbatch weight gathers) and REFUTED —
+# frac 0.775 vs 0.788; the f32-moment traffic outweighs the gathers.
+_ZERO3_ARCHS = _ADAFACTOR_ARCHS | {"recurrentgemma-9b"}
+_ZERO1_ARCHS: set = set()
+
+# per-arch grad accumulation for the train shape: bounds the per-layer
+# scan-carry activation memory (tokens/device/microbatch * d * 2B * L)
+_GRAD_ACCUM = {"mistral-large-123b": 16, "arctic-480b": 8,
+               "qwen3-moe-235b-a22b": 8, "qwen1.5-32b": 8,
+               "qwen2-7b": 4, "recurrentgemma-9b": 8,
+               "internvl2-1b": 2, "seamless-m4t-medium": 2}
+# arctic's 480B params make even one extra f32 param-sized buffer 7.5
+# GiB/device; accumulate its microbatch grads in bf16 (EXPERIMENTS §Perf)
+_ACCUM_DTYPE = {"arctic-480b": "bfloat16"}
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _train_config(arch: Arch, loss_impl: str = "sharded") -> TrainConfig:
+    opt = ("adafactor" if arch.arch_id in _ADAFACTOR_ARCHS else "adamw")
+    okw = (("mu_dtype", "float32"),) if opt == "adamw" else ()
+    return TrainConfig(optimizer=opt, opt_kwargs=okw, loss_impl=loss_impl,
+                       loss_block_v=2048,
+                       zero3=arch.arch_id in _ZERO3_ARCHS,
+                       grad_accum=_GRAD_ACCUM.get(arch.arch_id, 1),
+                       accum_dtype=_ACCUM_DTYPE.get(arch.arch_id,
+                                                    "float32"))
+
+
+_DP_RULES = {
+    # pure data parallelism: the "model" mesh axis joins the batch axis;
+    # params/opt fully replicated; the loss runs device-locally (no vocab
+    # sharding).  The right mapping for sub-1B models (EXPERIMENTS H1.4).
+    "batch": ("data", "model"), "group": ("data", "model"),
+    "seq": None, "embed": None, "heads": None, "kv_heads": None,
+    "ffn": None, "vocab": None, "expert": None, "rnn": None, "tp": None,
+    "capacity": None,
+}
+
+
+def lower_train(arch: Arch, shape_name: str, mesh, *,
+                loss_impl: str = "sharded", donate: bool = True,
+                parallel: str = "tp"):
+    tc = _train_config(arch, loss_impl)
+    if parallel == "dp":
+        # grad_accum must be 1: with batch folded over ALL devices, any
+        # microbatch smaller than the device count leaves shards idle
+        # (measured: internvl2 frac 0.416->0.411 with ga=2)
+        tc = dataclasses.replace(tc, loss_impl="streaming", zero3=False,
+                                 grad_accum=1)
+        rules = AxisRules(mesh=mesh, rules=dict(_DP_RULES))
+    else:
+        rules = AxisRules(mesh=mesh)
+    if tc.zero3:
+        rules = rules.with_zero3()
+    init_fn, step_fn = build_train_step(arch, tc, rules)
+    rng_s = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    state_struct = jax.eval_shape(init_fn, rng_s)
+    zero1 = (("data", "model") if parallel == "dp"
+             else (("data",) if arch.arch_id in _ZERO1_ARCHS else None))
+    st_specs = state_specs(state_struct, rules, zero1_axes=zero1)
+    batch_struct = input_specs(arch, shape_name)
+    b_specs = batch_specs(arch, batch_struct, rules)
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(_named(mesh, st_specs), _named(mesh, b_specs)),
+        out_shardings=(_named(mesh, st_specs), None),
+        donate_argnums=(0,) if donate else ())
+    return jitted.lower(state_struct, batch_struct), state_struct
+
+
+def lower_prefill(arch: Arch, shape_name: str, mesh, *,
+                  kv_quant: bool = False):
+    # big archs 2-D-shard their weights for serving too (params alone
+    # exceed HBM*16 on one pod otherwise); decode all-gathers per layer.
+    rules = AxisRules(mesh=mesh)
+    if arch.arch_id in _ZERO3_ARCHS:
+        rules = rules.with_zero3()
+    s = SHAPES[shape_name]
+    batch_struct = input_specs(arch, shape_name)
+    rng_s = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_struct = jax.eval_shape(
+        lambda r: init_params(arch, r), rng_s)
+    p_specs = state_specs({"params": params_struct, "opt": {},
+                           "step": jnp.zeros((), jnp.int32)},
+                          rules)["params"]
+    b_specs = batch_specs(arch, batch_struct, rules)
+
+    if arch.family == "encdec":
+        # true enc-dec prefill: encoder + cross-KV build + decoder prefill
+        from repro.models import encdec as ED
+
+        def prefill_fn(params, batch):
+            caches = ED.init_caches(params, arch.cfg,
+                                    batch["frontend_embeds"],
+                                    max_len=s.seq_len + 8,
+                                    dtype=jnp.bfloat16, shard=rules.shard)
+            h, _, caches = forward_hidden(arch, params,
+                                          {"tokens": batch["tokens"]},
+                                          caches=caches, shard=rules.shard)
+            return h[:, -1, :], caches
+
+        jitted = jax.jit(prefill_fn, in_shardings=(
+            _named(mesh, p_specs), _named(mesh, b_specs)))
+        return jitted.lower(params_struct, batch_struct), params_struct
+
+    cache_struct = serve_cache_specs(arch, s.global_batch,
+                                     s.seq_len + 8, quantize=kv_quant)
+    c_specs = cache_specs(arch, cache_struct, rules)
+
+    def prefill_fn(params, caches, batch):
+        h, _, caches = forward_hidden(arch, params, batch, caches=caches,
+                                      shard=rules.shard)
+        return h[:, -1, :], caches
+
+    jitted = jax.jit(
+        prefill_fn,
+        in_shardings=(_named(mesh, p_specs), _named(mesh, c_specs),
+                      _named(mesh, b_specs)),
+        donate_argnums=(1,))
+    return jitted.lower(params_struct, cache_struct,
+                        batch_struct), params_struct
+
+
+def lower_decode(arch: Arch, shape_name: str, mesh, *,
+                 kv_quant: bool = False):
+    rules = AxisRules(mesh=mesh)
+    if arch.arch_id in _ZERO3_ARCHS:
+        rules = rules.with_zero3()
+    s = SHAPES[shape_name]
+    batch_struct = input_specs(arch, shape_name)      # {'tokens': (B, 1)}
+    rng_s = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_struct = jax.eval_shape(lambda r: init_params(arch, r), rng_s)
+    p_specs = state_specs({"params": params_struct, "opt": {},
+                           "step": jnp.zeros((), jnp.int32)},
+                          rules)["params"]
+    b_specs = batch_specs(arch, batch_struct, rules)
+    cache_struct = serve_cache_specs(arch, s.global_batch, s.seq_len + 8,
+                                     quantize=kv_quant)
+    c_specs = cache_specs(arch, cache_struct, rules)
+
+    def decode_fn(params, caches, batch, rng):
+        h, _, caches = forward_hidden(arch, params, batch, caches=caches,
+                                      shard=rules.shard)
+        nxt = sample_tokens(h[:, -1, :], params["lm_head"], rng,
+                            temperature=0.0,
+                            valid_vocab=arch.vocab_size)
+        return nxt, caches
+
+    jitted = jax.jit(
+        decode_fn,
+        in_shardings=(_named(mesh, p_specs), _named(mesh, c_specs),
+                      _named(mesh, b_specs), None),
+        donate_argnums=(1,))
+    return jitted.lower(params_struct, cache_struct, batch_struct,
+                        rng_s), params_struct
+
+
+def _analytic_flops_per_device(arch: Arch, shape_name: str,
+                               params_struct, n_devices: int) -> Dict:
+    """MODEL_FLOPS (6ND / 2ND) + attention estimate, per device."""
+    s = SHAPES[shape_name]
+    n_total = sum(x.size for x in jax.tree.leaves(params_struct))
+    cfg = arch.cfg
+    n_active = n_total
+    if getattr(cfg, "num_experts", 0):
+        # fraction of expert params that are active
+        e, k = cfg.num_experts, cfg.top_k
+        moe = 0
+        for name in ("wi", "wg", "wo"):
+            pass
+        # per-layer expert params
+        dff = cfg.d_ff_expert or cfg.d_ff
+        per_layer = cfg.num_experts * (3 * cfg.d_model * dff)
+        moe = per_layer * cfg.n_layers
+        n_active = n_total - int(moe * (1.0 - k / e))
+    tokens = s.global_batch * (s.seq_len if s.kind != "decode" else 1)
+    mf = RL.model_flops(n_active, tokens, s.kind)
+    # attention term (only attn-bearing archs)
+    attn = 0.0
+    if arch.family in ("transformer", "encdec"):
+        nl = getattr(cfg, "n_layers", None) or (cfg.n_enc_layers
+                                                + cfg.n_dec_layers)
+        seq = s.seq_len if s.kind != "decode" else s.seq_len
+        bt = s.global_batch
+        if s.kind == "decode":
+            # one query against seq keys
+            attn = (2 * 2 * bt * cfg.num_heads *
+                    (cfg.head_dim or cfg.d_model // cfg.num_heads)
+                    * seq * nl)
+        else:
+            attn = RL.attention_flops(
+                nl, cfg.num_heads,
+                cfg.head_dim or cfg.d_model // cfg.num_heads,
+                seq, bt, s.kind)
+    elif arch.family == "griffin":
+        n_attn = sum(1 for k in arch.cfg.pattern if k == "attn") * \
+            (cfg.n_layers // len(cfg.pattern))
+        seq = s.seq_len
+        if s.kind == "decode":
+            attn = (2 * 2 * s.global_batch * cfg.num_heads
+                    * cfg.resolved_head_dim
+                    * min(cfg.window, seq) * n_attn)
+        else:
+            attn = RL.attention_flops(
+                cfg.n_layers, cfg.num_heads, cfg.resolved_head_dim,
+                seq, s.global_batch, s.kind, window=cfg.window,
+                n_attn_layers=n_attn)
+    return {
+        "model_flops": mf,
+        "model_flops_per_device": mf / n_devices,
+        "analytic_flops_per_device": (mf + attn) / n_devices,
+        "n_params": int(n_total),
+        "n_active_params": int(n_active),
+        "tokens_per_step": tokens,
+    }
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             *, loss_impl: str = "sharded",
+             out_dir: Optional[str] = None,
+             variant: str = "", parallel: str = "tp",
+             kv_quant: bool = False) -> Dict[str, Any]:
+    arch = get_arch(arch_id)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"{arch_id}__{shape_name}__{mesh_name}"
+    if variant:
+        cell += f"__{variant}"
+    out_dir = out_dir or RESULTS_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, cell + ".json")
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            return json.load(f)
+
+    rec: Dict[str, Any] = {
+        "cell": cell, "arch": arch_id, "shape": shape_name,
+        "mesh": mesh_name, "variant": variant or "baseline",
+        "loss_impl": loss_impl,
+    }
+    if not arch.supports(shape_name):
+        rec["status"] = "skipped"
+        rec["reason"] = ("long_500k requires sub-quadratic attention; "
+                         "skipped for pure full-attention archs per spec")
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    s = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.time()
+    try:
+        if s.kind == "train":
+            lowered, struct = lower_train(arch, shape_name, mesh,
+                                          loss_impl=loss_impl,
+                                          parallel=parallel)
+            params_struct = struct["params"]
+        elif s.kind == "prefill":
+            lowered, params_struct = lower_prefill(arch, shape_name, mesh,
+                                                   kv_quant=kv_quant)
+        else:
+            lowered, params_struct = lower_decode(arch, shape_name, mesh,
+                                                  kv_quant=kv_quant)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        print(compiled.memory_analysis())   # proves it fits (per device)
+        print(compiled.cost_analysis())     # FLOPs/bytes for §Roofline
+        mem = memory_dict(compiled)
+        cost = cost_dict(compiled)
+        colls = collective_stats(compiled.as_text())
+        ana = _analytic_flops_per_device(arch, shape_name, params_struct,
+                                         n_dev)
+        rl = RL.roofline_from_stats(
+            cost["flops"], cost["bytes_accessed"], colls.total_bytes,
+            model_flops_per_device=ana["model_flops_per_device"],
+            analytic_flops_per_device=ana["analytic_flops_per_device"])
+        rec.update(status="ok", n_devices=n_dev, memory=mem, cost=cost,
+                   collectives=colls.to_dict(), analytic=ana,
+                   roofline=rl.to_dict())
+        rec["hbm_ok"] = mem.get("peak_bytes_per_device", 0) <= RL.HBM_BYTES
+        print(f"[dryrun] {cell}: OK mem/dev="
+              f"{mem.get('peak_bytes_per_device', 0)/2**30:.2f}GiB "
+              f"dominant={rl.dominant} "
+              f"frac={rl.roofline_fraction:.3f} "
+              f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+    except Exception as e:                     # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {cell}: ERROR {rec['error'][:200]}")
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def iter_cells(arch_ids=None, shapes=None, meshes=("single", "multi")):
+    for aid in (arch_ids or ARCH_IDS):
+        for sh in (shapes or SHAPES):
+            for m in meshes:
+                yield aid, sh, m == "multi"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES),
+                    help="shape cell (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--loss-impl", default="sharded",
+                    choices=("sharded", "sharded_sp", "streaming",
+                             "pallas", "canonical"))
+    ap.add_argument("--variant", default="", help="results-file suffix")
+    ap.add_argument("--parallel", default="tp", choices=("tp", "dp"))
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache for decode cells")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    meshes = (("single", "multi") if args.mesh == "both"
+              else (args.mesh,))
+    cells = list(iter_cells([args.arch] if args.arch else None,
+                            [args.shape] if args.shape else None,
+                            meshes))
+    if args.list:
+        for aid, sh, mp in cells:
+            print(aid, sh, "multi" if mp else "single")
+        return
+    ok = err = skip = 0
+    for aid, sh, mp in cells:
+        rec = run_cell(aid, sh, mp, loss_impl=args.loss_impl,
+                       out_dir=args.out, variant=args.variant,
+                       parallel=args.parallel, kv_quant=args.kv_quant)
+        st = rec.get("status")
+        ok += st == "ok"
+        err += st == "error"
+        skip += st == "skipped"
+        jax.clear_caches()
+    print(f"[dryrun] done: {ok} ok, {skip} skipped, {err} errors")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

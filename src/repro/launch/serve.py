@@ -1,0 +1,56 @@
+"""Serving launcher: batched generation with the streaming sampler.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+        --batch 4 --prompt-len 16 --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.models.registry import get_arch, init_params
+from repro.serve import ServeConfig, Engine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch, reduced=args.reduced)
+    params = init_params(arch, jax.random.PRNGKey(args.seed))
+    fe = None
+    if arch.family == "encdec":
+        fe = jax.random.normal(
+            jax.random.PRNGKey(1),
+            (args.batch, 32, arch.cfg.d_model)).astype(
+                jax.numpy.dtype(arch.cfg.compute_dtype))
+    sc = ServeConfig(batch_size=args.batch, max_len=args.max_len,
+                     temperature=args.temperature)
+    eng = Engine(arch, params, sc, frontend_embeds=fe)
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(1, arch.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    t0 = time.perf_counter()
+    out = eng.generate(prompts, args.max_new)
+    dt = time.perf_counter() - t0
+    tps = args.batch * args.max_new / dt
+    print(f"[serve] arch={arch.arch_id} generated {out.shape} in {dt:.2f}s "
+          f"({tps:.1f} tok/s incl. compile)")
+    print("[serve] sample row:", out[0][:16])
+    return out
+
+
+if __name__ == "__main__":
+    main()

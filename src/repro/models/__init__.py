@@ -1,0 +1,1 @@
+"""Model zoo: transformer (dense/MoE), xLSTM, Griffin, enc-dec."""

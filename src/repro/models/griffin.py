@@ -1,0 +1,343 @@
+"""Griffin / RecurrentGemma (arXiv:2402.19427): RG-LRU + local attention.
+
+Residual pattern: repeating (recurrent, recurrent, local-attention) temporal
+blocks — the assignment's "1:2" ratio — each followed by a GeGLU MLP block.
+
+The RG-LRU diagonal linear recurrence
+
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t),
+    a_t = exp(-c · softplus(Λ) · r_t),   r_t, i_t gates
+
+is evaluated with `jax.lax.associative_scan` (log-depth, MXU-free but
+bandwidth-friendly) for training/prefill and a single fused step for decode.
+State is O(d_rnn) per layer — with the window-bounded local-attention ring
+cache this is what makes the 524k-token decode cell run with a constant
+memory footprint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import attention as A
+
+_C = 8.0  # RG-LRU decay sharpness constant (paper §2.4)
+
+
+@dataclasses.dataclass(frozen=True)
+class GriffinConfig:
+    name: str
+    d_model: int
+    n_layers: int                  # temporal blocks total
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_rnn: Optional[int] = None    # defaults to d_model
+    window: int = 2048
+    head_dim: Optional[int] = None
+    rglru_blocks: Optional[int] = None   # default: num_heads
+    conv_width: int = 4
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    pattern: Tuple[str, ...] = ("rec", "rec", "attn")
+    scan_layers: bool = True
+    remat: bool = True
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    chunk_q: int = 512
+    chunk_k: int = 1024
+
+    @property
+    def resolved_d_rnn(self) -> int:
+        return self.d_rnn or self.d_model
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def attn_config(self) -> A.AttnConfig:
+        return A.AttnConfig(
+            d_model=self.d_model, num_heads=self.num_heads,
+            num_kv_heads=self.num_kv_heads, head_dim=self.resolved_head_dim,
+            rope_theta=self.rope_theta, window=self.window,
+            chunk_q=self.chunk_q, chunk_k=self.chunk_k,
+            n_layers_scale=self.n_layers)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def init_rglru(key, d_rnn, dtype=jnp.float32, num_blocks: int = 1):
+    """num_blocks > 1: block-diagonal gate matrices (the real
+    RecurrentGemma uses BlockDiagonalLinear with num_blocks = num_heads).
+    Blocks align with the "model"-sharded d_rnn axis -> the gate matmuls
+    run shard-locally, eliminating the per-layer gate all-gathers
+    (EXPERIMENTS §Perf H3.1)."""
+    ks = jax.random.split(key, 3)
+    # Λ init so that a^c in [0.9, 0.999] (paper appendix)
+    u = jax.random.uniform(ks[0], (d_rnn,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log u / c)
+    nb = num_blocks
+    db = d_rnn // nb
+    shape = (db, db) if nb == 1 else (nb, db, db)
+    return {
+        "lam": lam.astype(jnp.float32),
+        "wa": L.dense_init(ks[1], shape, dtype=dtype),
+        "ba": jnp.zeros((d_rnn,), dtype),
+        "wx": L.dense_init(ks[2], shape, dtype=dtype),
+        "bx": jnp.zeros((d_rnn,), dtype),
+    }
+
+
+def _gate_matmul(x32, w):
+    if w.ndim == 2:
+        return jnp.einsum("btd,de->bte", x32, w.astype(jnp.float32))
+    nb, db = w.shape[0], w.shape[1]
+    b, t, d = x32.shape
+    xb = x32.reshape(b, t, nb, db)
+    out = jnp.einsum("btnd,nde->btne", xb, w.astype(jnp.float32))
+    return out.reshape(b, t, d)
+
+
+def rglru(params, x, h0=None):
+    """x: (B, T, D) -> (y (B, T, D), h_T (B, D))."""
+    b, t, d = x.shape
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(_gate_matmul(x32, params["wa"])
+                       + params["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(_gate_matmul(x32, params["wx"])
+                       + params["bx"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r        # (B,T,D) <= 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1
+    gate = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
+    u = gate * (i * x32)
+    if h0 is not None:
+        # fold the carried state into the first step: u_0 += a_0 * h0
+        u = u.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(e1, e2):
+        a1, u1 = e1
+        a2, u2 = e2
+        return a1 * a2, a2 * u1 + u2
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return h.astype(x.dtype), h[:, -1].astype(jnp.float32)
+
+
+def rglru_step(params, x, h_prev):
+    """Single decode step.  x: (B, 1, D), h_prev: (B, D)."""
+    y, h = rglru(params, x, h0=h_prev)
+    return y, h
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def init_recurrent_block(key, cfg: GriffinConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    d, dr = cfg.d_model, cfg.resolved_d_rnn
+    return {
+        "ln": L.init_rmsnorm(d, dtype),
+        "w_rnn": L.dense_init(ks[0], (d, dr), dtype=dtype),
+        "w_gate": L.dense_init(ks[1], (d, dr), dtype=dtype),
+        "conv": L.init_causal_conv(ks[2], dr, cfg.conv_width, dtype),
+        "rglru": init_rglru(ks[3], dr, dtype,
+                            num_blocks=cfg.rglru_blocks or cfg.num_heads),
+        "w_out": L.dense_init(ks[4], (dr, d),
+                              scale=1.0 / np.sqrt(2 * cfg.n_layers),
+                              dtype=dtype),
+    }
+
+
+def apply_recurrent_block(p, x, cfg: GriffinConfig, state=None, shard=None):
+    xin = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    u = jnp.einsum("btd,de->bte", xin, p["w_rnn"])
+    gate = jnp.einsum("btd,de->bte", xin, p["w_gate"])
+    if shard is not None:
+        u = shard(u, "batch", "seq", "rnn")
+        gate = shard(gate, "batch", "seq", "rnn")
+    conv_state = state["conv"] if state is not None else None
+    uc, conv_state = L.causal_conv(p["conv"], u, conv_state)
+    h_prev = state["h"] if state is not None else None
+    y, h_last = rglru(p["rglru"], uc, h0=h_prev)
+    y = y * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"])
+    new_state = ({"conv": conv_state, "h": h_last}
+                 if state is not None else None)
+    return x + out, new_state
+
+
+def init_temporal_block(key, kind: str, cfg: GriffinConfig, dtype):
+    ks = jax.random.split(key, 3)
+    if kind == "rec":
+        tb = init_recurrent_block(ks[0], cfg, dtype)
+    else:
+        tb = {"ln": L.init_rmsnorm(cfg.d_model, dtype),
+              "attn": A.init_attention(ks[0], cfg.attn_config(), dtype)}
+    return {
+        "temporal": tb,
+        "ln_mlp": L.init_rmsnorm(cfg.d_model, dtype),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, gated=True,
+                          n_layers_scale=cfg.n_layers, dtype=dtype),
+    }
+
+
+def apply_temporal_block(p, x, kind: str, cfg: GriffinConfig, state=None,
+                         shard=None):
+    if kind == "attn":
+        h, new_state = A.attention_layer(
+            p["temporal"]["attn"],
+            L.rmsnorm(p["temporal"]["ln"], x, cfg.norm_eps),
+            cfg.attn_config(), cache=state, shard=shard)
+        x = x + h
+    else:
+        x, new_state = apply_recurrent_block(p["temporal"], x, cfg,
+                                             state=state, shard=shard)
+    y = L.mlp(p["mlp"], L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps))
+    if shard is not None:
+        y = shard(y, "batch", "seq", "embed")
+    return x + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def _layout(cfg: GriffinConfig):
+    """(n_super, remainder_kinds): scan (rec,rec,attn) supers + leftovers."""
+    plen = len(cfg.pattern)
+    n_super = cfg.n_layers // plen
+    rem = tuple(cfg.pattern[:cfg.n_layers - n_super * plen])
+    return n_super, rem
+
+
+def init_params(key, cfg: GriffinConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.param_dtype)
+    k_embed, k_sup, k_rem, k_head = jax.random.split(key, 4)
+    n_super, rem = _layout(cfg)
+
+    def init_super(k):
+        kk = jax.random.split(k, len(cfg.pattern))
+        return {f"b{i}": init_temporal_block(kk[i], kind, cfg, dt)
+                for i, kind in enumerate(cfg.pattern)}
+
+    sup_keys = jax.random.split(k_sup, max(n_super, 1))
+    if cfg.scan_layers:
+        supers = jax.vmap(init_super)(sup_keys[:n_super]) if n_super else None
+    else:
+        supers = [init_super(k) for k in sup_keys[:n_super]]
+    rem_keys = jax.random.split(k_rem, max(len(rem), 1))
+    rem_blocks = [init_temporal_block(rem_keys[i], kind, cfg, dt)
+                  for i, kind in enumerate(rem)]
+    params = {
+        "embed": {"table": L.embed_init(k_embed,
+                                        (cfg.vocab_size, cfg.d_model), dt)},
+        "ln_f": L.init_rmsnorm(cfg.d_model, dt),
+        "lm_head": L.dense_init(k_head, (cfg.vocab_size, cfg.d_model),
+                                dtype=dt),
+    }
+    if supers is not None:
+        params["supers"] = supers
+    for i, bp in enumerate(rem_blocks):
+        params[f"rem{i}"] = bp
+    return params
+
+
+def forward(params, tokens, cfg: GriffinConfig, *, states=None, shard=None,
+            frontend_embeds=None):
+    del frontend_embeds
+    x = L.embed_lookup(params["embed"]["table"], tokens, shard=shard).astype(jnp.dtype(cfg.compute_dtype))
+    if shard is not None:
+        x = shard(x, "batch", "seq", "embed")
+    n_super, rem = _layout(cfg)
+
+    def apply_super(p, x, st):
+        new_st = {} if st is not None else None
+        for i, kind in enumerate(cfg.pattern):
+            s_i = st[f"b{i}"] if st is not None else None
+            x, ns = apply_temporal_block(p[f"b{i}"], x, kind, cfg,
+                                         state=s_i, shard=shard)
+            if st is not None:
+                new_st[f"b{i}"] = ns
+        return x, new_st
+
+    if n_super:
+        supers = params["supers"]
+        if cfg.scan_layers:
+            if states is None:
+                def body(x, p):
+                    if cfg.remat:
+                        fn = jax.checkpoint(
+                            lambda p_, x_: apply_super(p_, x_, None)[0],
+                            prevent_cse=False)
+                        return fn(p, x), None
+                    return apply_super(p, x, None)[0], None
+                x, _ = jax.lax.scan(body, x, supers)
+                new_super_states = None
+            else:
+                def body(x, ps):
+                    p, st = ps
+                    x, nst = apply_super(p, x, st)
+                    return x, nst
+                x, new_super_states = jax.lax.scan(
+                    body, x, (supers, states["supers"]))
+        else:
+            new_super_states = [] if states is not None else None
+            for i, p in enumerate(supers):
+                st = states["supers"][i] if states is not None else None
+                x, nst = apply_super(p, x, st)
+                if states is not None:
+                    new_super_states.append(nst)
+    else:
+        new_super_states = None
+
+    new_states = {"supers": new_super_states} if states is not None else None
+    for i, kind in enumerate(rem):
+        st = states[f"rem{i}"] if states is not None else None
+        x, ns = apply_temporal_block(params[f"rem{i}"], x, kind, cfg,
+                                     state=st, shard=shard)
+        if states is not None:
+            new_states[f"rem{i}"] = ns
+
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32), new_states
+
+
+def init_states(cfg: GriffinConfig, batch: int, dtype=jnp.bfloat16):
+    """Decode state: RG-LRU h + conv tail per rec block; ring KV per attn."""
+    dr = cfg.resolved_d_rnn
+    cw = cfg.conv_width - 1
+
+    def block_state(kind):
+        if kind == "rec":
+            return {"conv": jnp.zeros((batch, cw, dr), dtype),
+                    "h": jnp.zeros((batch, dr), jnp.float32)}
+        return A.init_local_cache(batch, cfg.window, cfg.attn_config(),
+                                  dtype)
+
+    n_super, rem = _layout(cfg)
+    one = {f"b{i}": block_state(kind) for i, kind in enumerate(cfg.pattern)}
+    if cfg.scan_layers and n_super:
+        supers = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None],
+                                       (n_super,) + a.shape).copy(), one)
+    else:
+        supers = [{f"b{i}": block_state(k) for i, k in enumerate(cfg.pattern)}
+                  for _ in range(n_super)]
+    st = {"supers": supers}
+    for i, kind in enumerate(rem):
+        st[f"rem{i}"] = block_state(kind)
+    return st

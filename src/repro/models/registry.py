@@ -1,0 +1,132 @@
+"""Unified model API over the four families + the --arch registry.
+
+Every family exposes:  init_params / forward(hidden) / serve caches.
+The registry pads the lm_head to `arch.padded_vocab` rows (so the vocab
+axis divides the mesh and the fused-CE BlockSpecs evenly); the pad columns
+are masked to -inf inside every loss implementation via
+`arch.loss_config().valid_vocab`.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Arch, SHAPES, input_specs
+
+_CONFIG_MODULES = {
+    "arctic-480b": "repro.configs.arctic_480b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b",
+    "qwen1.5-32b": "repro.configs.qwen15_32b",
+    "qwen3-0.6b": "repro.configs.qwen3_0_6b",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+    "internvl2-1b": "repro.configs.internvl2_1b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "paper-lm": "repro.configs.paper_lm",
+}
+
+ARCH_IDS = tuple(k for k in _CONFIG_MODULES if k != "paper-lm")
+
+
+def get_arch(arch_id: str, *, reduced: bool = False, **overrides) -> Arch:
+    if arch_id not in _CONFIG_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: "
+                       f"{sorted(_CONFIG_MODULES)}")
+    mod = importlib.import_module(_CONFIG_MODULES[arch_id])
+    return mod.reduced() if reduced else mod.get_config(**overrides)
+
+
+def _family_mod(arch: Arch):
+    return importlib.import_module(f"repro.models.{arch.family}")
+
+
+def init_params(arch: Arch, rng: jax.Array):
+    mod = _family_mod(arch)
+    params = mod.init_params(rng, arch.cfg)
+    pad = arch.padded_vocab - arch.vocab_size
+    if pad:
+        params["lm_head"] = jnp.pad(params["lm_head"], ((0, pad), (0, 0)))
+    return params
+
+
+def forward_hidden(
+    arch: Arch, params, batch: Dict[str, Any], *,
+    caches=None, shard=None,
+) -> Tuple[jax.Array, jax.Array, Any]:
+    """(hidden aligned with batch['targets'], aux_loss, new_caches)."""
+    mod = _family_mod(arch)
+    kwargs = dict(shard=shard)
+    fe = batch.get("frontend_embeds")
+    if arch.family == "transformer":
+        h, aux, c = mod.forward(params, batch["tokens"], arch.cfg,
+                                frontend_embeds=fe, caches=caches, **kwargs)
+    elif arch.family == "encdec":
+        h, aux, c = mod.forward(params, batch["tokens"], arch.cfg,
+                                frontend_embeds=fe, caches=caches, **kwargs)
+    else:  # xlstm / griffin
+        h, aux, c = mod.forward(params, batch["tokens"], arch.cfg,
+                                states=caches, **kwargs)
+    return h, aux, c
+
+
+def init_serve_caches(arch: Arch, params, batch_size: int, max_len: int,
+                      *, frontend_embeds=None, dtype=jnp.bfloat16,
+                      shard=None, quantize: bool = False):
+    mod = _family_mod(arch)
+    if arch.family == "transformer":
+        return mod.init_caches(arch.cfg, batch_size, max_len, dtype,
+                               quantize=quantize)
+    if arch.family == "encdec":
+        return mod.init_caches(params, arch.cfg, frontend_embeds, max_len,
+                               dtype, shard=shard)
+    if arch.family == "xlstm":
+        return mod.init_states(arch.cfg, batch_size)
+    return mod.init_states(arch.cfg, batch_size, dtype)   # griffin
+
+
+def serve_cache_specs(arch: Arch, batch_size: int, max_len: int,
+                      dtype=jnp.bfloat16, quantize: bool = False):
+    """ShapeDtypeStruct tree of the decode-step cache (dry-run input)."""
+    from repro.configs.base import ENCDEC_SERVE_ENC_LEN
+
+    def build():
+        if arch.family == "encdec":
+            d = arch.cfg.d_model
+            fe = jnp.zeros((batch_size, ENCDEC_SERVE_ENC_LEN, d),
+                           jnp.dtype(arch.cfg.compute_dtype))
+            params = init_params(arch, jax.random.PRNGKey(0))
+            return init_serve_caches(arch, params, batch_size, max_len,
+                                     frontend_embeds=fe, dtype=dtype)
+        return init_serve_caches(arch, None, batch_size, max_len,
+                                 dtype=dtype,
+                                 quantize=quantize and
+                                 arch.family == "transformer")
+
+    return jax.eval_shape(build)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def active_param_count(arch: Arch, params) -> int:
+    """Active params per token (MoE: top_k of num_experts experts)."""
+    total = param_count(params)
+    cfg = arch.cfg
+    if getattr(cfg, "num_experts", 0):
+        moe_total = 0
+        blocks = params["blocks"]
+        for name in ("wi", "wg", "wo"):
+            leaf = blocks.get("moe", {}).get(name) if isinstance(
+                blocks, dict) else None
+            if leaf is not None:
+                moe_total += leaf.size
+        active_frac = cfg.top_k / cfg.num_experts
+        return int(total - moe_total * (1.0 - active_frac))
+    return total

@@ -1,0 +1,437 @@
+"""xLSTM (arXiv:2405.04517): alternating mLSTM / sLSTM blocks.
+
+mLSTM — matrix-memory LSTM with exponential input gate.  Training uses the
+*chunkwise-parallel* form (sequential scan over chunks carrying the
+(C, n, m) state; quadratic attention-like compute within a chunk), which is
+the TPU-friendly adaptation of the paper's fused CUDA kernels: MXU matmuls
+inside chunks, O(T/L) sequential steps, O(L^2 + d^2) transient memory.
+A step-by-step sequential reference (`mlstm_sequential`) is kept as the
+test oracle.
+
+sLSTM — scalar-memory LSTM with exponential gating and block-diagonal
+(per-head) recurrence on h; inherently sequential -> lax.scan over time.
+
+Both use the log-space max-stabilizer m_t (same safe-exponential trick as
+the paper's fused CE loss).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    name: str
+    d_model: int
+    n_layers: int               # total blocks; alternating sLSTM, mLSTM
+    num_heads: int
+    vocab_size: int
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 4.0 / 3.0
+    conv_width: int = 4
+    chunk: int = 128            # mLSTM chunk length
+    norm_eps: float = 1e-6
+    scan_layers: bool = True
+    remat: bool = True
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    @property
+    def d_inner_m(self) -> int:
+        return int(self.d_model * self.mlstm_proj_factor)
+
+    @property
+    def d_inner_s(self) -> int:
+        d = int(self.d_model * self.slstm_proj_factor)
+        return -(-d // 8) * 8
+
+    @property
+    def head_dim_m(self) -> int:
+        return self.d_inner_m // self.num_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+# ---------------------------------------------------------------------------
+
+
+def mlstm_sequential(q, k, v, igate, fgate, state=None):
+    """Step-by-step mLSTM (oracle + decode path).
+
+    q,k,v: (B, T, H, D); igate/fgate: (B, T, H) pre-activations.
+    state: optional (C (B,H,D,D), n (B,H,D), m (B,H)).
+    Returns (h (B,T,H,D), state').
+    """
+    b, t, h, d = q.shape
+    scale = 1.0 / np.sqrt(d)
+    if state is None:
+        state = (jnp.zeros((b, h, d, d), jnp.float32),
+                 jnp.zeros((b, h, d), jnp.float32),
+                 jnp.full((b, h), -jnp.inf, jnp.float32))
+
+    def step(carry, xs):
+        c_, n_, m_ = carry
+        qt, kt, vt, it, ft = xs              # (B,H,D), (B,H)
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m_, it)
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        f_ = jnp.exp(lf + m_ - m_safe)
+        i_ = jnp.exp(it - m_safe)
+        c_ = f_[..., None, None] * c_ + i_[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n_ = f_[..., None] * n_ + i_[..., None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt * scale, c_)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", qt * scale, n_)),
+            jnp.exp(-m_safe))
+        ht = num / den[..., None]
+        return (c_, n_, m_new), ht
+
+    xs = (jnp.moveaxis(q, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(igate, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(fgate, 1, 0).astype(jnp.float32))
+    state, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+def mlstm_chunkwise(q, k, v, igate, fgate, chunk: int, state=None):
+    """Chunkwise-parallel mLSTM (TPU-friendly training form).
+
+    Same semantics as `mlstm_sequential` (verified in tests).
+    """
+    b, t, h, d = q.shape
+    lc = min(chunk, t)
+    pad = (-t) % lc
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, z4), jnp.pad(k, z4), jnp.pad(v, z4)
+        igate = jnp.pad(igate, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)   # pad steps: no input
+        fgate = jnp.pad(fgate, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=30.0)    # keep state
+    tp = q.shape[1]
+    nc = tp // lc
+    scale = 1.0 / np.sqrt(d)
+
+    def split(x):
+        return jnp.moveaxis(x.reshape(b, nc, lc, *x.shape[2:]), 1, 0)
+
+    qs, ks, vs = split(q), split(k), split(v)
+    is_, fs = split(igate), split(fgate)
+
+    if state is None:
+        state = (jnp.zeros((b, h, d, d), jnp.float32),
+                 jnp.zeros((b, h, d), jnp.float32),
+                 jnp.full((b, h), -jnp.inf, jnp.float32))
+
+    tri = jnp.tril(jnp.ones((lc, lc), bool))
+
+    def chunk_step(carry, xs):
+        c0, n0, m0 = carry
+        qc, kc, vc, ic, fc = [a.astype(jnp.float32) for a in xs]
+        qc = qc * scale                             # (B,lc,H,D)
+        lf = jax.nn.log_sigmoid(fc)                 # (B,lc,H)
+        bcum = jnp.cumsum(lf, axis=1)               # b_t
+        btot = bcum[:, -1:]                         # B (sum of lf)
+        # stabilizers
+        li_b = ic - bcum                            # li_s - b_s
+        m_loc = jax.lax.cummax(li_b, axis=1) + bcum  # intra stabilizer
+        m0e = m0[:, None]                           # (B,1,H)
+        m_t = jnp.maximum(bcum + m0e, m_loc)        # (B,lc,H)
+        m_safe = jnp.where(jnp.isneginf(m_t), 0.0, m_t)
+        # intra-chunk decay matrix D_ts = exp(b_t - b_s + li_s - m_t), s<=t
+        logD = (bcum[:, :, None] - bcum[:, None, :]
+                + ic[:, None, :] - m_safe[:, :, None])   # (B,t,s,H)
+        logD = jnp.where(tri[None, :, :, None], logD, -jnp.inf)
+        dmat = jnp.exp(logD)
+        s_qk = jnp.einsum("bthd,bshd->btsh", qc, kc)
+        s_w = s_qk * dmat
+        num_intra = jnp.einsum("btsh,bshd->bthd", s_w, vc)
+        den_intra = jnp.sum(s_w, axis=2)                  # (B,t,H)
+        # inter-chunk: state contribution scaled by exp(b_t + m0 - m_t)
+        inter_scale = jnp.exp(bcum + m0e - m_safe)        # (B,t,H)
+        num_inter = jnp.einsum("bthd,bhde->bthe", qc, c0) * \
+            inter_scale[..., None]
+        den_inter = jnp.einsum("bthd,bhd->bth", qc, n0) * inter_scale
+        num = num_intra + num_inter
+        den = jnp.maximum(jnp.abs(den_intra + den_inter),
+                          jnp.exp(-m_safe))
+        hc = num / den[..., None]
+        # ---- state update at chunk end ----
+        g_s = btot - bcum                                  # B - b_s
+        m_new = jnp.maximum(btot[:, 0] + m0,
+                            jnp.max(ic + g_s, axis=1))     # (B,H)
+        m_ns = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        w_s = jnp.exp(ic + g_s - m_ns[:, None])            # (B,lc,H)
+        carry_scale = jnp.exp(btot[:, 0] + m0 - m_ns)
+        c1 = carry_scale[..., None, None] * c0 + jnp.einsum(
+            "bshd,bshe,bsh->bhde", kc, vc, w_s)
+        n1 = carry_scale[..., None] * n0 + jnp.einsum(
+            "bshd,bsh->bhd", kc, w_s)
+        return (c1, n1, m_new), hc
+
+    state, hs = jax.lax.scan(chunk_step, state, (qs, ks, vs, is_, fs))
+    hout = jnp.moveaxis(hs, 0, 1).reshape(b, tp, h, d)[:, :t]
+    return hout, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell
+# ---------------------------------------------------------------------------
+
+
+def slstm_sequential(xi, xf, xz, xo, r_params, state=None):
+    """sLSTM with per-head recurrent matrices.
+
+    xi/xf/xz/xo: (B, T, H, D) input pre-activations; r_params: dict with
+    'ri','rf','rz','ro' each (H, D, D).  state: (h, c, n, m) each (B,H,D).
+    """
+    b, t, h, d = xi.shape
+    if state is None:
+        z = jnp.zeros((b, h, d), jnp.float32)
+        state = (z, z, z, jnp.full((b, h, d), -jnp.inf, jnp.float32))
+
+    ri, rf = r_params["ri"], r_params["rf"]
+    rz, ro = r_params["rz"], r_params["ro"]
+
+    def step(carry, xs):
+        h_, c_, n_, m_ = carry
+        xit, xft, xzt, xot = xs
+        rec = lambda r: jnp.einsum("bhd,hde->bhe", h_,
+                                   r.astype(jnp.float32))
+        it = xit.astype(jnp.float32) + rec(ri)
+        ft = xft.astype(jnp.float32) + rec(rf)
+        zt = jnp.tanh(xzt.astype(jnp.float32) + rec(rz))
+        ot = jax.nn.sigmoid(xot.astype(jnp.float32) + rec(ro))
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m_, it)
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        i_ = jnp.exp(it - m_safe)
+        f_ = jnp.exp(lf + m_ - m_safe)
+        c_ = f_ * c_ + i_ * zt
+        n_ = f_ * n_ + i_
+        h_new = ot * c_ / jnp.maximum(n_, 1e-6)
+        return (h_new, c_, n_, m_new), h_new
+
+    # xs stay in the input dtype (bf16 in training): the scan's stacked
+    # inputs dominate sLSTM memory traffic; upcast happens per step
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (xi, xf, xz, xo))
+    state, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm_block(key, cfg: XLSTMConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    d, di, nh = cfg.d_model, cfg.d_inner_m, cfg.num_heads
+    return {
+        "ln": L.init_rmsnorm(d, dtype),
+        "w_up": L.dense_init(ks[0], (d, 2 * di), dtype=dtype),
+        "conv": L.init_causal_conv(ks[1], di, cfg.conv_width, dtype),
+        "wq": L.dense_init(ks[2], (di, di), dtype=dtype),
+        "wk": L.dense_init(ks[3], (di, di), dtype=dtype),
+        "wv": L.dense_init(ks[4], (di, di), dtype=dtype),
+        "w_gates": L.dense_init(ks[5], (di, 2 * nh), dtype=dtype),
+        "gn": L.init_rmsnorm(cfg.head_dim_m, dtype),
+        "w_down": L.dense_init(ks[6], (di, d),
+                               scale=1.0 / np.sqrt(2 * cfg.n_layers),
+                               dtype=dtype),
+    }
+
+
+def apply_mlstm_block(p, x, cfg: XLSTMConfig, state=None):
+    """state: None (train) or dict {'conv', 'cell'} for decode."""
+    b, t, d = x.shape
+    nh, hd = cfg.num_heads, cfg.head_dim_m
+    xin = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    up = jnp.einsum("btd,de->bte", xin, p["w_up"])
+    u, z = jnp.split(up, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    uc, conv_state = L.causal_conv(p["conv"], u, conv_state)
+    uc = jax.nn.silu(uc.astype(jnp.float32)).astype(x.dtype)
+    q = jnp.einsum("bte,ef->btf", uc, p["wq"]).reshape(b, t, nh, hd)
+    k = jnp.einsum("bte,ef->btf", uc, p["wk"]).reshape(b, t, nh, hd)
+    v = jnp.einsum("bte,ef->btf", u, p["wv"]).reshape(b, t, nh, hd)
+    gates = jnp.einsum("bte,eg->btg", uc, p["w_gates"]).astype(jnp.float32)
+    igate, fgate = gates[..., :nh], gates[..., nh:] + 3.0   # forget bias
+    cell_state = state["cell"] if state is not None else None
+    if state is not None and t <= 4:
+        h, cell_state = mlstm_sequential(q, k, v, igate, fgate, cell_state)
+    else:
+        h, cell_state = mlstm_chunkwise(q, k, v, igate, fgate, cfg.chunk,
+                                        cell_state)
+    h = L.rmsnorm(p["gn"], h.astype(x.dtype), cfg.norm_eps)  # per-head norm
+    h = h.reshape(b, t, nh * hd)
+    out = jnp.einsum("bte,ed->btd", h * jax.nn.silu(
+        z.astype(jnp.float32)).astype(x.dtype), p["w_down"])
+    new_state = ({"conv": conv_state, "cell": cell_state}
+                 if state is not None else None)
+    return x + out, new_state
+
+
+def init_slstm_block(key, cfg: XLSTMConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    d, nh = cfg.d_model, cfg.num_heads
+    hd = d // nh
+    dff = cfg.d_inner_s
+    return {
+        "ln": L.init_rmsnorm(d, dtype),
+        "conv": L.init_causal_conv(ks[0], d, cfg.conv_width, dtype),
+        "w_ifzo": L.dense_init(ks[1], (d, 4 * d), dtype=dtype),
+        "ri": L.dense_init(ks[2], (nh, hd, hd), dtype=dtype),
+        "rf": L.dense_init(ks[3], (nh, hd, hd), dtype=dtype),
+        "rz": L.dense_init(ks[4], (nh, hd, hd), dtype=dtype),
+        "ro": L.dense_init(ks[5], (nh, hd, hd), dtype=dtype),
+        "gn": L.init_rmsnorm(hd, dtype),
+        "mlp": L.init_mlp(ks[6], d, dff, gated=True,
+                          n_layers_scale=cfg.n_layers, dtype=dtype),
+        "ln_mlp": L.init_rmsnorm(d, dtype),
+    }
+
+
+def apply_slstm_block(p, x, cfg: XLSTMConfig, state=None):
+    b, t, d = x.shape
+    nh = cfg.num_heads
+    hd = d // nh
+    xin = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    conv_state = state["conv"] if state is not None else None
+    xc, conv_state = L.causal_conv(p["conv"], xin, conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    pre = jnp.einsum("btd,dg->btg", xc, p["w_ifzo"])
+    xi, xf, xz, xo = [a.reshape(b, t, nh, hd)
+                      for a in jnp.split(pre, 4, axis=-1)]
+    cell_state = state["cell"] if state is not None else None
+    h, cell_state = slstm_sequential(
+        xi, xf + 3.0, xz, xo,
+        {"ri": p["ri"], "rf": p["rf"], "rz": p["rz"], "ro": p["ro"]},
+        cell_state)
+    h = L.rmsnorm(p["gn"], h.astype(x.dtype), cfg.norm_eps)
+    x = x + h.reshape(b, t, d)
+    xm = L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
+    x = x + L.mlp(p["mlp"], xm)
+    new_state = ({"conv": conv_state, "cell": cell_state}
+                 if state is not None else None)
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# full model: embedding -> [sLSTM, mLSTM] * (L/2) -> norm
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: XLSTMConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.param_dtype)
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    n_pairs = cfg.n_layers // 2
+    pair_keys = jax.random.split(k_blocks, n_pairs)
+
+    def init_pair(k):
+        k1, k2 = jax.random.split(k)
+        return {"slstm": init_slstm_block(k1, cfg, dt),
+                "mlstm": init_mlstm_block(k2, cfg, dt)}
+
+    if cfg.scan_layers:
+        pairs = jax.vmap(init_pair)(pair_keys)
+    else:
+        pairs = [init_pair(k) for k in pair_keys]
+    return {
+        "embed": {"table": L.embed_init(k_embed,
+                                        (cfg.vocab_size, cfg.d_model), dt)},
+        "pairs": pairs,
+        "ln_f": L.init_rmsnorm(cfg.d_model, dt),
+        "lm_head": L.dense_init(k_head, (cfg.vocab_size, cfg.d_model),
+                                dtype=dt),
+    }
+
+
+def forward(params, tokens, cfg: XLSTMConfig, *, states=None, shard=None,
+            frontend_embeds=None):
+    del frontend_embeds
+    x = L.embed_lookup(params["embed"]["table"], tokens, shard=shard).astype(jnp.dtype(cfg.compute_dtype))
+    if shard is not None:
+        x = shard(x, "batch", "seq", "embed")
+
+    def pair_fn(p, x, st):
+        s_st = st["slstm"] if st is not None else None
+        m_st = st["mlstm"] if st is not None else None
+        if cfg.remat and st is None:
+            fn = jax.checkpoint(
+                lambda p_, x_: apply_mlstm_block(
+                    p_["mlstm"],
+                    apply_slstm_block(p_["slstm"], x_, cfg)[0], cfg)[0],
+                prevent_cse=False)
+            return fn(p, x), None
+        x, s_st = apply_slstm_block(p["slstm"], x, cfg, s_st)
+        x, m_st = apply_mlstm_block(p["mlstm"], x, cfg, m_st)
+        return x, {"slstm": s_st, "mlstm": m_st}
+
+    if cfg.scan_layers:
+        if states is None:
+            def body(x, p):
+                x, _ = pair_fn(p, x, None)
+                return x, None
+            x, _ = jax.lax.scan(body, x, params["pairs"])
+            new_states = None
+        else:
+            def body(x, ps):
+                p, st = ps
+                x, st = pair_fn(p, x, st)
+                return x, st
+            x, new_states = jax.lax.scan(body, x, (params["pairs"], states))
+    else:
+        new_states = [] if states is not None else None
+        for i, p in enumerate(params["pairs"]):
+            st = states[i] if states is not None else None
+            x, st = pair_fn(p, x, st)
+            if states is not None:
+                new_states.append(st)
+
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32), new_states
+
+
+def init_states(cfg: XLSTMConfig, batch: int, dtype=jnp.float32):
+    """Recurrent state pytree for decode (constant size in T)."""
+    nh, hdm = cfg.num_heads, cfg.head_dim_m
+    d, di = cfg.d_model, cfg.d_inner_m
+    hds = d // nh
+    cw = cfg.conv_width - 1
+
+    def one_pair():
+        return {
+            "slstm": {
+                "conv": jnp.zeros((batch, cw, d), dtype),
+                "cell": (jnp.zeros((batch, nh, hds), jnp.float32),
+                         jnp.zeros((batch, nh, hds), jnp.float32),
+                         jnp.zeros((batch, nh, hds), jnp.float32),
+                         jnp.full((batch, nh, hds), -jnp.inf, jnp.float32)),
+            },
+            "mlstm": {
+                "conv": jnp.zeros((batch, cw, di), dtype),
+                "cell": (jnp.zeros((batch, nh, hdm, hdm), jnp.float32),
+                         jnp.zeros((batch, nh, hdm), jnp.float32),
+                         jnp.full((batch, nh), -jnp.inf, jnp.float32)),
+            },
+        }
+
+    one = one_pair()
+    n_pairs = cfg.n_layers // 2
+    if cfg.scan_layers:
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None],
+                                       (n_pairs,) + a.shape).copy(), one)
+    return [one_pair() for _ in range(n_pairs)]

@@ -1,0 +1,30 @@
+"""Optimizers + schedules (framework-free, pytree-based)."""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.optim import adamw, adafactor, schedules
+from repro.optim.clipping import clip_by_global_norm, global_norm
+from repro.optim.adamw import AdamWConfig
+from repro.optim.adafactor import AdafactorConfig
+
+__all__ = [
+    "adamw", "adafactor", "schedules",
+    "AdamWConfig", "AdafactorConfig",
+    "clip_by_global_norm", "global_norm",
+    "make_optimizer",
+]
+
+
+def make_optimizer(kind: str, **kw):
+    """Returns (init_fn(params), update_fn(grads, state, params, lr))."""
+    if kind == "adamw":
+        cfg = AdamWConfig(**kw)
+        return (lambda p: adamw.init(p, cfg),
+                lambda g, s, p, lr: adamw.update(g, s, p, lr, cfg))
+    if kind == "adafactor":
+        cfg = AdafactorConfig(**kw)
+        return (lambda p: adafactor.init(p, cfg),
+                lambda g, s, p, lr: adafactor.update(g, s, p, lr, cfg))
+    raise ValueError(f"unknown optimizer {kind!r}")

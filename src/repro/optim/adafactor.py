@@ -1,0 +1,137 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moments.
+
+For a (n, m) matrix the second-moment estimate is stored as a row vector
+(n,) + column vector (m,) instead of (n, m) — O(n+m) optimizer state.
+This is what lets the >=100B assigned archs (arctic-480b,
+mistral-large-123b, qwen3-moe-235b) train within v5e HBM budgets
+(see EXPERIMENTS.md §Dry-run memory table).
+
+Higher-rank params are factored over their two largest dims; 1-D params
+fall back to unfactored.  Update clipping (d=1.0) and decay
+beta2_t = 1 - t^-0.8 follow the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    min_dim_size_to_factor: int = 128
+    decay_rate: float = 0.8
+    clip_threshold: float = 1.0
+    eps: float = 1e-30
+    weight_decay: float = 0.0
+    momentum: Optional[float] = None      # optional bf16 first moment
+    momentum_dtype: str = "bfloat16"
+    # update stacked (layer-scanned) params one layer at a time: bounds the
+    # f32 temporaries to 1/L of the leaf (a 156B-param stacked MoE leaf
+    # otherwise holds ~10 full-size f32 temps at peak — see EXPERIMENTS).
+    # NOTE: update clipping then applies at per-layer granularity — the
+    # semantics an unstacked per-layer parameter list would have.
+    scan_stacked: bool = True
+    scan_min_leading: int = 8
+
+
+def _factored_dims(shape, cfg):
+    if len(shape) < 2:
+        return None
+    # factor the two largest dims
+    dims = sorted(range(len(shape)), key=lambda i: shape[i])[-2:]
+    d_row, d_col = sorted(dims)
+    if shape[d_row] < cfg.min_dim_size_to_factor or \
+       shape[d_col] < cfg.min_dim_size_to_factor:
+        return None
+    return d_row, d_col
+
+
+def init(params, cfg: AdafactorConfig):
+    def leaf(p):
+        fd = _factored_dims(p.shape, cfg)
+        if fd is not None:
+            r, c = fd
+            row_shape = tuple(s for i, s in enumerate(p.shape) if i != c)
+            col_shape = tuple(s for i, s in enumerate(p.shape) if i != r)
+            st = {"vr": jnp.zeros(row_shape, jnp.float32),
+                  "vc": jnp.zeros(col_shape, jnp.float32)}
+        else:
+            st = {"v": jnp.zeros(p.shape, jnp.float32)}
+        if cfg.momentum is not None:
+            st["m"] = jnp.zeros(p.shape, jnp.dtype(cfg.momentum_dtype))
+        return st
+
+    return {
+        "slots": jax.tree.map(leaf, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+def update(grads, state, params, lr, cfg: AdafactorConfig):
+    count = state["count"] + 1
+    t = count.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay_rate)
+
+    def upd(g, slot, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + cfg.eps
+        fd = _factored_dims(p.shape, cfg)
+        if fd is not None:
+            r, c = fd
+            vr = beta2 * slot["vr"] + (1 - beta2) * jnp.mean(g2, axis=c)
+            vc = beta2 * slot["vc"] + (1 - beta2) * jnp.mean(g2, axis=r)
+            # reconstruct: v ~ vr x vc / mean(vr over the row-reduced dim)
+            red = r if r < c else r  # vr has c removed; reduce its dim r
+            denom = jnp.mean(vr, axis=red, keepdims=True)
+            vr_e = jnp.expand_dims(vr, c)
+            vc_e = jnp.expand_dims(vc, r)
+            v = vr_e * vc_e / jnp.maximum(
+                jnp.expand_dims(denom, c), cfg.eps)
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * slot["v"] + (1 - beta2) * g2
+            new_slot = {"v": v}
+        u = g32 * jax.lax.rsqrt(jnp.maximum(v, cfg.eps))
+        u = u / jnp.maximum(1.0, _rms(u) / cfg.clip_threshold)
+        if cfg.momentum is not None:
+            m = (cfg.momentum * slot["m"].astype(jnp.float32)
+                 + (1 - cfg.momentum) * u)
+            new_slot["m"] = m.astype(jnp.dtype(cfg.momentum_dtype))
+            u = m
+        p32 = p.astype(jnp.float32)
+        if cfg.weight_decay:
+            u = u + cfg.weight_decay * p32
+        return (p32 - lr * u).astype(p.dtype), new_slot
+
+    def upd_maybe_scanned(g, slot, p):
+        if (cfg.scan_stacked and p.ndim >= 3
+                and p.shape[0] >= cfg.scan_min_leading
+                and all(x.ndim >= 1 and x.shape[0] == p.shape[0]
+                        for x in jax.tree.leaves(slot))):
+            # factored dims never include the leading (layer) axis when the
+            # trailing dims are larger, so per-layer updates are identical.
+            fd = _factored_dims(p.shape, cfg)
+            if fd is None or 0 not in fd:
+                # the barrier stops XLA hoisting the slice->f32 converts
+                # out of the loop (which materializes full-leaf f32 copies)
+                return jax.lax.map(
+                    lambda t: upd(*jax.lax.optimization_barrier(t)),
+                    (g, slot, p))
+        return upd(g, slot, p)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_slots = treedef.flatten_up_to(state["slots"])
+    flat_p = treedef.flatten_up_to(params)
+    results = [upd_maybe_scanned(g, s, p)
+               for g, s, p in zip(flat_g, flat_slots, flat_p)]
+    new_params = jax.tree.unflatten(treedef, [r[0] for r in results])
+    new_slots = jax.tree.unflatten(treedef, [r[1] for r in results])
+    return new_params, {"slots": new_slots, "count": count}

@@ -1,0 +1,82 @@
+"""AdamW with decoupled weight decay (fp32 moments, bf16-param friendly).
+
+Weight decay is masked off 1-D params (norm scales, biases) by default —
+the standard LLM recipe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    mu_dtype: str = "float32"
+    decay_mask: Optional[Callable[[Any], Any]] = None   # pytree -> bool tree
+
+
+def _default_mask(params):
+    return jax.tree.map(lambda p: p.ndim >= 2, params)
+
+
+def init(params, cfg: AdamWConfig):
+    mu_dt = jnp.dtype(cfg.mu_dtype)
+    return {
+        "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, mu_dt), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                           params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def update(grads, state, params, lr, cfg: AdamWConfig):
+    """Returns (new_params, new_state).  lr may be a traced scalar."""
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    b1, b2 = jnp.float32(cfg.b1), jnp.float32(cfg.b2)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+    mask = (cfg.decay_mask or _default_mask)(params)
+    mu_dt = jnp.dtype(cfg.mu_dtype)
+
+    def upd(g, mu, nu, p, decay):
+        g32 = g.astype(jnp.float32)
+        mu = (b1 * mu.astype(jnp.float32) + (1 - b1) * g32)
+        nu = b2 * nu + (1 - b2) * g32 * g32
+        mu_hat = mu / bc1
+        nu_hat = nu / bc2
+        step = mu_hat * jax.lax.rsqrt(nu_hat + cfg.eps * cfg.eps)
+        # (rsqrt(nu+eps^2) ~ 1/(sqrt(nu)+eps) up to 2x at nu=0; stable form)
+        p32 = p.astype(jnp.float32)
+        if cfg.weight_decay:
+            step = step + jnp.where(decay, cfg.weight_decay, 0.0) * p32
+        p_new = p32 - lr * step
+        return p_new.astype(p.dtype), mu.astype(mu_dt), nu
+
+    def upd_maybe_scanned(g, mu, nu, p, decay):
+        # layer-stacked leaves update one layer slice at a time: bounds the
+        # f32 temporaries to 1/L of the leaf (elementwise -> identical)
+        if p.ndim >= 3 and p.shape[0] >= 8 and mu.shape == p.shape:
+            # barrier: stop XLA hoisting slice->f32 converts out of the loop
+            return jax.lax.map(
+                lambda t: upd(*jax.lax.optimization_barrier(t), decay),
+                (g, mu, nu, p))
+        return upd(g, mu, nu, p, decay)
+
+    out = jax.tree.map(upd_maybe_scanned, grads, state["mu"], state["nu"],
+                       params, mask)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}

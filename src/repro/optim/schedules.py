@@ -1,0 +1,44 @@
+"""Learning-rate schedules (pure functions of the int step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(
+            total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+    return fn
+
+
+def warmup_linear(peak_lr: float, warmup_steps: int, total_steps: int):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        lin = peak_lr * jnp.clip(1.0 - t, 0.0, 1.0)
+        return jnp.where(step < warmup_steps, warm, lin)
+    return fn
+
+
+def warmup_rsqrt(peak_lr: float, warmup_steps: int):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        rs = peak_lr * jnp.sqrt(warmup_steps / jnp.maximum(step, 1.0))
+        return jnp.where(step < warmup_steps, warm, rs)
+    return fn
+
+
+def constant(lr: float):
+    def fn(step):
+        del step
+        return jnp.float32(lr)
+    return fn

@@ -1,0 +1,5 @@
+from repro.serve.engine import ServeConfig, Engine, BatchScheduler, build_serve_fns
+from repro.serve.sampler import streaming_topk, sample_tokens
+
+__all__ = ["ServeConfig", "Engine", "BatchScheduler", "build_serve_fns",
+           "streaming_topk", "sample_tokens"]

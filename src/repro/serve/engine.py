@@ -1,0 +1,141 @@
+"""Batched serving engine: prefill + decode steps over the model registry.
+
+`build_serve_fns(arch)` returns jit-ready `prefill` and `decode_step`
+functions with the cache pytree threaded functionally; `Engine` wraps them
+with a host-side generation loop and a simple waiting-room batcher
+(requests are grouped to the fixed engine batch; finished rows are
+replaced from the queue — a minimal continuous-batching scheduler).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import Arch
+from repro.models.registry import forward_hidden, init_serve_caches
+from repro.serve.sampler import sample_tokens
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_size: int = 8
+    max_len: int = 1024
+    temperature: float = 0.0
+    top_k: int = 40
+    sample_block_v: int = 8192
+    cache_dtype: str = "bfloat16"
+    quantize_cache: bool = False   # int8 KV (transformer family)
+
+
+def build_serve_fns(arch: Arch, sc: ServeConfig, shard=None):
+    valid = arch.vocab_size
+
+    def prefill(params, caches, batch):
+        h, _, caches = forward_hidden(arch, params, batch, caches=caches,
+                                      shard=shard)
+        return h[:, -1, :], caches
+
+    def decode_step(params, caches, tokens, rng):
+        h, _, caches = forward_hidden(arch, params, {"tokens": tokens},
+                                      caches=caches, shard=shard)
+        next_tok = sample_tokens(
+            h[:, -1, :], params["lm_head"], rng,
+            temperature=sc.temperature, top_k=sc.top_k,
+            block_v=sc.sample_block_v, valid_vocab=valid)
+        return next_tok, caches
+
+    return prefill, decode_step
+
+
+class Engine:
+    """Host-side batched generation with a waiting-room scheduler."""
+
+    def __init__(self, arch: Arch, params, sc: ServeConfig,
+                 frontend_embeds=None, jit: bool = True):
+        self.arch = arch
+        self.params = params
+        self.sc = sc
+        self.frontend_embeds = frontend_embeds
+        prefill, decode = build_serve_fns(arch, sc)
+        self._prefill = jax.jit(prefill) if jit else prefill
+        self._decode = jax.jit(decode) if jit else decode
+
+    def _fresh_caches(self):
+        return init_serve_caches(
+            self.arch, self.params, self.sc.batch_size, self.sc.max_len,
+            frontend_embeds=self.frontend_embeds,
+            dtype=jnp.dtype(self.sc.cache_dtype),
+            quantize=(self.sc.quantize_cache
+                      and self.arch.family == "transformer"))
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 eos_id: Optional[int] = None, seed: int = 0
+                 ) -> np.ndarray:
+        """prompts: (B, T_prompt) int32 (B == engine batch).  Returns
+        (B, max_new_tokens) generated ids (post-eos positions repeat eos).
+        """
+        b, _ = prompts.shape
+        assert b == self.sc.batch_size
+        caches = self._fresh_caches()
+        batch = {"tokens": jnp.asarray(prompts)}
+        if self.frontend_embeds is not None:
+            batch["frontend_embeds"] = self.frontend_embeds
+        h_last, caches = self._prefill(self.params, caches, batch)
+        del h_last
+        rng = jax.random.PRNGKey(seed)
+        cur = jnp.asarray(prompts[:, -1:])
+        outs = []
+        done = np.zeros(b, bool)
+        for i in range(max_new_tokens):
+            rng, sub = jax.random.split(rng)
+            nxt, caches = self._decode(self.params, caches, cur, sub)
+            toks = np.asarray(jax.device_get(nxt))
+            if eos_id is not None:
+                toks = np.where(done, eos_id, toks)
+                done |= (toks == eos_id)
+            outs.append(toks)
+            cur = jnp.asarray(toks[:, None])
+            if eos_id is not None and done.all():
+                outs.extend([np.full(b, eos_id, toks.dtype)]
+                            * (max_new_tokens - i - 1))
+                break
+        return np.stack(outs, axis=1)
+
+
+class BatchScheduler:
+    """Minimal waiting-room batcher for the serving example."""
+
+    def __init__(self, engine: Engine, max_new_tokens: int = 32,
+                 eos_id: Optional[int] = None):
+        self.engine = engine
+        self.max_new = max_new_tokens
+        self.eos_id = eos_id
+        self.queue: List[Tuple[int, np.ndarray]] = []
+        self._next_id = 0
+
+    def submit(self, prompt: np.ndarray) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append((rid, prompt))
+        return rid
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drain the queue in engine-batch groups (prompts padded left)."""
+        results: Dict[int, np.ndarray] = {}
+        bs = self.engine.sc.batch_size
+        while self.queue:
+            group = self.queue[:bs]
+            self.queue = self.queue[bs:]
+            maxlen = max(len(p) for _, p in group)
+            batch = np.zeros((bs, maxlen), np.int32)
+            for i, (_, p) in enumerate(group):
+                batch[i, maxlen - len(p):] = p     # left-pad
+            outs = self.engine.generate(batch, self.max_new, self.eos_id)
+            for i, (rid, _) in enumerate(group):
+                results[rid] = outs[i]
+        return results

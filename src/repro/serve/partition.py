@@ -1,0 +1,74 @@
+"""PartitionSpecs for serving cache pytrees (per arch family).
+
+Rules (path + rank based):
+  * the batch dim shards over ("pod","data");
+  * KV-head dims shard over "model" (GSPMD pads/replicates when
+    kv_heads < |model|, the standard GQA-TP treatment);
+  * recurrent-state width (d_rnn / d_inner) shards over "model";
+  * layer-stack leading dims and time/window dims stay unsharded.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import Arch
+from repro.sharding.rules import AxisRules, repair_specs
+
+
+def _batch(rules: AxisRules):
+    return rules._mesh_axes("batch")
+
+
+def _model(rules: AxisRules):
+    return rules._mesh_axes("heads")
+
+
+def cache_specs(arch: Arch, cache_tree: Any, rules: AxisRules):
+    """PartitionSpec pytree matching `cache_tree`."""
+    b_ax = _batch(rules)
+    m_ax = _model(rules)
+    scanned = getattr(arch.cfg, "scan_layers", True)
+
+    def assign(path, leaf):
+        name = ""
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        rank = leaf.ndim
+        lead = 1 if scanned else 0           # layer-stack axis
+        axes = [None] * rank
+        # batch axis position
+        bpos = lead if rank > lead else None
+        if bpos is not None:
+            axes[bpos] = b_ax
+        if name in ("k", "v") and rank >= lead + 4:
+            axes[lead + 2] = m_ax            # kv heads
+        elif name == "h" and rank == lead + 2:
+            axes[lead + 1] = m_ax            # rg-lru state width
+        elif name == "conv" and rank == lead + 3:
+            axes[lead + 2] = m_ax            # conv tail width
+        elif name not in ("k", "v", "pos", "len", "conv", "h"):
+            # xlstm cell tuples: (pairs, B, nh, ...) -> shard the head dim
+            if rank >= lead + 2:
+                axes[lead + 1] = m_ax
+        return P(*axes)
+
+    specs = jax.tree_util.tree_map_with_path(assign, cache_tree)
+    return repair_specs(specs, cache_tree, rules.mesh)
+
+
+def batch_specs(arch: Arch, batch_tree: Any, rules: AxisRules):
+    """Input-batch specs: batch dim over ("pod","data")."""
+    b_ax = _batch(rules)
+
+    def assign(path, leaf):
+        del path
+        return P(*([b_ax] + [None] * (leaf.ndim - 1)))
+
+    specs = jax.tree_util.tree_map_with_path(assign, batch_tree)
+    return repair_specs(specs, batch_tree, rules.mesh)

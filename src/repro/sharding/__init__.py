@@ -1,0 +1,3 @@
+from repro.sharding.rules import AxisRules, param_specs, param_shardings
+
+__all__ = ["AxisRules", "param_specs", "param_shardings"]

@@ -1,0 +1,284 @@
+"""Logical-axis sharding rules (MaxText-style) mapped onto the mesh.
+
+Models annotate activations/params with *logical* axis names; this module
+translates them to `PartitionSpec`s for whatever mesh is in use (single-pod
+("data","model") or multi-pod ("pod","data","model")), dropping axes the
+mesh does not have.
+
+Logical axes:
+  batch    -> ("pod", "data")     batch / rows of the loss
+  seq      -> None                (sequence kept unsharded in activations;
+                                   ring/context parallelism is future work)
+  embed    -> None | "data"       d_model; "data" under ZeRO-3 param mode
+  heads    -> "model"             attention q heads
+  kv_heads -> "model"             attention kv heads (GSPMD replicates when
+                                   kv_heads < mesh model size)
+  ffn      -> "model"             MLP hidden
+  vocab    -> "model"             embedding/lm_head vocab rows
+  expert   -> "model"             MoE expert axis (EP)
+  rnn      -> "model"             recurrent state width (xLSTM/RG-LRU)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LogicalAxes = Tuple[Optional[str], ...]
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "vocab": "model",
+    "expert": "model",
+    "rnn": "model",
+    "tp": "model",        # generic tensor-parallel dim (embed table d)
+    "capacity": None,
+    "group": ("pod", "data"),
+}
+
+# ZeRO-3 / FSDP-style: additionally shard the d_model dim of params over
+# the data axis (weights are all-gathered by GSPMD at use sites).
+ZERO3_OVERRIDES = {"embed": "data"}
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Translate logical axis names -> mesh PartitionSpecs.
+
+    zero3=True additionally shards the `embed` dim of PARAMS over the data
+    axis (FSDP/ZeRO-3).  Activation constraints (`spec`/`shard`) always use
+    the base rules — sharding activations' embed over "data" would collide
+    with the batch axis.
+    """
+
+    mesh: Optional[Mesh] = None
+    rules: dict = dataclasses.field(default_factory=lambda: dict(DEFAULT_RULES))
+    zero3: bool = False
+
+    def with_zero3(self) -> "AxisRules":
+        return dataclasses.replace(self, zero3=True)
+
+    def _param_rules(self) -> dict:
+        if not self.zero3:
+            return self.rules
+        r = dict(self.rules)
+        r.update(ZERO3_OVERRIDES)
+        return r
+
+    def _mesh_axes(self, logical: Optional[str], *, for_params=False):
+        if logical is None:
+            return None
+        table = self._param_rules() if for_params else self.rules
+        target = table.get(logical, None)
+        if target is None:
+            return None
+        if isinstance(target, str):
+            target = (target,)
+        if self.mesh is None:
+            return tuple(target) or None
+        present = tuple(a for a in target if a in self.mesh.axis_names)
+        if not present:
+            return None
+        return present if len(present) > 1 else present[0]
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*[self._mesh_axes(l) for l in logical])
+
+    def param_spec(self, *logical: Optional[str]) -> P:
+        return P(*[self._mesh_axes(l, for_params=True) for l in logical])
+
+    def shard(self, x, *logical: Optional[str]):
+        """with_sharding_constraint if a mesh is configured, else no-op."""
+        if self.mesh is None or x is None:
+            return x
+        spec = self.spec(*logical)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def sharding(self, *logical: Optional[str]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+# ---------------------------------------------------------------------------
+# Parameter logical axes by path.
+# ---------------------------------------------------------------------------
+
+# (path regex, logical axes of the *unstacked* param).  Scanned/stacked
+# params (leading layer axis) are detected by rank and get a leading None.
+PARAM_PATH_RULES: Sequence[Tuple[str, LogicalAxes]] = (
+    # the INPUT embedding shards its d_model dim (vocab rows replicated):
+    # a vocab-sharded table turns the backward scatter-add into a full
+    # f32 all-gather of the loss rows (7 GiB/device on arctic -- see
+    # EXPERIMENTS §Perf); d-sharded tables keep both gather and
+    # scatter-add local.  The lm_head stays vocab-sharded (the paper's TP).
+    (r"embed.*table", (None, "tp")),
+    (r"lm_head", ("vocab", "embed")),
+    (r"(attn|cross_attn).*wq$", ("embed", "heads", None)),
+    (r"(attn|cross_attn).*w[kv]$", ("embed", "kv_heads", None)),
+    (r"(attn|cross_attn).*wo$", ("heads", None, "embed")),
+    (r"(attn|cross_attn).*b[qkv]$", ("heads", None)),
+    (r"(attn|cross_attn).*(q_norm|k_norm)$", (None,)),
+    (r"moe.*router", ("embed", "expert")),
+    # expert axis takes the "model" mesh axis; the per-expert ffn/embed
+    # dims must NOT map to the same axis (duplicate-entry specs).
+    (r"moe.*w[ig]$", ("expert", "embed", None)),
+    (r"moe.*wo$", ("expert", None, "embed")),
+    (r"mlp.*w[ig]$", ("embed", "ffn")),
+    (r"mlp.*wo$", ("ffn", "embed")),
+    (r"mlp.*bi$", ("ffn",)),
+    (r"mlp.*bo$", ("embed",)),
+    (r"conv.*w$", (None, "rnn")),
+    # block-diagonal RG-LRU gates: blocks align with the sharded d_rnn
+    (r"rglru.*w[ax]$", ("rnn", None, None)),
+    (r"(rglru|lstm|rnn).*", None),  # handled by rank-based fallback below
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _fallback_axes(rank: int) -> LogicalAxes:
+    """Shard the largest-likely dim: last dim on 'model' for >=2D."""
+    if rank == 0:
+        return ()
+    if rank == 1:
+        return (None,)
+    return (None,) * (rank - 1) + ("rnn",)
+
+
+def logical_axes_for_params(params) -> "jax.tree_util.PyTreeDef":
+    """Pytree of LogicalAxes matching `params` (rank-adjusted for stacking)."""
+
+    def assign(path, leaf):
+        s = _path_str(path)
+        rank = leaf.ndim
+        for pat, axes in PARAM_PATH_RULES:
+            if re.search(pat, s):
+                if axes is None:
+                    return _fallback_axes(rank)
+                if len(axes) == rank:
+                    return axes
+                if len(axes) == rank - 1:
+                    return (None,) + tuple(axes)     # stacked over layers
+                if len(axes) == rank - 2:
+                    return (None, None) + tuple(axes)
+                break
+        # norm scales / biases / unmatched
+        if rank <= 1:
+            return (None,) * rank
+        return _fallback_axes(rank)
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    size = 1
+    for a in entry:
+        size *= mesh.shape[a]
+    return size
+
+
+def repair_spec(spec: P, shape, mesh: Optional[Mesh],
+                relocate: bool = True) -> P:
+    """Make `spec` valid as a pjit input sharding for `shape`.
+
+    pjit arguments must divide evenly.  For every dim whose size is not a
+    multiple of its assigned mesh-axis product, try to MOVE that mesh axis
+    to the largest currently-unsharded divisible dim (e.g. kv_heads=8 on a
+    16-way model axis moves to head_dim=128 — the GQA-TP head-dim split);
+    otherwise drop to replicated.  Intermediates keep the logical (possibly
+    uneven) constraints — GSPMD pads those fine; only *inputs* go through
+    this repair.
+    """
+    if mesh is None:
+        return spec
+    axes = list(spec) + [None] * (len(shape) - len(spec))
+    for i, entry in enumerate(axes):
+        if entry is None:
+            continue
+        size = _axis_size(mesh, entry)
+        if size <= 1 or shape[i] % size == 0:
+            continue
+        axes[i] = None
+        if not relocate:
+            continue
+        # relocate to the RIGHTMOST unsharded divisible dim: for attention
+        # params/caches that is head_dim (GQA head-dim split) or the
+        # d_model output dim — both keep contractions collective-light.
+        cands = [j for j in range(len(shape) - 1, -1, -1)
+                 if axes[j] is None and shape[j] % size == 0
+                 and shape[j] >= size]
+        if cands:
+            axes[cands[0]] = entry
+    while axes and axes[-1] is None:
+        axes.pop()
+    return P(*axes)
+
+
+def repair_specs(specs, leaves, mesh: Optional[Mesh], no_relocate=None):
+    """Apply `repair_spec` across matching pytrees (specs <- leaf shapes).
+
+    no_relocate: optional bool pytree (matching `leaves`): True leaves
+    DROP an undivisible axis instead of relocating it."""
+    if mesh is None:
+        return specs
+    flat_leaves, treedef = jax.tree.flatten(leaves)
+    flat_specs = treedef.flatten_up_to(specs)
+    flat_nr = (treedef.flatten_up_to(no_relocate) if no_relocate is not None
+               else [False] * len(flat_leaves))
+    out = [repair_spec(s, l.shape, mesh, relocate=not nr)
+           for s, l, nr in zip(flat_specs, flat_leaves, flat_nr)]
+    return jax.tree.unflatten(treedef, out)
+
+
+# params whose undivisible axes should be REPLICATED, never relocated.
+# Empty by default: replicating GQA kv projections was tried (hypothesis:
+# head-dim-sharded kv makes score contractions psum) and REFUTED — the
+# dominant collectives are the Megatron-TP block-boundary all-reduces,
+# and replication costs +1 GiB of replicated grads/opt state
+# (EXPERIMENTS §Perf H1.1).  Mechanism kept for future per-arch tuning.
+NO_RELOCATE_PATTERNS: tuple = ()
+
+
+def param_specs(params, rules: AxisRules):
+    axes = logical_axes_for_params(params)
+    specs = jax.tree_util.tree_map(
+        lambda a: rules.param_spec(*a), axes,
+        is_leaf=lambda x: isinstance(x, tuple))
+    no_reloc = jax.tree_util.tree_map_with_path(
+        lambda p, _: any(re.search(pat, _path_str(p))
+                         for pat in NO_RELOCATE_PATTERNS), params)
+    return repair_specs(specs, params, rules.mesh, no_relocate=no_reloc)
+
+
+def param_shardings(params, rules: AxisRules):
+    if rules.mesh is None:
+        raise ValueError("param_shardings requires a mesh")
+    specs = param_specs(params, rules)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(rules.mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

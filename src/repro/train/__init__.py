@@ -1,0 +1,7 @@
+from repro.train.step import TrainConfig, build_train_step, build_loss_fn, jit_train_step
+from repro.train.state import make_train_state, state_specs, state_shardings
+from repro.train.loop import train_loop, resume_or_init
+
+__all__ = ["TrainConfig", "build_train_step", "build_loss_fn", "jit_train_step",
+           "make_train_state", "state_specs", "state_shardings",
+           "train_loop", "resume_or_init"]

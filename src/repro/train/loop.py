@@ -1,0 +1,84 @@
+"""Fault-tolerant training loop: resume -> train -> checkpoint -> repeat.
+
+Wires together: data loader, jitted train step, async checkpointer,
+preemption handler, straggler monitor.  Single-host here; the multi-host
+story is identical modulo `jax.process_index()` plumbing already present
+in the checkpointer/data layers.
+"""
+
+from __future__ import annotations
+
+import logging
+import time
+from typing import Any, Callable, Dict, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.distributed.fault import PreemptionHandler, StragglerMonitor
+
+log = logging.getLogger("repro.train")
+
+
+def train_loop(
+    *,
+    state,
+    step_fn: Callable,
+    data: Iterable,
+    num_steps: int,
+    checkpointer: Optional[Checkpointer] = None,
+    checkpoint_every: int = 100,
+    log_every: int = 10,
+    preemption: Optional[PreemptionHandler] = None,
+    straggler: Optional[StragglerMonitor] = None,
+    metrics_hook: Optional[Callable[[int, Dict[str, float]], None]] = None,
+):
+    """Runs up to `num_steps` steps; returns (state, history)."""
+    preemption = (preemption or PreemptionHandler()).install()
+    straggler = straggler or StragglerMonitor()
+    history = []
+    start_step = int(jax.device_get(state["step"]))
+
+    it = iter(data)
+    for i in range(start_step, num_steps):
+        t0 = time.perf_counter()
+        batch = next(it)
+        state, metrics = step_fn(state, batch)
+        # block for accurate step timing (and to surface async errors here)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        straggler.record(i, dt)
+
+        if (i + 1) % log_every == 0 or i == start_step:
+            m = {k: float(np.asarray(jax.device_get(v)))
+                 for k, v in metrics.items()}
+            m["step_time_s"] = dt
+            history.append((i, m))
+            log.info("step %d: %s", i,
+                     {k: round(v, 5) for k, v in m.items()})
+            if metrics_hook:
+                metrics_hook(i, m)
+
+        if checkpointer and ((i + 1) % checkpoint_every == 0
+                             or preemption.should_stop):
+            checkpointer.save_async(i + 1, state)
+
+        if preemption.should_stop:
+            log.warning("preempted at step %d — checkpoint flushed", i)
+            break
+
+    if checkpointer:
+        checkpointer.wait()
+    return state, history
+
+
+def resume_or_init(checkpointer: Optional[Checkpointer], init_fn,
+                   rng, shardings=None):
+    """Restore the latest checkpoint if present, else init fresh."""
+    if checkpointer is not None and checkpointer.latest_step() is not None:
+        example = jax.eval_shape(init_fn, rng)
+        state, step = checkpointer.restore(example, shardings=shardings)
+        log.info("resumed from step %d", step)
+        return state
+    return init_fn(rng)

@@ -1,0 +1,113 @@
+"""TrainState + sharding derivation for params AND optimizer slots."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.rules import AxisRules, param_specs
+
+
+def make_train_state(params, opt_init) -> Dict[str, Any]:
+    return {"params": params, "opt": opt_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _slot_spec_from_param(slot_shape, param_shape, spec: P) -> P:
+    """Derive a slot's spec from its param's: equal shape -> same spec;
+    one-dim-removed (adafactor factored) -> spec minus that axis;
+    otherwise replicated."""
+    if tuple(slot_shape) == tuple(param_shape):
+        return spec
+    if len(slot_shape) == len(param_shape) - 1:
+        # find the removed dim (first mismatch scanning left to right)
+        removed = None
+        j = 0
+        for i, s in enumerate(param_shape):
+            if j < len(slot_shape) and slot_shape[j] == s:
+                j += 1
+            elif removed is None:
+                removed = i
+            else:
+                return P()          # ambiguous; replicate
+        if removed is None:
+            removed = len(param_shape) - 1
+        axes = list(spec) + [None] * (len(param_shape) - len(spec))
+        del axes[removed]
+        return P(*axes)
+    return P()
+
+
+def state_specs(state: Dict[str, Any], rules: AxisRules,
+                zero1_axes=None):
+    """PartitionSpec tree matching a TrainState.
+
+    zero1_axes: mesh axes to additionally shard OPTIMIZER slots over
+    (ZeRO-1; params untouched)."""
+    p_specs = param_specs(state["params"], rules)
+    flat_p, treedef = jax.tree.flatten(state["params"])
+    flat_spec = treedef.flatten_up_to(p_specs)
+    by_id = {}  # param leaf index -> (shape, spec)
+    for i, (leaf, spec) in enumerate(zip(flat_p, flat_spec)):
+        by_id[i] = (leaf.shape, spec)
+
+    def opt_leaf_spec(slot_leaf):
+        # match the slot to a param by shape-compatibility; optimizer trees
+        # mirror the param tree so positional matching is possible, but a
+        # shape-based match is robust to factored slots.
+        for shape, spec in by_id.values():
+            if tuple(slot_leaf.shape) == tuple(shape):
+                return spec
+        for shape, spec in by_id.values():
+            if len(slot_leaf.shape) == len(shape) - 1:
+                cand = _slot_spec_from_param(slot_leaf.shape, shape, spec)
+                if cand != P():
+                    return cand
+        return P()
+
+    opt_specs = jax.tree.map(opt_leaf_spec, state["opt"])
+    from repro.sharding.rules import repair_specs
+    opt_specs = repair_specs(opt_specs, state["opt"], rules.mesh)
+    if zero1_axes:
+        opt_specs = jax.tree.map(
+            lambda leaf, spec: _zero1_spec(leaf, spec, rules.mesh,
+                                           zero1_axes),
+            state["opt"], opt_specs)
+    return {"params": p_specs, "opt": opt_specs, "step": P()}
+
+
+def _zero1_spec(leaf, spec: P, mesh, axes) -> P:
+    """ZeRO-1: shard an optimizer slot over `axes` (e.g. the full
+    data x model device set) on its largest divisible unsharded dim.
+    Params stay replicated; the optimizer update then runs on 1/N of the
+    state and GSPMD all-gathers the updated params (classic ZeRO-1)."""
+    if leaf.ndim == 0:
+        return spec
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    used = {x for e in spec if e is not None
+            for x in ((e,) if isinstance(e, str) else e)}
+    if used & set(axes):
+        return spec
+    parts = list(spec) + [None] * (leaf.ndim - len(spec))
+    cands = sorted((j for j in range(leaf.ndim)
+                    if parts[j] is None and leaf.shape[j] % size == 0
+                    and leaf.shape[j] >= size),
+                   key=lambda j: -leaf.shape[j])
+    if not cands:
+        return spec
+    parts[cands[0]] = tuple(axes)
+    return P(*parts)
+
+
+def state_shardings(state, rules: AxisRules):
+    if rules.mesh is None:
+        raise ValueError("state_shardings requires a mesh")
+    specs = state_specs(state, rules)
+    return jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,11 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the single real CPU device; only launch/dryrun.py (and the
+dedicated subprocess tests) force 512/8 host devices."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,96 @@
+"""HLO collective parser + roofline math + sharding-rule repair."""
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import collective_stats, _shape_bytes
+from repro.analysis import roofline as RL
+from repro.sharding.rules import repair_spec
+
+HLO = """
+HloModule test
+  %x = bf16[1024,512]{1,0} parameter(0)
+  %all-reduce.1 = bf16[1024,512]{1,0} all-reduce(%x), channel_id=1, replica_groups=[2,4]<=[8], use_global_device_ids=true, to_apply=%add
+  %ag = f32[64,256]{1,0} all-gather(%y), channel_id=2, replica_groups=[4,2]<=[8], dimensions={0}
+  %rs = f32[16,256]{1,0} reduce-scatter(%z), channel_id=3, replica_groups=[2,4]<=[8], dimensions={0}
+  %cp = bf16[8,8]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %a2a = s32[128]{0} all-to-all(%v), replica_groups=[1,8]<=[8]
+  %ard = (f32[4]{0}, f32[4]{0}) all-reduce-start(%q), replica_groups={{0,1},{2,3}}
+  %done = f32[4]{0} all-reduce-done(%ard)
+  %notacoll = f32[9]{0} add(%a, %b), metadata={op_name="all-reduce-like"}
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    st = collective_stats(HLO)
+    # all-reduce: 1024*512*2 + async-start tuple 2*4*4 (done skipped)
+    assert st.bytes_by_kind["all-reduce"] == 1024 * 512 * 2 + 32
+    assert st.count_by_kind["all-reduce"] == 2
+    # all-gather result 64*256*4; operand = /2 (group size 2)
+    assert st.bytes_by_kind["all-gather"] == 64 * 256 * 4 // 2
+    # reduce-scatter result 16*256*4; operand = *4
+    assert st.bytes_by_kind["reduce-scatter"] == 16 * 256 * 4 * 4
+    assert st.bytes_by_kind["collective-permute"] == 8 * 8 * 2
+    assert st.bytes_by_kind["all-to-all"] == 128 * 4
+    assert st.count_by_kind["all-to-all"] == 1
+    assert st.total_bytes == sum(st.bytes_by_kind.values())
+
+
+def test_shape_bytes_dtypes():
+    assert _shape_bytes("bf16", "2,3") == 12
+    assert _shape_bytes("f32", "") == 4       # scalar
+    assert _shape_bytes("pred", "8") == 8
+    assert _shape_bytes("s8", "4,4") == 16
+
+
+def test_roofline_terms_and_dominance():
+    rl = RL.roofline_from_stats(
+        flops=197e12, bytes_accessed=819e9 / 2,
+        collective_bytes=50e9 / 4,
+        model_flops_per_device=98.5e12,
+        analytic_flops_per_device=197e12)
+    assert abs(rl.compute_s - 1.0) < 1e-9
+    assert abs(rl.memory_s - 0.5) < 1e-9
+    assert abs(rl.collective_s - 0.25) < 1e-9
+    assert rl.dominant == "compute"
+    assert abs(rl.step_time_s - 1.75) < 1e-9
+    # useful fraction = 0.5 / 1.75
+    assert abs(rl.roofline_fraction - 0.5 / 1.75) < 1e-9
+
+
+def test_model_flops_conventions():
+    assert RL.model_flops(10, 5, "train") == 300.0
+    assert RL.model_flops(10, 5, "decode") == 100.0
+    a = RL.attention_flops(2, 4, 8, 128, 2, "train")
+    per_layer = 2 * 2 * 2 * 4 * 8 * 128 * 128 * 0.5
+    assert a == per_layer * 2 * 3          # x layers x train-multiplier
+    w = RL.attention_flops(2, 4, 8, 128, 2, "train", window=32)
+    assert w == a * 32 / 128
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def _norm(spec):
+    t = tuple(spec)
+    while t and t[-1] is None:
+        t = t[:-1]
+    return t
+
+
+@pytest.mark.parametrize("spec,shape,expect", [
+    (P("model", None), (32, 7), P("model", None)),          # already fine
+    (P(None, "model", None), (28, 8, 128), P(None, None, "model")),
+    (P("model", None, None), (28, 128, 3584), P(None, None, "model")),
+    (P(("pod", "data"), None), (1, 1), P()),                # nothing fits
+    (P("model"), (24,), P()),                               # 1-D, no dim
+])
+def test_repair_spec_moves_to_rightmost_divisible(spec, shape, expect):
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    got = repair_spec(spec, shape, mesh)
+    assert _norm(got) == _norm(expect), (got, expect)

@@ -1,0 +1,118 @@
+"""Streaming fused CE vs the canonical two-stage oracle (paper §3.2:
+"maintaining the exact equivalence to the standard two-stage pipeline")."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LossConfig, canonical_loss, streaming_loss,
+                        fused_cross_entropy)
+from repro.core.streaming import streaming_stats
+from repro.kernels.fused_ce.ref import ref_stats
+
+
+def _problem(n=37, d=48, v=501, seed=0, dtype=jnp.float32, scale=1.0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    h = (jax.random.normal(k1, (n, d)) * scale).astype(dtype)
+    w = (jax.random.normal(k2, (v, d)) * 0.05).astype(dtype)
+    # targets stay below every valid_vocab used in CFGS (contract: targets
+    # must be < valid_vocab or == ignore_index)
+    y = jax.random.randint(k3, (n,), 0, min(v, 480))
+    return h, w, y
+
+
+CFGS = [
+    LossConfig(block_v=128),
+    LossConfig(block_v=100),                      # ragged chunks
+    LossConfig(block_v=128, label_smoothing=0.1),
+    LossConfig(block_v=128, z_loss=1e-4),
+    LossConfig(block_v=128, logit_softcap=15.0),
+    LossConfig(block_v=128, reduction="sum"),
+    LossConfig(block_v=96, valid_vocab=490, label_smoothing=0.05,
+               z_loss=1e-4),
+]
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=range(len(CFGS)))
+def test_streaming_matches_canonical(cfg):
+    h, w, y = _problem()
+    y = y.at[3].set(cfg.ignore_index)
+    a = canonical_loss(h, w, y, cfg)
+    b = streaming_loss(h, w, y, cfg)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("cfg", CFGS[:5], ids=range(5))
+def test_streaming_grads_match(cfg):
+    h, w, y = _problem()
+    y = y.at[0].set(cfg.ignore_index)
+    ga = jax.grad(lambda h, w: canonical_loss(h, w, y, cfg), (0, 1))(h, w)
+    gb = jax.grad(lambda h, w: streaming_loss(h, w, y, cfg), (0, 1))(h, w)
+    np.testing.assert_allclose(ga[0], gb[0], rtol=3e-4, atol=1e-5)
+    np.testing.assert_allclose(ga[1], gb[1], rtol=3e-4, atol=1e-5)
+
+
+def test_per_row_reduction_vjp():
+    cfg = LossConfig(block_v=64, reduction="none")
+    h, w, y = _problem(n=19, v=131)
+    ct = jax.random.normal(jax.random.PRNGKey(9), (19,))
+    _, va = jax.vjp(lambda h, w: canonical_loss(h, w, y, cfg), h, w)
+    _, vb = jax.vjp(lambda h, w: streaming_loss(h, w, y, cfg), h, w)
+    for xa, xb in zip(va(ct), vb(ct)):
+        np.testing.assert_allclose(xa, xb, rtol=3e-4, atol=1e-5)
+
+
+def test_bf16_inputs_fp32_accumulation():
+    h, w, y = _problem(dtype=jnp.bfloat16)
+    cfg = LossConfig(block_v=128)
+    a = canonical_loss(h, w, y, cfg)
+    b = streaming_loss(h, w, y, cfg)
+    np.testing.assert_allclose(np.float32(a), np.float32(b), rtol=2e-3)
+
+
+def test_large_logits_numerically_stable():
+    """Safe-softmax claim: huge-magnitude logits neither overflow nor NaN."""
+    h, w, y = _problem(scale=60.0)
+    cfg = LossConfig(block_v=64)
+    val = streaming_loss(h, w, y, cfg)
+    assert np.isfinite(float(val))
+    g = jax.grad(lambda h: streaming_loss(h, w, y, cfg))(h)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_streaming_stats_col_offset_partition():
+    """TP semantics: vocab split into two shards with col offsets merges
+    back to the full-vocab statistics (paper §3.2.2 TP)."""
+    h, w, y = _problem(n=16, v=200)
+    cfg = LossConfig(block_v=64, valid_vocab=190)
+    lse_f, zt_f, zs_f = ref_stats(h, w, y, cfg)
+    w1, w2 = w[:100], w[100:]
+    l1, t1, s1 = streaming_stats(h, w1, y, cfg, col_offset=0,
+                                 total_valid=190)
+    l2, t2, s2 = streaming_stats(h, w2, y, cfg, col_offset=100,
+                                 total_valid=190)
+    m = jnp.maximum(l1, l2)
+    lse = m + jnp.log(jnp.exp(l1 - m) + jnp.exp(l2 - m))
+    np.testing.assert_allclose(lse, lse_f, rtol=1e-5)
+    np.testing.assert_allclose(t1 + t2, zt_f, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(s1 + s2, zs_f, rtol=1e-4, atol=1e-4)
+
+
+def test_dispatcher_shapes_and_impls():
+    h, w, y = _problem(n=24, d=32, v=160)
+    h3 = h.reshape(2, 12, 32)
+    y2 = y.reshape(2, 12)
+    cfg = LossConfig(block_v=64)
+    ref = fused_cross_entropy(h3, w, y2, impl="canonical", cfg=cfg)
+    for impl in ("streaming", "pallas"):
+        out = fused_cross_entropy(h3, w, y2, impl=impl, cfg=cfg)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5)
+    cfg_none = LossConfig(block_v=64, reduction="none")
+    rows = fused_cross_entropy(h3, w, y2, impl="streaming", cfg=cfg_none)
+    assert rows.shape == (2, 12)
+
+    with pytest.raises(ValueError):
+        fused_cross_entropy(h3, w, y2, impl="nope")

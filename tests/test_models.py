@@ -1,0 +1,111 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward + one train step on CPU, asserting output shapes + no NaNs.
+(The FULL configs are exercised only via the dry-run, per the assignment.)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, input_specs
+from repro.core import fused_cross_entropy
+from repro.models.registry import (ARCH_IDS, get_arch, init_params,
+                                   forward_hidden, init_serve_caches)
+from repro.train import TrainConfig, build_train_step
+
+
+def _batch_for(arch, B=2, T=24, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    batch = {"tokens": jax.random.randint(ks[0], (B, T), 0,
+                                          arch.vocab_size)}
+    front = getattr(arch.cfg, "frontend_len", 0)
+    t_tgt = T
+    if arch.family == "encdec":
+        batch["frontend_embeds"] = jax.random.normal(
+            ks[1], (B, 16, arch.cfg.d_model))
+    elif front:
+        batch["frontend_embeds"] = jax.random.normal(
+            ks[1], (B, front, arch.cfg.d_model))
+        t_tgt = T + front
+    batch["targets"] = jax.random.randint(ks[2], (B, t_tgt), 0,
+                                          arch.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_forward_and_loss(arch_id):
+    arch = get_arch(arch_id, reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    batch = _batch_for(arch)
+    h, aux, _ = forward_hidden(arch, params, batch)
+    assert h.shape[0] == 2 and h.shape[-1] == arch.cfg.d_model
+    assert h.shape[1] == batch["targets"].shape[1]
+    assert not np.any(np.isnan(np.asarray(h, np.float32))), arch_id
+    loss = fused_cross_entropy(
+        h, params["lm_head"], batch["targets"], impl="streaming",
+        cfg=arch.loss_config(block_v=128))
+    assert np.isfinite(float(loss))
+    # paper sanity: random-init loss ~ log(valid vocab)
+    assert abs(float(loss) - np.log(arch.vocab_size)) < 1.5
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_one_train_step(arch_id):
+    arch = get_arch(arch_id, reduced=True)
+    tc = TrainConfig(optimizer="adamw", peak_lr=1e-3, warmup_steps=0,
+                     loss_impl="streaming", loss_block_v=128)
+    init_fn, step_fn = build_train_step(arch, tc)
+    state = init_fn(jax.random.PRNGKey(0))
+    batch = _batch_for(arch)
+    new_state, metrics = jax.jit(step_fn)(state, batch)
+    assert int(new_state["step"]) == 1
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        state["params"], new_state["params"])
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch_id", ["qwen2-7b", "xlstm-125m",
+                                     "recurrentgemma-9b",
+                                     "seamless-m4t-medium"])
+def test_decode_consistency_per_family(arch_id):
+    """prefill + single-token decode == full forward, per family."""
+    arch = get_arch(arch_id, reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    B, T = 2, 20
+    batch = _batch_for(arch, B, T)
+    h_full, _, _ = forward_hidden(arch, params, batch)
+    fe = batch.get("frontend_embeds")
+    caches = init_serve_caches(arch, params, B, T + 8,
+                               frontend_embeds=fe, dtype=jnp.float32)
+    pre = dict(batch)
+    pre.pop("targets")
+    pre["tokens"] = batch["tokens"][:, :T - 1]
+    _, _, caches = forward_hidden(arch, params, pre, caches=caches)
+    h1, _, _ = forward_hidden(
+        arch, params, {"tokens": batch["tokens"][:, T - 1:]},
+        caches=caches)
+    np.testing.assert_allclose(np.asarray(h1[:, 0]),
+                               np.asarray(h_full[:, -1]),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_input_specs_cover_all_supported_cells():
+    count = 0
+    for arch_id in ARCH_IDS:
+        arch = get_arch(arch_id)
+        for name, s in SHAPES.items():
+            if not arch.supports(name):
+                assert name == "long_500k" and not arch.sub_quadratic
+                continue
+            spec = input_specs(arch, name)
+            assert "tokens" in spec
+            count += 1
+            if s.kind == "train":
+                assert spec["targets"].shape[0] == s.global_batch
+    assert count == 32          # 10*4 minus 8 long_500k skips

@@ -1,0 +1,114 @@
+"""Optimizers: reference math, factored state, scanned-update equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw, adafactor, make_optimizer, schedules
+from repro.optim.adamw import AdamWConfig
+from repro.optim.adafactor import AdafactorConfig
+
+
+def test_adamw_matches_reference_math():
+    cfg = AdamWConfig(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0)
+    p = {"w": jnp.array([[1.0, -2.0], [0.5, 3.0]])}
+    g = {"w": jnp.array([[0.1, 0.2], [-0.3, 0.4]])}
+    st = adamw.init(p, cfg)
+    lr = 0.01
+    newp, st = adamw.update(g, st, p, lr, cfg)
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.001 * np.asarray(g["w"]) ** 2
+    mh, vh = m / 0.1, v / 0.001
+    expect = np.asarray(p["w"]) - lr * mh / np.sqrt(vh + 1e-16)
+    np.testing.assert_allclose(np.asarray(newp["w"]), expect, rtol=1e-4)
+
+
+def test_adamw_weight_decay_masked_for_1d():
+    cfg = AdamWConfig(weight_decay=0.1)
+    p = {"w": jnp.ones((4, 4)), "scale": jnp.ones((4,))}
+    g = jax.tree.map(jnp.zeros_like, p)
+    st = adamw.init(p, cfg)
+    newp, _ = adamw.update(g, st, p, 0.1, cfg)
+    assert float(jnp.max(jnp.abs(newp["w"] - 1.0))) > 0     # decayed
+    np.testing.assert_allclose(newp["scale"], 1.0)          # masked
+
+
+def test_adamw_scanned_equals_unscanned():
+    cfg = AdamWConfig()
+    key = jax.random.PRNGKey(0)
+    p = {"stack": jax.random.normal(key, (10, 16, 24))}     # scanned leaf
+    g = {"stack": jax.random.normal(jax.random.PRNGKey(1), (10, 16, 24))}
+    st = adamw.init(p, cfg)
+    newp_scan, st_scan = adamw.update(g, st, p, 0.01, cfg)
+    # force unscanned by reshaping to rank-2
+    p2 = {"stack": p["stack"].reshape(10 * 16, 24)}
+    g2 = {"stack": g["stack"].reshape(10 * 16, 24)}
+    st2 = adamw.init(p2, cfg)
+    newp2, _ = adamw.update(g2, st2, p2, 0.01, cfg)
+    np.testing.assert_allclose(
+        np.asarray(newp_scan["stack"]).reshape(160, 24),
+        np.asarray(newp2["stack"]), rtol=1e-5, atol=1e-6)
+
+
+def test_adafactor_factored_state_small():
+    cfg = AdafactorConfig(min_dim_size_to_factor=8)
+    p = {"w": jnp.ones((32, 16)), "b": jnp.ones((16,))}
+    st = adafactor.init(p, cfg)
+    assert set(st["slots"]["w"].keys()) == {"vr", "vc"}
+    assert st["slots"]["w"]["vr"].shape == (32,)
+    assert st["slots"]["w"]["vc"].shape == (16,)
+    assert set(st["slots"]["b"].keys()) == {"v"}
+    # state is O(n+m), not O(n*m)
+    n_state = sum(x.size for x in jax.tree.leaves(st["slots"]["w"]))
+    assert n_state == 48
+
+
+def test_adafactor_reduces_loss_on_quadratic():
+    cfg = AdafactorConfig(min_dim_size_to_factor=8)
+    target = jax.random.normal(jax.random.PRNGKey(0), (16, 16))
+    p = {"w": jnp.zeros((16, 16))}
+    st = adafactor.init(p, cfg)
+    loss = lambda p: jnp.mean((p["w"] - target) ** 2)
+    l0 = float(loss(p))
+    for _ in range(50):
+        g = jax.grad(loss)(p)
+        p, st = adafactor.update(g, st, p, 0.1, cfg)
+    assert float(loss(p)) < 0.2 * l0
+
+
+def test_adafactor_scanned_equals_per_layer_loop():
+    """scan_stacked applies the update PER LAYER SLICE of a stacked leaf
+    (update clipping at per-layer granularity — the semantics a per-layer
+    parameter list would have).  Verify it matches an explicit per-layer
+    python loop."""
+    cfg_s = AdafactorConfig(min_dim_size_to_factor=8, scan_stacked=True,
+                            scan_min_leading=4)
+    cfg_n = AdafactorConfig(min_dim_size_to_factor=8, scan_stacked=False)
+    p = {"w": jax.random.normal(jax.random.PRNGKey(0), (6, 32, 16))}
+    g = {"w": jax.random.normal(jax.random.PRNGKey(1), (6, 32, 16))}
+    st = adafactor.init(p, cfg_s)
+    scanned, _ = adafactor.update(g, st, p, 0.05, cfg_s)
+    per_layer = []
+    for i in range(6):
+        pi = {"w": p["w"][i]}
+        gi = {"w": g["w"][i]}
+        sti = adafactor.init(pi, cfg_n)
+        out, _ = adafactor.update(gi, sti, pi, 0.05, cfg_n)
+        per_layer.append(np.asarray(out["w"]))
+    np.testing.assert_allclose(np.asarray(scanned["w"]),
+                               np.stack(per_layer), rtol=1e-5, atol=1e-6)
+
+
+def test_make_optimizer_and_schedules():
+    for kind in ("adamw", "adafactor"):
+        init, update = make_optimizer(kind)
+        p = {"w": jnp.ones((8, 8))}
+        st = init(p)
+        newp, st2 = update({"w": jnp.ones((8, 8))}, st, p, 0.1)
+        assert newp["w"].shape == (8, 8)
+    s = schedules.warmup_cosine(1.0, 10, 100)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert float(s(100)) < 0.2
+    r = schedules.warmup_rsqrt(1.0, 16)
+    assert abs(float(r(64)) - 0.5) < 1e-6

@@ -1,0 +1,113 @@
+"""Property-based tests (hypothesis) for the system's numeric invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import LossConfig, canonical_loss, streaming_loss
+from repro.core.windows import choose_blocks, tile_bytes
+from repro.distributed.compression import quantize_ef, dequantize
+from repro.optim.clipping import clip_by_global_norm
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _problem(n, d, v, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    h = jax.random.normal(k1, (n, d))
+    w = jax.random.normal(k2, (v, d)) * 0.1
+    y = jax.random.randint(k3, (n,), 0, v)
+    return h, w, y
+
+
+@given(n=st.integers(1, 24), d=st.sampled_from([8, 24, 40]),
+       v=st.integers(10, 200), block=st.integers(7, 97),
+       seed=st.integers(0, 10_000))
+@settings(**_SETTINGS)
+def test_streaming_equals_canonical_any_shape(n, d, v, block, seed):
+    """Exact equivalence (paper §3.2) for arbitrary shapes/window sizes."""
+    h, w, y = _problem(n, d, v, seed)
+    cfg = LossConfig(block_v=block)
+    a = canonical_loss(h, w, y, cfg)
+    b = streaming_loss(h, w, y, cfg)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=5e-5, atol=5e-5)
+
+
+@given(n=st.integers(2, 16), v=st.integers(8, 120),
+       pad=st.integers(1, 50), seed=st.integers(0, 10_000))
+@settings(**_SETTINGS)
+def test_vocab_padding_invariance(n, v, pad, seed):
+    """Appending pad rows to W (masked via valid_vocab) never changes the
+    loss — the guarantee the mesh-divisibility padding relies on."""
+    h, w, y = _problem(n, 16, v, seed)
+    base = streaming_loss(h, w, y, LossConfig(block_v=32))
+    w_pad = jnp.concatenate(
+        [w, jax.random.normal(jax.random.PRNGKey(seed + 1), (pad, 16))])
+    padded = streaming_loss(h, w_pad, y,
+                            LossConfig(block_v=32, valid_vocab=v))
+    np.testing.assert_allclose(np.asarray(base), np.asarray(padded),
+                               rtol=5e-5, atol=5e-5)
+
+
+@given(shift=st.floats(-30, 30), seed=st.integers(0, 1000))
+@settings(**_SETTINGS)
+def test_loss_bounded_below_by_zero_and_shift_grows_it(shift, seed):
+    """CE >= 0; adding a constant to every non-target logit direction via
+    a bias row can only matter through softmax — loss stays finite."""
+    h, w, y = _problem(8, 16, 40, seed)
+    cfg = LossConfig(block_v=16)
+    val = float(streaming_loss(h * (1 + abs(shift) / 30), w, y, cfg))
+    assert np.isfinite(val) and val >= 0.0
+
+
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 5))
+@settings(**_SETTINGS)
+def test_target_logit_boost_reduces_loss(seed, k):
+    """Monotonicity: pushing W rows toward the target hidden state reduces
+    the per-row loss (sanity of the fused gradient direction)."""
+    h, w, y = _problem(6, 12, 30, seed)
+    cfg = LossConfig(block_v=16)
+    before = float(streaming_loss(h, w, y, cfg))
+    w2 = w.at[y].add(0.1 * k * h)
+    after = float(streaming_loss(h, w2, y, cfg))
+    assert after <= before + 1e-5
+
+
+@given(n=st.integers(1, 2 ** 16), v=st.sampled_from([32768, 262144]),
+       d=st.sampled_from([1024, 4096, 12288]))
+@settings(**_SETTINGS)
+def test_block_plan_always_fits(n, v, d):
+    plan = choose_blocks(n, v, d, in_bytes=2)
+    assert tile_bytes(plan.block_rows, plan.block_v, d) <= \
+        int(16 * 1024 * 1024 * 0.55) + 1
+    assert plan.block_v % 128 == 0 and plan.block_rows % 8 == 0
+
+
+@given(seed=st.integers(0, 10_000), scale=st.floats(1e-3, 1e3))
+@settings(**_SETTINGS)
+def test_error_feedback_quantization_bounded(seed, scale):
+    """|dequant(q) + residual - x| == 0 exactly (error fully carried)."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale
+    r0 = jnp.zeros_like(g)
+    q, s, r1 = quantize_ef(g, r0)
+    recon = dequantize(q, s) + r1
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(g),
+                               rtol=1e-5, atol=1e-5 * scale)
+    # residual bounded by half a quantization step
+    assert float(jnp.max(jnp.abs(r1))) <= float(s) * 0.5 + 1e-6
+
+
+@given(seed=st.integers(0, 10_000), max_norm=st.floats(0.1, 10))
+@settings(**_SETTINGS)
+def test_clip_never_exceeds_max_norm(seed, max_norm):
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(seed), (17,)) * 5,
+            "b": jax.random.normal(jax.random.PRNGKey(seed + 1), (3, 9))}
+    clipped, pre = clip_by_global_norm(tree, max_norm)
+    post = float(jnp.sqrt(sum(jnp.sum(x ** 2)
+                              for x in jax.tree.leaves(clipped))))
+    assert post <= max_norm * (1 + 1e-4) + 1e-6
+    if float(pre) <= max_norm:
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(clipped)):
+            np.testing.assert_allclose(a, b, rtol=1e-5)

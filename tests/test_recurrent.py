@@ -1,0 +1,80 @@
+"""xLSTM + Griffin recurrence correctness (chunkwise == sequential, etc)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.xlstm import mlstm_sequential, mlstm_chunkwise
+from repro.models.griffin import init_rglru, rglru
+
+
+@given(t=st.integers(3, 60), chunk=st.integers(2, 24),
+       seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_mlstm_chunkwise_equals_sequential(t, chunk, seed):
+    B, H, D = 2, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (B, t, H, D))
+    k = jax.random.normal(ks[1], (B, t, H, D)) * 0.5
+    v = jax.random.normal(ks[2], (B, t, H, D))
+    ig = jax.random.normal(ks[3], (B, t, H)) * 2
+    fg = jax.random.normal(ks[4], (B, t, H)) * 2 + 2
+    h_seq, st_seq = mlstm_sequential(q, k, v, ig, fg)
+    h_chk, st_chk = mlstm_chunkwise(q, k, v, ig, fg, chunk=chunk)
+    np.testing.assert_allclose(h_seq, h_chk, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(st_seq[2], st_chk[2], rtol=1e-4, atol=1e-4)
+
+
+def test_mlstm_chunkwise_state_carry():
+    """Splitting a sequence across two chunkwise calls == one call."""
+    B, T, H, D = 1, 40, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    q = jax.random.normal(ks[0], (B, T, H, D))
+    k = jax.random.normal(ks[1], (B, T, H, D)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, D))
+    ig = jax.random.normal(ks[3], (B, T, H))
+    fg = jax.random.normal(ks[4], (B, T, H)) + 2
+    h_all, _ = mlstm_chunkwise(q, k, v, ig, fg, chunk=8)
+    h1, s1 = mlstm_chunkwise(q[:, :24], k[:, :24], v[:, :24],
+                             ig[:, :24], fg[:, :24], chunk=8)
+    h2, _ = mlstm_chunkwise(q[:, 24:], k[:, 24:], v[:, 24:],
+                            ig[:, 24:], fg[:, 24:], chunk=8, state=s1)
+    np.testing.assert_allclose(jnp.concatenate([h1, h2], 1), h_all,
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_rglru_matches_naive_and_carries_state():
+    B, T, D = 2, 30, 12
+    p = init_rglru(jax.random.PRNGKey(0), D)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, D))
+    y, hT = rglru(p, x)
+    # naive recurrence
+    import jax.nn as nn
+    x32 = x.astype(jnp.float32)
+    r = nn.sigmoid(x32 @ p["wa"] + p["ba"])
+    i = nn.sigmoid(x32 @ p["wx"] + p["bx"])
+    log_a = -8.0 * nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gate = jnp.sqrt(jnp.maximum(-jnp.expm1(2 * log_a), 1e-12))
+    u = gate * (i * x32)
+    h = jnp.zeros((B, D))
+    ys = []
+    for t in range(T):
+        h = a[:, t] * h + u[:, t]
+        ys.append(h)
+    np.testing.assert_allclose(y, jnp.stack(ys, 1), rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(hT, ys[-1], rtol=2e-4, atol=1e-5)
+    # split with state carry
+    y1, h1 = rglru(p, x[:, :17])
+    y2, _ = rglru(p, x[:, 17:], h0=h1)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y,
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_rglru_decay_in_unit_interval():
+    p = init_rglru(jax.random.PRNGKey(3), 16)
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 10, 16)) * 3
+    y, _ = rglru(p, x)
+    assert np.isfinite(np.asarray(y)).all()
