@@ -1,0 +1,49 @@
+"""Tuned-vs-heuristic block-plan latency (DESIGN.md §3.2 validation).
+
+Runs the empirical autotuner trial sweep (`run_trials`) over the same
+latency grid as `bench_fused_ce` and reports, per shape, the latency of
+the `choose_blocks` heuristic plan against the tuned winner.  Both numbers
+come from the SAME measurement sweep and the heuristic is always a member
+of the timed candidate set, so tuned <= heuristic holds on every shape by
+construction — the interesting column is how much the heuristic leaves on
+the table.
+
+On CPU the kernels run in interpret mode, so absolute numbers are not TPU
+latencies; the tuner machinery, the candidate ranking, and the cache are
+exactly what runs on TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import LossConfig
+from repro.kernels.fused_ce.autotune import run_trials
+from repro.tuning import get_cache, plan_key
+
+# mirror benchmarks.bench_fused_ce latency grid
+_LAT_GRID = [(256, 8192), (256, 32768), (1024, 8192), (1024, 32768)]
+_LAT_D = 512
+
+
+def bench_autotune(emit, *, trial_budget=6, trial_iters=1,
+                   dtype=jnp.float32):
+    """Emit tuned/heuristic latency per grid shape + the winning plan."""
+    cfg = LossConfig()
+    dtype = jnp.dtype(dtype)
+    backend = jax.default_backend()
+    cache = get_cache("")  # in-memory: report THIS sweep, not stale disk
+    for bt, v in _LAT_GRID:
+        res = run_trials(bt, v, _LAT_D, dtype, cfg=cfg,
+                         trial_budget=trial_budget,
+                         trial_iters=trial_iters)
+        cache.put(plan_key(bt, v, _LAT_D, dtype.name, backend),
+                  res.best, us=res.best_us)
+        hp, bp = res.heuristic, res.best
+        emit(f"tune_bt{bt}_v{v}", res.best_us,
+             f"heuristic_us={res.heuristic_us:.1f},"
+             f"heuristic={hp.block_rows}x{hp.block_v},"
+             f"tuned={bp.block_rows}x{bp.block_v},"
+             f"trials={len(res.trials)},"
+             f"speedup={res.heuristic_us / max(res.best_us, 1e-9):.3f}")

@@ -8,8 +8,11 @@ Prints ``name,us_per_call,derived`` CSV.
   §4.2 throughput  -> bench_train.bench_train_throughput
   Online-topk      -> bench_train.bench_streaming_topk (serving twin)
   §Roofline        -> bench_roofline.bench_roofline_summary (dry-run)
+  §3.2.1 windows   -> bench_autotune.bench_autotune (tuned vs heuristic
+                                                     block plans)
 
-Run:  PYTHONPATH=src python -m benchmarks.run [--only lat,mem,train,topk,roof]
+Run:  PYTHONPATH=src python -m benchmarks.run \
+          [--only lat,mem,train,topk,roof,tune]
 """
 
 from __future__ import annotations
@@ -20,7 +23,7 @@ import sys
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="lat,mem,train,topk,roof")
+    ap.add_argument("--only", default="lat,mem,train,topk,roof,tune")
     args = ap.parse_args()
     parts = set(args.only.split(","))
 
@@ -46,6 +49,9 @@ def main() -> None:
     if "roof" in parts:
         from benchmarks.bench_roofline import bench_roofline_summary
         bench_roofline_summary(emit)
+    if "tune" in parts:
+        from benchmarks.bench_autotune import bench_autotune
+        bench_autotune(emit)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,45 @@
+"""Compatibility shims for the span of jax versions this repo runs on.
+
+The sharding entry points moved around between jax releases:
+
+  * `jax.shard_map`            — public since 0.6; before that only
+    `jax.experimental.shard_map.shard_map`, whose replication-check kwarg
+    is spelled `check_rep` instead of `check_vma`.
+  * `jax.make_mesh(axis_types=...)` / `jax.sharding.AxisType` — newer
+    releases default mesh axes to Explicit mode and need `AxisType.Auto`
+    passed; 0.4.x has neither the kwarg nor the enum (Auto is implied).
+
+Everything else in the repo goes through these two helpers so the rest of
+the code can be written against the current API.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check_vma: bool = True) -> Callable:
+    """`jax.shard_map` with a fallback to the pre-0.6 experimental API."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+def make_mesh(axis_shapes: Sequence[int],
+              axis_names: Sequence[str]) -> jax.sharding.Mesh:
+    """Device mesh with Auto axis types on every jax version."""
+    axis_shapes = tuple(axis_shapes)
+    axis_names = tuple(axis_names)
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(AxisType.Auto,) * len(axis_names))
+    except (ImportError, AttributeError, TypeError):
+        return jax.make_mesh(axis_shapes, axis_names)

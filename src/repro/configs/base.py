@@ -17,6 +17,32 @@ import jax.numpy as jnp
 from repro.core.types import LossConfig
 
 # ---------------------------------------------------------------------------
+# kernel tuning
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TuningConfig:
+    """Block-plan autotuning knobs (DESIGN.md §3.2).
+
+    Attributes:
+      enabled: run the empirical autotuner for the fused-CE kernels; when
+        False every call site falls back to the `choose_blocks` heuristic.
+      cache_path: persistent JSON cache location.  None → the default
+        (``$REPRO_TUNING_CACHE`` or ``~/.cache/repro/blockplans.json``);
+        ``""`` → process-local in-memory cache (no persistence).
+      trial_budget: max candidate plans timed per (shape, dtype, backend)
+        key; <= 0 disables measurement (heuristic only).
+      trial_iters: timed iterations per candidate (the min is kept).
+    """
+
+    enabled: bool = False
+    cache_path: Optional[str] = None
+    trial_budget: int = 8
+    trial_iters: int = 2
+
+
+# ---------------------------------------------------------------------------
 # shape grid (assignment: LM shapes are seq_len x global_batch)
 # ---------------------------------------------------------------------------
 

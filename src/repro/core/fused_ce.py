@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.core.types import LossConfig, IGNORE_INDEX
 from repro.core.canonical import canonical_loss
 from repro.core.streaming import streaming_loss
+from repro.core.windows import BlockPlan
 
 __all__ = [
     "fused_cross_entropy",
@@ -52,6 +53,7 @@ def fused_cross_entropy(
     *,
     impl: str = "auto",
     cfg: Optional[LossConfig] = None,
+    plan: Optional[BlockPlan] = None,
 ) -> jax.Array:
     """Cross-entropy of `softmax(h @ w.T)` against `targets`, fused.
 
@@ -62,6 +64,10 @@ def fused_cross_entropy(
         marking masked positions.
       impl: one of 'auto' | 'canonical' | 'streaming' | 'pallas'.
       cfg: LossConfig (reduction, label smoothing, z-loss, softcap, padding).
+      plan: optional tuned `BlockPlan` (DESIGN.md §3) — the Pallas tile
+        shape / streaming window.  Ignored by 'canonical' (no tiling);
+        `None` lets each impl resolve its own default (pallas consults the
+        tuning cache).
 
     Returns:
       scalar loss ('mean'/'sum') or per-row losses ('none').
@@ -75,10 +81,10 @@ def fused_cross_entropy(
     if impl == "canonical":
         out = canonical_loss(hf, w, yf, cfg)
     elif impl == "streaming":
-        out = streaming_loss(hf, w, yf, cfg)
+        out = streaming_loss(hf, w, yf, cfg, plan=plan)
     else:  # pallas
         from repro.kernels.fused_ce.ops import pallas_loss  # lazy: optional dep
-        out = pallas_loss(hf, w, yf, cfg)
+        out = pallas_loss(hf, w, yf, cfg, plan=plan)
     if cfg.reduction == "none" and targets.ndim > 1:
         out = out.reshape(targets.shape)
     return out

@@ -31,6 +31,7 @@ kernels with global column ids via `col_offset`).
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional, Sequence, Tuple
 
@@ -39,27 +40,29 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.types import LossConfig
+from repro.core.windows import BlockPlan
 from repro.core.streaming import (
     streaming_stats, streaming_grads, _rows_from_stats)
 
 Mesh = jax.sharding.Mesh
 
 
-def _local_stats(h, w, y, cfg, impl, col_offset, total_valid):
+def _local_stats(h, w, y, cfg, impl, col_offset, total_valid, plan=None):
     if impl == "pallas":
         from repro.kernels.fused_ce.kernel import fwd_stats
-        return fwd_stats(h, w, y, cfg, col_offset=col_offset,
+        return fwd_stats(h, w, y, cfg, plan=plan, col_offset=col_offset,
                          total_valid=total_valid)
     return streaming_stats(h, w, y, cfg, col_offset=col_offset,
                            total_valid=total_valid)
 
 
 def _local_grads(h, w, y, lse, gamma, p_coeff, cfg, impl, col_offset,
-                 total_valid):
+                 total_valid, plan=None):
     if impl == "pallas":
         from repro.kernels.fused_ce.kernel import bwd_grads
-        return bwd_grads(h, w, y, lse, gamma, p_coeff, cfg,
+        return bwd_grads(h, w, y, lse, gamma, p_coeff, cfg, plan=plan,
                          col_offset=col_offset, total_valid=total_valid)
     # streaming_grads folds p_coeff internally from (gamma, z_loss, lse)
     dh, dw = streaming_grads(h, w, y, lse, gamma, cfg,
@@ -87,6 +90,7 @@ def make_sharded_loss(
     vocab_axis: str = "model",
     layout: str = "2d",
     impl: str = "streaming",
+    plan: Optional[BlockPlan] = None,
 ):
     """Build a differentiable sharded fused-CE:  f(h, w, y) -> scalar loss.
 
@@ -98,8 +102,17 @@ def make_sharded_loss(
       y: (N,)     sharded like h's rows.
 
     reduction must be 'mean' or 'sum' (a global scalar).
+
+    `plan` is the per-shard block plan (DESIGN.md §3.2): every device
+    streams its LOCAL (rows_local × vocab_local) panel, so tune/key on the
+    local shapes — rows_local = N / prod(rows_axes) and
+    vocab_local = V / mesh.shape[vocab_axis] — not the global ones.
+    For impl='streaming' only `plan.block_v` applies (window size);
+    for impl='pallas' it sets the kernel tile shape.
     """
     cfg = cfg or LossConfig()
+    if plan is not None and impl == "streaming":
+        cfg = dataclasses.replace(cfg, block_v=plan.block_v)
     if cfg.reduction not in ("mean", "sum"):
         raise ValueError("sharded loss requires a scalar reduction")
     if layout not in ("2d", "sp_gather"):
@@ -126,7 +139,8 @@ def make_sharded_loss(
         v_local = w_l.shape[0]
         total_valid = cfg.resolve_vocab(v_local * n_vocab_shards)
         lse_p, zt_p, zs_p = _local_stats(
-            h_l, w_l, y_l, cfg, impl, _offset(v_local), total_valid)
+            h_l, w_l, y_l, cfg, impl, _offset(v_local), total_valid,
+            plan=plan)
         lse = _combine_lse(lse_p, vocab_axis)
         z_tgt = jax.lax.psum(zt_p, vocab_axis)
         z_sum = jax.lax.psum(zs_p, vocab_axis)
@@ -144,7 +158,7 @@ def make_sharded_loss(
             loss = total
         return loss, lse, count
 
-    fwd_sharded = jax.shard_map(
+    fwd_sharded = shard_map(
         _fwd_shard, mesh=mesh,
         in_specs=(h_spec, w_spec, y_spec),
         out_specs=(P(), P(rows_axes), P()),
@@ -164,7 +178,7 @@ def make_sharded_loss(
         p_coeff = gamma_l * (1.0 + 2.0 * jnp.float32(cfg.z_loss) * lse_l)
         dh_p, dw_l = _local_grads(
             h_l, w_l, y_l, lse_l, gamma_l, p_coeff, cfg, impl,
-            _offset(v_local), total_valid)
+            _offset(v_local), total_valid, plan=plan)
         if layout == "sp_gather":
             # reduce-scatter dH back to the SP layout (paper Fig 3c reverse)
             dh = jax.lax.psum_scatter(dh_p, vocab_axis, scatter_dimension=0,
@@ -176,7 +190,7 @@ def make_sharded_loss(
         dw = jax.lax.psum(dw_l, rows_axes)
         return dh.astype(h_l.dtype), dw.astype(w_l.dtype)
 
-    bwd_sharded = jax.shard_map(
+    bwd_sharded = shard_map(
         _bwd_shard, mesh=mesh,
         in_specs=(h_spec, w_spec, y_spec,
                   P(rows_axes), P(rows_axes)),
@@ -204,7 +218,7 @@ def make_sharded_loss(
                 return gbar * keep / jnp.maximum(count, 1.0)
             return gbar * keep
 
-        gamma = jax.shard_map(
+        gamma = shard_map(
             _gamma, mesh=mesh,
             in_specs=(P(rows_axes), P()), out_specs=P(rows_axes),
             check_vma=False,

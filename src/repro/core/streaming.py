@@ -22,6 +22,7 @@ This implementation is also the semantic oracle for the Pallas TPU kernel in
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional, Tuple
 
@@ -31,6 +32,7 @@ import numpy as np
 
 from repro.core.types import LossConfig
 from repro.core.canonical import reduce_loss
+from repro.core.windows import BlockPlan
 
 _NEG_INF = float("-inf")
 
@@ -257,6 +259,7 @@ def streaming_loss(
     w: jax.Array,
     y: jax.Array,
     cfg: Optional[LossConfig] = None,
+    plan: Optional[BlockPlan] = None,
 ) -> jax.Array:
     """Fused projection+CE, streaming over vocab chunks.  See module doc.
 
@@ -265,6 +268,11 @@ def streaming_loss(
       w: (V_padded, d) lm_head weights.
       y: (N,) int targets.
       cfg: loss configuration (`block_v` is the paper's window size).
+      plan: optional tuned `BlockPlan` (DESIGN.md §3.2); the scan streams
+        whole rows, so only `plan.block_v` applies — it overrides
+        `cfg.block_v` as the window size.
     """
     cfg = cfg or LossConfig()
+    if plan is not None:
+        cfg = dataclasses.replace(cfg, block_v=plan.block_v)
     return _streaming_loss(h, w, y, cfg)

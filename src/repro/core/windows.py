@@ -15,7 +15,12 @@ The VMEM working set of one forward grid step is
 and must fit the ~16 MiB/core VMEM of TPU v5e with headroom for double
 buffering.  MXU efficiency wants every matmul dim to be a multiple of 128
 (lanes) and the sublane dim a multiple of 8.  `choose_blocks` encodes that
-napkin math so callers never hand-tune.
+napkin math so callers never hand-tune (DESIGN.md §3.1).
+
+`choose_blocks` is also the cold-cache fallback of the empirical
+autotuner (`repro.kernels.fused_ce.autotune`, DESIGN.md §3.2), which
+measures candidate plans with the real kernels and memoizes the winner
+in the persistent tuning cache (`repro.tuning`).
 """
 
 from __future__ import annotations

@@ -4,6 +4,11 @@
 `repro.core.streaming.streaming_loss` (identical semantics, identical
 custom_vjp structure), with the vocab streaming executed by the TPU kernels
 in `kernel.py` instead of a `lax.scan`.
+
+Block-plan selection (DESIGN.md §3): callers may pass an explicit
+`BlockPlan`; when they don't, the plan is resolved through the persistent
+tuning cache — the autotuned winner for this exact (shape, dtype, backend)
+when one has been recorded, else the `choose_blocks` heuristic.
 """
 
 from __future__ import annotations
@@ -18,29 +23,31 @@ import numpy as np
 from repro.core.types import LossConfig
 from repro.core.canonical import reduce_loss
 from repro.core.streaming import _rows_from_stats, _row_scale
+from repro.core.windows import BlockPlan
 from repro.kernels.fused_ce import kernel as K
+from repro.kernels.fused_ce.autotune import lookup_plan
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
-def _pallas_loss(h, w, y, cfg: LossConfig):
-    lse, z_tgt, z_sum = K.fwd_stats(h, w, y, cfg)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _pallas_loss(h, w, y, cfg: LossConfig, plan: Optional[BlockPlan]):
+    lse, z_tgt, z_sum = K.fwd_stats(h, w, y, cfg, plan=plan)
     valid = cfg.resolve_vocab(w.shape[0])
     rows = _rows_from_stats(lse, z_tgt, z_sum, y, valid, cfg)
     return reduce_loss(rows, y, cfg)
 
 
-def _fwd(h, w, y, cfg: LossConfig):
-    lse, z_tgt, z_sum = K.fwd_stats(h, w, y, cfg)
+def _fwd(h, w, y, cfg: LossConfig, plan: Optional[BlockPlan]):
+    lse, z_tgt, z_sum = K.fwd_stats(h, w, y, cfg, plan=plan)
     valid = cfg.resolve_vocab(w.shape[0])
     rows = _rows_from_stats(lse, z_tgt, z_sum, y, valid, cfg)
     return reduce_loss(rows, y, cfg), (h, w, y, lse)
 
 
-def _bwd(cfg: LossConfig, res, gbar):
+def _bwd(cfg: LossConfig, plan: Optional[BlockPlan], res, gbar):
     h, w, y, lse = res
     gamma = _row_scale(jnp.asarray(gbar, jnp.float32), y, cfg)
     p_coeff = gamma * (1.0 + 2.0 * jnp.float32(cfg.z_loss) * lse)
-    dh, dw = K.bwd_grads(h, w, y, lse, gamma, p_coeff, cfg)
+    dh, dw = K.bwd_grads(h, w, y, lse, gamma, p_coeff, cfg, plan=plan)
     dy = np.zeros(y.shape, dtype=jax.dtypes.float0)
     return dh.astype(h.dtype), dw.astype(w.dtype), dy
 
@@ -53,11 +60,18 @@ def pallas_loss(
     w: jax.Array,
     y: jax.Array,
     cfg: Optional[LossConfig] = None,
+    plan: Optional[BlockPlan] = None,
 ) -> jax.Array:
     """Fused projection+CE via the Pallas TPU kernels.
 
     On non-TPU backends the kernels run in interpret mode (Python reference
     execution of the kernel body) — bit-for-bit the same algorithm.
+
+    `plan` fixes the kernel tiling; `None` resolves it through the tuning
+    cache (tuned winner if this shape was autotuned, `choose_blocks`
+    otherwise).  Resolution is a trace-time dict lookup, never a trial run.
     """
     cfg = cfg or LossConfig()
-    return _pallas_loss(h, w, y, cfg)
+    if plan is None:
+        plan = lookup_plan(h.shape[0], w.shape[0], h.shape[-1], h.dtype)
+    return _pallas_loss(h, w, y, cfg, plan)

@@ -33,11 +33,12 @@ def ref_stats(h, w, y, cfg: LossConfig) -> Tuple[jax.Array, jax.Array, jax.Array
     """(lse, z_target, z_sum) per row — oracle for the forward kernel."""
     z, valid = _logits(h, w, cfg)
     lse = jax.nn.logsumexp(z, axis=-1)
-    y_safe = jnp.clip(y, 0, w.shape[0] - 1).astype(jnp.int32)
     col = jnp.arange(w.shape[0])
-    z_tgt = jnp.sum(jnp.where(col[None, :] == y[:, None], z, 0.0), axis=-1)
+    # valid-column guard matches the kernels: a target pointing at a masked
+    # pad column contributes 0 (the TP psum-merge convention), never -inf
+    is_tgt = (col[None, :] == y[:, None]) & (col[None, :] < valid)
+    z_tgt = jnp.sum(jnp.where(is_tgt, z, 0.0), axis=-1)
     z_sum = jnp.sum(jnp.where(col[None, :] < valid, z, 0.0), axis=-1)
-    del y_safe
     return lse, z_tgt, z_sum
 
 

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer
+from repro.configs.base import TuningConfig
 from repro.data import DataConfig, SyntheticLM, ShardedLoader
 from repro.distributed.fault import PreemptionHandler, StragglerMonitor
 from repro.launch.mesh import make_local_mesh
@@ -27,6 +28,7 @@ from repro.sharding.rules import AxisRules
 from repro.train import (TrainConfig, build_train_step, train_loop,
                          resume_or_init, state_shardings)
 from repro.train.state import state_specs
+from repro.train.step import make_tuning_prewarm
 
 
 def main(argv=None):
@@ -43,6 +45,12 @@ def main(argv=None):
     ap.add_argument("--loss-impl", default="streaming",
                     choices=("streaming", "pallas", "canonical", "sharded"))
     ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--autotune", action="store_true",
+                    help="empirically tune the fused-CE block plan at "
+                         "startup (memoized in the tuning cache)")
+    ap.add_argument("--tuning-cache", default=None,
+                    help="tuning-cache JSON path ('' = in-memory only; "
+                         "default: $REPRO_TUNING_CACHE or ~/.cache/repro)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
@@ -67,7 +75,9 @@ def main(argv=None):
         warmup_steps=max(args.steps // 10, 1), total_steps=args.steps,
         loss_impl=args.loss_impl,
         loss_block_v=min(2048, arch.padded_vocab),
-        grad_accum=args.grad_accum)
+        grad_accum=args.grad_accum,
+        tuning=TuningConfig(enabled=args.autotune,
+                            cache_path=args.tuning_cache))
     init_fn, step_fn = build_train_step(arch, tc, rules)
 
     ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
@@ -89,11 +99,17 @@ def main(argv=None):
                     global_batch=args.global_batch, seed=args.seed)
     loader = ShardedLoader(SyntheticLM(dc), mesh=mesh)
 
+    on_start = None
+    if args.autotune:
+        on_start = make_tuning_prewarm(
+            arch, tc, n_rows=args.global_batch * args.seq_len, rules=rules)
+
     state, history = train_loop(
         state=state, step_fn=jstep, data=loader, num_steps=args.steps,
         checkpointer=ck, checkpoint_every=args.ckpt_every,
         log_every=args.log_every,
-        preemption=PreemptionHandler(), straggler=StragglerMonitor())
+        preemption=PreemptionHandler(), straggler=StragglerMonitor(),
+        on_start=on_start)
     if history:
         first = history[0][1]["loss"]
         last = history[-1][1]["loss"]

@@ -182,7 +182,8 @@ def moe_layer(
         return jax.lax.psum(y, "model")
 
     w_spec = P("model", None, None)
-    out = jax.shard_map(
+    from repro.compat import shard_map
+    out = shard_map(
         local, mesh=mesh,
         in_specs=([w_spec] * len(w_names), row3, row2, row3),
         out_specs=row3, check_vma=False,

@@ -33,12 +33,25 @@ def train_loop(
     preemption: Optional[PreemptionHandler] = None,
     straggler: Optional[StragglerMonitor] = None,
     metrics_hook: Optional[Callable[[int, Dict[str, float]], None]] = None,
+    on_start: Optional[Callable[[], Any]] = None,
 ):
-    """Runs up to `num_steps` steps; returns (state, history)."""
+    """Runs up to `num_steps` steps; returns (state, history).
+
+    `on_start` is a one-time startup hook run before the first step — the
+    intended use is block-plan autotuning (`train.step.make_tuning_prewarm`)
+    so kernel trial timing happens once here, outside the recorded per-step
+    timings; its wall time is logged separately.
+    """
     preemption = (preemption or PreemptionHandler()).install()
     straggler = straggler or StragglerMonitor()
     history = []
     start_step = int(jax.device_get(state["step"]))
+
+    if on_start is not None:
+        t0 = time.perf_counter()
+        on_start()
+        log.info("startup hook finished in %.2fs",
+                 time.perf_counter() - t0)
 
     it = iter(data)
     for i in range(start_step, num_steps):

@@ -1,0 +1,6 @@
+"""Persistent kernel-tuning state (block-plan cache; DESIGN.md §3.2)."""
+
+from repro.tuning.cache import (TuningCache, get_cache, plan_key,
+                                default_cache_path)
+
+__all__ = ["TuningCache", "get_cache", "plan_key", "default_cache_path"]

@@ -1,0 +1,166 @@
+"""Persistent block-plan tuning cache (DESIGN.md §3.2.2).
+
+Maps a problem key — ``(n_rows, vocab, d, dtype, backend)`` — to the
+empirically best :class:`~repro.core.windows.BlockPlan` found by the
+autotuner in ``repro.kernels.fused_ce.autotune``.  The cache is a small
+JSON file so tuning results survive process restarts and can be shipped
+alongside a training job (copy the file, or point ``REPRO_TUNING_CACHE``
+at a shared location).
+
+The backend is part of the key because a plan timed in interpret mode on
+CPU says nothing about the TPU winner (and vice versa); dtype is part of
+the key because the VMEM working set doubles from bf16 to f32 inputs.
+
+A missing or corrupt cache file is simply a cold cache — every consumer
+falls back to the :func:`~repro.core.windows.choose_blocks` heuristic.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from typing import Dict, Optional
+
+from repro.core.windows import BlockPlan
+
+_VERSION = 1
+_ENV_PATH = "REPRO_TUNING_CACHE"
+_DISABLED = ("", "0", "off", "none")
+_MEMORY_KEY = ":memory:"
+
+
+def plan_key(n_rows: int, vocab: int, d: int, dtype: str,
+             backend: str) -> str:
+    """Canonical cache key: ``"<n>x<V>x<d>:<dtype>:<backend>"``."""
+    return f"{int(n_rows)}x{int(vocab)}x{int(d)}:{dtype}:{backend}"
+
+
+def default_cache_path() -> Optional[str]:
+    """Default on-disk location; ``REPRO_TUNING_CACHE`` overrides it
+    (set to ``""``/``"off"`` to force a process-local in-memory cache)."""
+    env = os.environ.get(_ENV_PATH)
+    if env is not None:
+        return None if env.strip().lower() in _DISABLED else env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "blockplans.json")
+
+
+class TuningCache:
+    """JSON-backed plan memo; in-memory only when ``path`` is None.
+
+    Thread-safe; loading is lazy so constructing a cache never touches
+    the filesystem.  ``save()`` writes atomically (tmp file + rename).
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._entries: Dict[str, dict] = {}
+        self._lock = threading.Lock()
+        self._loaded = False
+
+    # -- persistence --------------------------------------------------
+
+    def _load_locked(self) -> None:
+        if self._loaded:
+            return
+        self._loaded = True
+        if not self.path:
+            return
+        try:
+            with open(self.path, "r", encoding="utf-8") as f:
+                raw = json.load(f)
+            if isinstance(raw, dict) and raw.get("version") == _VERSION:
+                entries = raw.get("entries", {})
+                if isinstance(entries, dict):
+                    # file entries never clobber fresher in-process puts
+                    for k, v in entries.items():
+                        self._entries.setdefault(k, v)
+        except (OSError, ValueError):
+            pass  # missing/corrupt file == cold cache
+
+    def save(self) -> None:
+        """Persist to ``self.path`` (no-op for in-memory caches)."""
+        if not self.path:
+            return
+        with self._lock:
+            self._load_locked()
+            # snapshot: json.dump below runs outside the lock and a
+            # concurrent put() must not mutate the dict mid-serialization
+            payload = {"version": _VERSION, "entries": dict(self._entries)}
+        target = os.path.abspath(self.path)
+        os.makedirs(os.path.dirname(target), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(target),
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, target)
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+    # -- accessors ----------------------------------------------------
+
+    def get(self, key: str) -> Optional[BlockPlan]:
+        with self._lock:
+            self._load_locked()
+            e = self._entries.get(key)
+        if not isinstance(e, dict):
+            return None
+        try:
+            return BlockPlan(int(e["block_rows"]), int(e["block_v"]),
+                             int(e.get("vmem_bytes", 0)))
+        except (KeyError, TypeError, ValueError):
+            return None
+
+    def put(self, key: str, plan: BlockPlan,
+            us: Optional[float] = None) -> None:
+        entry = {"block_rows": int(plan.block_rows),
+                 "block_v": int(plan.block_v),
+                 "vmem_bytes": int(plan.vmem_bytes)}
+        if us is not None:
+            entry["us"] = round(float(us), 2)
+        with self._lock:
+            self._load_locked()
+            self._entries[key] = entry
+
+    def clear(self) -> None:
+        with self._lock:
+            self._loaded = True
+            self._entries.clear()
+
+    def __len__(self) -> int:
+        with self._lock:
+            self._load_locked()
+            return len(self._entries)
+
+
+_SINGLETONS: Dict[str, TuningCache] = {}
+_SINGLETONS_LOCK = threading.Lock()
+
+
+def get_cache(path: Optional[str] = None) -> TuningCache:
+    """Process-wide singleton cache per resolved path.
+
+    ``path=None`` → the default location (honouring ``REPRO_TUNING_CACHE``);
+    ``path=""``  → a shared in-memory cache (no persistence).
+    The singleton is what makes "tune once at startup, reuse per step"
+    hold across re-traces: every lookup for the same path sees the same
+    in-memory entries without re-reading the file.
+    """
+    if path is None:
+        path = default_cache_path()
+    if not path:
+        key, real = _MEMORY_KEY, None
+    else:
+        real = os.path.abspath(os.path.expanduser(path))
+        key = real
+    with _SINGLETONS_LOCK:
+        cache = _SINGLETONS.get(key)
+        if cache is None:
+            cache = _SINGLETONS[key] = TuningCache(real)
+        return cache

@@ -1,0 +1,230 @@
+"""Autotuner + tuning-cache tests (CPU interpret mode, tiny shapes).
+
+Covers: cache round-trip/corruption, deterministic plan resolution for a
+fixed key, the choose_blocks cold-cache fallback, candidate enumeration
+invariants, choose_blocks edge cases (decode-tiny rows, VMEM shrink
+loop), and end-to-end plan threading through pallas_loss/streaming_loss.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LossConfig, streaming_loss
+from repro.core.windows import (BlockPlan, choose_blocks, tile_bytes,
+                                _DEFAULT_BUDGET)
+from repro.kernels.fused_ce import autotune as at
+from repro.kernels.fused_ce.ops import pallas_loss
+from repro.tuning import TuningCache, get_cache, plan_key
+
+N, D, V = 16, 32, 256
+
+
+def _problem(dtype=jnp.float32, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    h = (jax.random.normal(k1, (N, D)) * 0.5).astype(dtype)
+    w = (jax.random.normal(k2, (V, D)) * 0.05).astype(dtype)
+    y = jax.random.randint(k3, (N,), 0, V)
+    return h, w, y
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_round_trip(tmp_path):
+    path = str(tmp_path / "plans.json")
+    key = plan_key(N, V, D, "float32", "cpu")
+    c1 = TuningCache(path)
+    assert c1.get(key) is None and len(c1) == 0
+    plan = BlockPlan(8, 128, 1234)
+    c1.put(key, plan, us=42.0)
+    c1.save()
+    # a fresh instance reads the same winner back from disk
+    c2 = TuningCache(path)
+    assert c2.get(key) == plan
+    assert len(c2) == 1
+
+
+def test_cache_corrupt_or_missing_file_is_cold(tmp_path):
+    missing = TuningCache(str(tmp_path / "nope.json"))
+    assert missing.get("k") is None
+
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    c = TuningCache(str(bad))
+    assert c.get("k") is None
+    # still writable afterwards: corrupt file is replaced atomically
+    c.put("k", BlockPlan(8, 128, 0))
+    c.save()
+    assert TuningCache(str(bad)).get("k") == BlockPlan(8, 128, 0)
+
+
+def test_get_cache_memory_singleton():
+    a, b = get_cache(""), get_cache("")
+    assert a is b
+    assert a.path is None  # never persisted
+
+
+# ---------------------------------------------------------------------------
+# plan resolution
+# ---------------------------------------------------------------------------
+
+
+def test_lookup_plan_empty_cache_falls_back_to_choose_blocks():
+    cache = TuningCache(None)
+    plan = at.lookup_plan(N, V, D, jnp.float32, cache=cache)
+    assert plan == choose_blocks(N, V, D, in_bytes=4)
+
+
+def test_lookup_plan_prefers_cached_winner():
+    cache = TuningCache(None)
+    tuned = BlockPlan(16, 128, 777)
+    cache.put(plan_key(N, V, D, "float32", jax.default_backend()), tuned)
+    assert at.lookup_plan(N, V, D, jnp.float32, cache=cache) == tuned
+
+
+def test_autotune_deterministic_for_fixed_key():
+    cache = TuningCache(None)
+    p1 = at.autotune_plan(N, V, D, jnp.float32, cfg=LossConfig(),
+                          cache=cache, trial_budget=3, trial_iters=1)
+    # second call must be a pure cache hit — same plan, no re-measurement
+    p2 = at.autotune_plan(N, V, D, jnp.float32, cache=cache,
+                          trial_budget=0)
+    assert p1 == p2
+    assert len(cache) == 1
+
+
+def test_autotune_zero_budget_is_heuristic_without_measurement(monkeypatch):
+    def boom(*a, **kw):  # measurement must never run with budget <= 0
+        raise AssertionError("measure_plan called")
+    monkeypatch.setattr(at, "measure_plan", boom)
+    plan = at.autotune_plan(N, V, D, jnp.float32, cache=TuningCache(None),
+                            trial_budget=0)
+    assert plan == choose_blocks(N, V, D, in_bytes=4)
+
+
+def test_run_trials_picks_min_and_never_beats_heuristic(monkeypatch):
+    # fake clock: "smaller tiles are faster" — forces a non-heuristic winner
+    monkeypatch.setattr(
+        at, "measure_plan",
+        lambda h, w, y, cfg, plan, **kw: float(plan.block_rows *
+                                               plan.block_v))
+    res = at.run_trials(N, V, D, jnp.float32, trial_iters=1)
+    assert res.best_us <= res.heuristic_us
+    assert res.best_us == min(us for _, us in res.trials)
+    assert res.heuristic.shape in {p.shape for p, _ in res.trials}
+
+
+def test_autotune_all_trials_failed_not_memoized(monkeypatch, tmp_path):
+    monkeypatch.setattr(
+        at, "measure_plan",
+        lambda *a, **kw: (_ for _ in ()).throw(RuntimeError("boom")))
+    cache = TuningCache(str(tmp_path / "plans.json"))
+    plan = at.autotune_plan(N, V, D, jnp.float32, cache=cache,
+                            trial_budget=2, trial_iters=1)
+    # falls back to the heuristic and must NOT persist the failure
+    # (no Infinity in the JSON, and tuning retries next time)
+    assert plan == choose_blocks(N, V, D, in_bytes=4)
+    assert len(cache) == 0
+
+
+def test_run_trials_survives_failing_candidates(monkeypatch):
+    heur = choose_blocks(N, V, D, in_bytes=4)
+
+    def flaky(h, w, y, cfg, plan, **kw):
+        if plan.shape != heur.shape:
+            raise RuntimeError("interpret-mode resource limit")
+        return 123.0
+    monkeypatch.setattr(at, "measure_plan", flaky)
+    res = at.run_trials(N, V, D, jnp.float32, trial_iters=1)
+    assert res.best.shape == heur.shape and res.best_us == 123.0
+
+
+# ---------------------------------------------------------------------------
+# candidate enumeration
+# ---------------------------------------------------------------------------
+
+
+def test_candidate_plans_budget_alignment_and_heuristic_membership():
+    cands = at.candidate_plans(1024, 32768, 512, in_bytes=4)
+    heur = choose_blocks(1024, 32768, 512, in_bytes=4)
+    shapes = {p.shape for p in cands}
+    assert heur.shape in shapes
+    assert len(shapes) == len(cands)  # no duplicates
+    products = [p.block_rows * p.block_v for p in cands]
+    assert products == sorted(products, reverse=True)  # biggest first
+    for p in cands:
+        assert p.block_rows % 8 == 0 and p.block_v % 128 == 0
+        if p.shape != heur.shape:
+            assert tile_bytes(p.block_rows, p.block_v, 512, 4) <= \
+                _DEFAULT_BUDGET
+
+
+def test_candidate_plans_caps_at_problem_size():
+    cands = at.candidate_plans(4, 200, 32)
+    assert all(p.block_rows == 8 for p in cands)       # round_up(4, 8)
+    assert all(p.block_v <= 256 for p in cands)        # round_up(200, 128)
+
+
+# ---------------------------------------------------------------------------
+# choose_blocks edge cases
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 3, 7])
+def test_choose_blocks_tiny_decode_rows(n):
+    """decode shapes (B*T == B): rows tile floors at one sublane group."""
+    plan = choose_blocks(n, 262144, 4096, in_bytes=2)
+    assert plan.block_rows == 8
+    assert plan.block_v % 128 == 0
+    assert tile_bytes(plan.block_rows, plan.block_v, 4096) <= \
+        _DEFAULT_BUDGET
+
+
+def test_choose_blocks_vmem_shrink_loop():
+    """an unsatisfiable budget bottoms out at the aligned floor tiles
+    instead of looping forever or misaligning."""
+    plan = choose_blocks(4096, 262144, 4096, in_bytes=2,
+                         vmem_budget=200_000)
+    assert (plan.block_rows, plan.block_v) == (8, 128)
+
+
+def test_choose_blocks_fits_generous_budget():
+    plan = choose_blocks(4096, 262144, 1024, in_bytes=2)
+    assert tile_bytes(plan.block_rows, plan.block_v, 1024) <= \
+        _DEFAULT_BUDGET
+    assert plan.block_rows % 8 == 0 and plan.block_v % 128 == 0
+
+
+# ---------------------------------------------------------------------------
+# plan threading end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_pallas_and_streaming_accept_tuned_plan():
+    h, w, y = _problem()
+    cfg = LossConfig(block_v=64)
+    cache = TuningCache(None)
+    tuned = at.autotune_plan(N, V, D, jnp.float32, cfg=cfg, cache=cache,
+                             trial_budget=2, trial_iters=1)
+    base = streaming_loss(h, w, y, cfg)
+    via_stream = streaming_loss(h, w, y, cfg, plan=tuned)
+    via_pallas = pallas_loss(h, w, y, cfg, plan=tuned)
+    np.testing.assert_allclose(float(base), float(via_stream), rtol=1e-5)
+    np.testing.assert_allclose(float(base), float(via_pallas), rtol=1e-5)
+
+
+def test_pallas_loss_grads_with_explicit_plan():
+    h, w, y = _problem()
+    cfg = LossConfig(block_v=64)
+    plan = BlockPlan(8, 128, 0)
+    ref = jax.grad(lambda h, w: streaming_loss(h, w, y, cfg), (0, 1))(h, w)
+    got = jax.grad(lambda h, w: pallas_loss(h, w, y, cfg, plan=plan),
+                   (0, 1))(h, w)
+    np.testing.assert_allclose(np.asarray(ref[0]), np.asarray(got[0]),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(ref[1]), np.asarray(got[1]),
+                               rtol=2e-5, atol=2e-5)

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the 'test' extra "
+    "(pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.models.xlstm import mlstm_sequential, mlstm_chunkwise
 from repro.models.griffin import init_rglru, rglru
