@@ -10,9 +10,11 @@ Prints ``name,us_per_call,derived`` CSV.
   §Roofline        -> bench_roofline.bench_roofline_summary (dry-run)
   §3.2.1 windows   -> bench_autotune.bench_autotune (tuned vs heuristic
                                                      block plans)
+  §5 serving       -> bench_serve.bench_serve (continuous vs fixed-group
+                                               batching, logits-free check)
 
 Run:  PYTHONPATH=src python -m benchmarks.run \
-          [--only lat,mem,train,topk,roof,tune]
+          [--only lat,mem,train,topk,roof,tune,serve]
 """
 
 from __future__ import annotations
@@ -23,7 +25,7 @@ import sys
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="lat,mem,train,topk,roof,tune")
+    ap.add_argument("--only", default="lat,mem,train,topk,roof,tune,serve")
     args = ap.parse_args()
     parts = set(args.only.split(","))
 
@@ -52,6 +54,9 @@ def main() -> None:
     if "tune" in parts:
         from benchmarks.bench_autotune import bench_autotune
         bench_autotune(emit)
+    if "serve" in parts:
+        from benchmarks.bench_serve import bench_serve
+        bench_serve(emit)
 
 
 if __name__ == "__main__":

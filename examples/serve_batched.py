@@ -1,9 +1,9 @@
-"""Batched serving with the streaming top-k sampler.
+"""Continuous-batching serving with the Pallas streaming top-k sampler.
 
-Submits a handful of variable-length requests to the waiting-room
-scheduler; the engine prefords + decodes them in fixed batches with a KV
-cache, sampling WITHOUT materializing (B, V) logits (the serving twin of
-the paper's idea).
+Submits a handful of variable-length requests to the continuous
+scheduler; slots prefill/recycle independently while the engine decodes,
+sampling WITHOUT materializing (B, V) logits (the serving twin of the
+paper's idea).  Tokens stream per request as they are generated.
 
     PYTHONPATH=src python examples/serve_batched.py [--arch xlstm-125m]
 """
@@ -15,7 +15,7 @@ import jax
 import numpy as np
 
 from repro.models.registry import get_arch, init_params
-from repro.serve import ServeConfig, Engine, BatchScheduler
+from repro.serve import ServeConfig, Engine, ContinuousScheduler
 
 
 def main():
@@ -25,34 +25,46 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--top-p", type=float, default=None)
     args = ap.parse_args()
 
     arch = get_arch(args.arch, reduced=True)
     params = init_params(arch, jax.random.PRNGKey(0))
+    enc_len = 16 if arch.family == "encdec" else None
     fe = None
     if arch.family == "encdec":
         fe = jax.random.normal(jax.random.PRNGKey(1),
-                               (3, 16, arch.cfg.d_model))
+                               (1, enc_len, arch.cfg.d_model))
     eng = Engine(arch, params,
                  ServeConfig(batch_size=3, max_len=128,
-                             temperature=args.temperature, top_k=20),
-                 frontend_embeds=fe)
-    sched = BatchScheduler(eng, max_new_tokens=args.max_new)
+                             temperature=args.temperature, top_k=20,
+                             top_p=args.top_p, enc_len=enc_len))
 
+    streamed = []
+
+    def on_token(rid, tok, done):
+        streamed.append((rid, tok))
+        if done:
+            print(f"  request {rid} finished ({tok})")
+
+    sched = ContinuousScheduler(eng, max_new_tokens=args.max_new,
+                                on_token=on_token)
     rng = np.random.default_rng(0)
     ids = []
     for r in range(args.requests):
         prompt = rng.integers(1, arch.vocab_size,
                               (int(rng.integers(4, 12)),)).astype(np.int32)
-        ids.append(sched.submit(prompt))
+        ids.append(sched.submit(prompt, frontend_embeds=fe))
         print(f"request {ids[-1]}: prompt len {len(prompt)}")
 
     t0 = time.perf_counter()
     results = sched.run()
     dt = time.perf_counter() - t0
     total = sum(len(v) for v in results.values())
-    print(f"\ngenerated {total} tokens for {len(results)} requests "
-          f"in {dt:.2f}s (incl. compile)")
+    print(f"\ngenerated {total} tokens ({len(streamed)} streamed) for "
+          f"{len(results)} requests in {dt:.2f}s (incl. compile; "
+          f"occupancy {sched.occupancy:.2f}, "
+          f"{sched.decode_steps} decode steps)")
     for rid in ids:
         print(f"  request {rid}: {results[rid][:8]} ...")
 

@@ -95,6 +95,51 @@ def collective_stats(hlo_text: str) -> CollectiveStats:
     return CollectiveStats(dict(bytes_by), dict(count_by))
 
 
+# ---------------------------------------------------------------------------
+# logits-free decode check (DESIGN.md §5.4)
+# ---------------------------------------------------------------------------
+
+_DEF_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s(]*))")
+
+
+def logits_intermediates(hlo_text: str, batch: int, vocab: int
+                         ) -> List[str]:
+    """Lines that DEFINE a `(batch, vocab)`-shaped tensor.
+
+    A materialized decode logits tensor shows up in HLO as a result whose
+    non-unit dims are exactly {batch, vocab} (in either order, any number
+    of size-1 dims) — for batch == 1 that degenerates to {vocab} alone,
+    so a `[1, V]` (or `[V]`) tensor is still caught.  Only result types
+    are inspected, so weights like the `(V, d)` lm_head never match;
+    callers should check both the raw and the padded vocabulary.
+    Returns the offending lines (empty == logits-free).
+    """
+    want = sorted({int(batch), int(vocab)} - {1})
+    hits: List[str] = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.search(line)
+        if not m:
+            continue
+        for _, dims in _SHAPE_RE.findall(m.group(1)):
+            ds = [int(x) for x in dims.split(",") if x]
+            if sorted(x for x in ds if x != 1) == want:
+                hits.append(line.strip())
+                break
+    return hits
+
+
+def assert_logits_free(hlo_text: str, batch: int, vocabs) -> None:
+    """Raise if the module materializes a (batch, V) tensor for any V in
+    `vocabs` (pass both `arch.vocab_size` and `arch.padded_vocab`)."""
+    for v in vocabs:
+        hits = logits_intermediates(hlo_text, batch, v)
+        if hits:
+            raise AssertionError(
+                f"({batch}, {v}) logits intermediate(s) in compiled "
+                f"module:\n  " + "\n  ".join(hits[:8]))
+
+
 def cost_dict(compiled) -> Dict[str, float]:
     ca = compiled.cost_analysis()
     if isinstance(ca, (list, tuple)):

@@ -1,0 +1,195 @@
+"""Pallas TPU kernel: streaming per-row top-k of ``h @ W^T`` (DESIGN.md §5.3).
+
+The decode-side sibling of the fused-CE forward (`kernels/fused_ce`): the
+`(B, V)` logits tensor for a sampling step is never written to HBM.  The
+kernel shares the fused-CE structure wholesale —
+
+  * grid ``(R, Vb)`` with the vocab axis innermost and **sequential**
+    ("arbitrary" dimension semantics), rows parallel;
+  * the logits tile ``z = H_tile @ W_tile^T`` exists only in VMEM/VREGs,
+    computed on the MXU with f32 accumulation and the optional tanh
+    softcap applied in-tile;
+  * the same masking convention: a column is valid iff it is structurally
+    real (``local_col < V_orig``) and its global id (``local + offset``)
+    is ``< valid_vocab``;
+  * `BlockPlan` tiling resolved through the same autotune/cache stack
+    (`kernels/sample_topk/autotune.py`, cache key namespaced ``topk<k>``).
+
+Instead of online-softmax scalars, the carried VMEM scratch is the running
+per-row top-k — ``(block_rows, k_pad)`` values (f32) and global indices
+(int32), sorted descending.  Each vocab step merges the logits tile into
+that state with k extraction passes (max + tie-break-by-lowest-index, both
+plain VPU reductions — no sort network, no `lax.top_k`, nothing Mosaic
+can't lower).  Selection order makes the result bit-identical to
+`jax.lax.top_k` of the masked dense logits at every FINITE position,
+ties included: the carried state always holds lower global ids than the
+current tile, state wins value ties, and within both state and tile the
+lowest index wins.  Positions whose value is -inf (k exceeding the
+valid vocabulary) carry unspecified indices.
+
+The pure-JAX `serve/sampler.py:streaming_topk` is the semantic oracle
+(`tests/test_sample_topk.py` holds the equivalence, hypothesis-driven).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.windows import BlockPlan, choose_blocks
+
+_NEG_INF = float("-inf")
+_LANE = 128
+# sentinel > any global vocab id; used by the lowest-index tie-break scans
+# (plain int — a jnp scalar here would be a captured constant in the kernel)
+_BIG_IDX = 2 ** 30
+
+
+def _compiler_params():
+    """First grid axis parallel (rows), second sequential (vocab scan)."""
+    sem = ("parallel", "arbitrary")
+    try:
+        return pltpu.CompilerParams(dimension_semantics=sem)
+    except (AttributeError, TypeError):  # pragma: no cover - older jax
+        return pltpu.TPUCompilerParams(dimension_semantics=sem)
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _topk_kernel(off_ref, h_ref, w_ref,          # inputs
+                 vals_ref, idx_ref,              # outputs (bm, k_pad)
+                 vals_sc, idx_sc,                # scratch  (bm, k_pad)
+                 *, k: int, valid: int, v_orig: int, bv: int, num_v: int,
+                 softcap: Optional[float]):
+    v = pl.program_id(1)
+
+    @pl.when(v == 0)
+    def _init():
+        vals_sc[...] = jnp.full_like(vals_sc[...], _NEG_INF)
+        idx_sc[...] = jnp.zeros_like(idx_sc[...])
+
+    # (bm, bv) logits tile on the MXU, f32 accumulate; softcap in-tile
+    z = jax.lax.dot_general(
+        h_ref[...], w_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    if softcap is not None:
+        cap = jnp.float32(softcap)
+        z = cap * jnp.tanh(z / cap)
+    bm = z.shape[0]
+    local_col = v * bv + jax.lax.broadcasted_iota(jnp.int32, (bm, bv), 1)
+    col = local_col + off_ref[0, 0]                        # global vocab id
+    z = jnp.where((local_col < v_orig) & (col < valid), z, _NEG_INF)
+
+    kp = vals_sc.shape[1]
+    slot = jax.lax.broadcasted_iota(jnp.int32, (bm, kp), 1)
+
+    def extract(j, carry):
+        """Move the best remaining candidate of (state ∪ tile) to slot j."""
+        z, state_v, new_v, new_i = carry
+        # best remaining tile candidate; lowest global id wins value ties
+        tmax = jnp.max(z, axis=1, keepdims=True)                  # (bm, 1)
+        tcol = jnp.min(jnp.where(z == tmax, col, _BIG_IDX),
+                       axis=1, keepdims=True)
+        # best remaining state candidate; lowest slot == lowest global id
+        smax = jnp.max(state_v, axis=1, keepdims=True)
+        sslot = jnp.min(jnp.where(state_v == smax, slot, _BIG_IDX),
+                        axis=1, keepdims=True)
+        sidx = jnp.sum(jnp.where(slot == sslot, idx_sc[...], 0),
+                       axis=1, keepdims=True)
+        # state entries carry strictly lower ids than this tile, so the
+        # state wins value ties (== lax.top_k's lowest-index-first order)
+        take_state = smax >= tmax
+        best_v = jnp.where(take_state, smax, tmax)
+        best_i = jnp.where(take_state, sidx, tcol)
+        write = slot == j
+        new_v = jnp.where(write, best_v, new_v)
+        new_i = jnp.where(write, best_i, new_i)
+        # retire the winner from its source
+        state_v = jnp.where(take_state & (slot == sslot), _NEG_INF, state_v)
+        z = jnp.where(jnp.logical_not(take_state) & (col == tcol),
+                      _NEG_INF, z)
+        return z, state_v, new_v, new_i
+
+    init = (z, vals_sc[...],
+            jnp.full((bm, kp), _NEG_INF, jnp.float32),
+            jnp.zeros((bm, kp), jnp.int32))
+    _, _, new_v, new_i = jax.lax.fori_loop(0, k, extract, init)
+    vals_sc[...] = new_v
+    idx_sc[...] = new_i
+
+    @pl.when(v == num_v - 1)
+    def _epilogue():
+        vals_ref[...] = new_v
+        idx_ref[...] = new_i
+
+
+def topk_scores(
+    h: jax.Array, w: jax.Array, k: int, *,
+    valid_vocab: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    plan: Optional[BlockPlan] = None,
+    interpret: Optional[bool] = None,
+    col_offset=0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-row top-k of ``h @ w.T`` via the streaming Pallas kernel.
+
+    h: (B, d); w: (V, d).  Returns (values (B, k) f32, global indices
+    (B, k) int32), sorted descending, bit-identical to ``jax.lax.top_k``
+    of the masked dense logits at every finite position (ties break to
+    the lowest index).  Rows and vocab are padded internally to the block
+    plan; when k exceeds the valid vocabulary the tail positions hold
+    ``-inf`` values and unspecified indices.
+
+    Tensor-parallel shards pass `col_offset` (global id of w's first row)
+    and a global `valid_vocab`; per-shard (k-best values, ids) then merge
+    with one small all-gather + host-side top-k — never the logits.
+    """
+    if k < 1:
+        raise ValueError(f"top-k needs k >= 1, got {k}")
+    n, d = h.shape
+    v_orig = w.shape[0]
+    valid = v_orig if valid_vocab is None else valid_vocab
+    plan = plan or choose_blocks(n, v_orig, d, in_bytes=h.dtype.itemsize)
+    bm, bv = plan.block_rows, plan.block_v
+    interpret = _interpret_default() if interpret is None else interpret
+    kp = -(-k // _LANE) * _LANE                     # lane-aligned state
+
+    n_pad = (-n) % bm
+    v_pad = (-v_orig) % bv
+    if n_pad:
+        h = jnp.pad(h, ((0, n_pad), (0, 0)))
+    if v_pad:
+        w = jnp.pad(w, ((0, v_pad), (0, 0)))
+    np_, vp = h.shape[0], w.shape[0]
+    num_r, num_v = np_ // bm, vp // bv
+
+    off = jnp.asarray(col_offset, jnp.int32).reshape(1, 1)
+    kern = functools.partial(_topk_kernel, k=k, valid=valid, v_orig=v_orig,
+                             bv=bv, num_v=num_v, softcap=logit_softcap)
+    out_spec = pl.BlockSpec((bm, kp), lambda r, v: (r, 0))
+    vals, idxs = pl.pallas_call(
+        kern,
+        grid=(num_r, num_v),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda r, v: (0, 0)),      # col offset
+            pl.BlockSpec((bm, d), lambda r, v: (r, 0)),     # h
+            pl.BlockSpec((bv, d), lambda r, v: (v, 0)),     # w
+        ],
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((np_, kp), jnp.float32),
+                   jax.ShapeDtypeStruct((np_, kp), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((bm, kp), jnp.float32),
+                        pltpu.VMEM((bm, kp), jnp.int32)],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(off, h, w)
+    return vals[:n, :k], idxs[:n, :k]

@@ -1,0 +1,46 @@
+"""User-facing wrapper for the streaming top-k decode kernel.
+
+`pallas_topk(h, w, k)` mirrors `fused_ce.ops.pallas_loss`: callers may fix
+the kernel tiling with an explicit `BlockPlan`; when they don't, the plan
+resolves through the persistent tuning cache (the autotuned winner for
+this exact (rows, vocab, d, k, dtype, backend) when recorded, else the
+`choose_blocks` heuristic).  Resolution is a trace-time dict lookup.
+
+No custom VJP: sampling is not differentiated through.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.core.windows import BlockPlan
+from repro.kernels.sample_topk import kernel as K
+from repro.kernels.sample_topk.autotune import lookup_topk_plan
+
+
+def pallas_topk(
+    h: jax.Array,
+    w: jax.Array,
+    k: int,
+    *,
+    valid_vocab: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    plan: Optional[BlockPlan] = None,
+    interpret: Optional[bool] = None,
+    col_offset=0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Top-k (values, global indices) of ``h @ w.T`` per row, logits-free.
+
+    On non-TPU backends the kernel runs in interpret mode — bit-for-bit
+    the same algorithm.  Output matches ``jax.lax.top_k`` of the masked
+    dense logits exactly at every finite position, ties included (-inf
+    tail positions, k > valid vocab, carry unspecified indices).
+    """
+    if plan is None:
+        plan = lookup_topk_plan(h.shape[0], w.shape[0], h.shape[-1], k,
+                                h.dtype)
+    return K.topk_scores(h, w, k, valid_vocab=valid_vocab,
+                         logit_softcap=logit_softcap, plan=plan,
+                         interpret=interpret, col_offset=col_offset)

@@ -198,8 +198,12 @@ def lower_decode(arch: Arch, shape_name: str, mesh, *,
     def decode_fn(params, caches, batch, rng):
         h, _, caches = forward_hidden(arch, params, batch, caches=caches,
                                       shard=rules.shard)
+        # impl='jax': the pure-JAX scan lowers through GSPMD with the
+        # vocab-sharded lm_head (a pallas_call has no partitioning rule
+        # here, which would force the full lm_head per device and corrupt
+        # the per-device memory/collective stats this module reports)
         nxt = sample_tokens(h[:, -1, :], params["lm_head"], rng,
-                            temperature=0.0,
+                            temperature=0.0, impl="jax",
                             valid_vocab=arch.vocab_size)
         return nxt, caches
 

@@ -1,7 +1,10 @@
-"""Serving launcher: batched generation with the streaming sampler.
+"""Serving launcher: continuous batching on the Pallas decode sampler.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
         --batch 4 --prompt-len 16 --max-new 16
+
+Submits `--requests` (default: one per slot) prompts to the continuous
+scheduler and prints per-request tokens plus throughput/occupancy.
 """
 
 from __future__ import annotations
@@ -13,41 +16,61 @@ import jax
 import numpy as np
 
 from repro.models.registry import get_arch, init_params
-from repro.serve import ServeConfig, Engine
+from repro.serve import ServeConfig, Engine, ContinuousScheduler
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="engine slots (continuous-batching batch size)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="requests to submit (0: one per slot)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=40)
+    ap.add_argument("--top-p", type=float, default=None)
+    ap.add_argument("--sampler-impl", default="pallas",
+                    choices=("pallas", "jax"))
+    ap.add_argument("--autotune", action="store_true",
+                    help="tune decode top-k block plans at engine init")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch, reduced=args.reduced)
     params = init_params(arch, jax.random.PRNGKey(args.seed))
+    enc_len = 32 if arch.family == "encdec" else None
     fe = None
     if arch.family == "encdec":
         fe = jax.random.normal(
             jax.random.PRNGKey(1),
-            (args.batch, 32, arch.cfg.d_model)).astype(
+            (1, enc_len, arch.cfg.d_model)).astype(
                 jax.numpy.dtype(arch.cfg.compute_dtype))
     sc = ServeConfig(batch_size=args.batch, max_len=args.max_len,
-                     temperature=args.temperature)
-    eng = Engine(arch, params, sc, frontend_embeds=fe)
+                     temperature=args.temperature, top_k=args.top_k,
+                     top_p=args.top_p, sampler_impl=args.sampler_impl,
+                     enc_len=enc_len, autotune=args.autotune)
+    eng = Engine(arch, params, sc)
     rng = np.random.default_rng(args.seed)
+    n_req = args.requests or args.batch
     prompts = rng.integers(1, arch.vocab_size,
-                           (args.batch, args.prompt_len)).astype(np.int32)
+                           (n_req, args.prompt_len)).astype(np.int32)
+
+    sched = ContinuousScheduler(eng, max_new_tokens=args.max_new)
     t0 = time.perf_counter()
-    out = eng.generate(prompts, args.max_new)
+    rids = [sched.submit(p, frontend_embeds=fe) for p in prompts]
+    results = sched.run()
     dt = time.perf_counter() - t0
-    tps = args.batch * args.max_new / dt
-    print(f"[serve] arch={arch.arch_id} generated {out.shape} in {dt:.2f}s "
-          f"({tps:.1f} tok/s incl. compile)")
+    total = sum(len(results[r]) for r in rids)
+    print(f"[serve] arch={arch.arch_id} served {len(rids)} requests "
+          f"({total} tokens) in {dt:.2f}s ({total / dt:.1f} tok/s incl. "
+          f"compile; occupancy {sched.occupancy:.2f}, "
+          f"{sched.decode_steps} decode steps)")
+    out = np.stack([np.pad(results[r], (0, args.max_new - len(results[r])))
+                    for r in rids])
     print("[serve] sample row:", out[0][:16])
     return out
 

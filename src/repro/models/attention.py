@@ -418,13 +418,21 @@ def attention_layer(
 
 
 def _update_cache(cache_arr, new_vals, cur_len):
-    """Write new_vals at position cur_len along the time axis (per batch)."""
+    """Write new_vals at position cur_len along the time axis (per batch).
+
+    Decode steps (t == 1) scatter each row at its OWN length — under
+    continuous batching the slots of a batch sit at different positions.
+    Prefill (t > 1) writes a contiguous slab; the slot engine prefills at
+    batch == 1 so a single uniform start (row 0) is exact there.
+    """
     b, t = new_vals.shape[:2]
     if jnp.ndim(cur_len) == 0:
-        start = cur_len
         return jax.lax.dynamic_update_slice_in_dim(
-            cache_arr, new_vals.astype(cache_arr.dtype), start, axis=1)
-    # batched start positions: same value in the common case; use row 0
+            cache_arr, new_vals.astype(cache_arr.dtype), cur_len, axis=1)
+    if t == 1:
+        idx = jnp.clip(cur_len, 0, cache_arr.shape[1] - 1)
+        return cache_arr.at[jnp.arange(b), idx].set(
+            new_vals[:, 0].astype(cache_arr.dtype))
     return jax.lax.dynamic_update_slice_in_dim(
         cache_arr, new_vals.astype(cache_arr.dtype), cur_len[0], axis=1)
 

@@ -90,6 +90,134 @@ def init_serve_caches(arch: Arch, params, batch_size: int, max_len: int,
     return mod.init_states(arch.cfg, batch_size, dtype)   # griffin
 
 
+# ---------------------------------------------------------------------------
+# per-slot cache surgery (continuous batching, DESIGN.md §5.2)
+#
+# The slot engine keeps ONE batched cache tree and treats each batch row as
+# an independent serving slot: a new request is prefilled at batch=1 and its
+# cache inserted into the live tree; a finished slot is reset in place.  The
+# helpers below are family-agnostic — the batch axis of every leaf is
+# discovered structurally (eval_shape at two batch sizes), so transformer KV
+# stacks, Griffin/xLSTM recurrent state, quantized caches, and enc-dec
+# cross-KV all work through the same three tree operations.
+# ---------------------------------------------------------------------------
+
+
+def _slot_cache_specs(arch: Arch, params, batch_size: int, max_len: int,
+                      enc_len: Optional[int], dtype, quantize: bool):
+    """ShapeDtypeStruct tree of the serve cache at `batch_size` — the one
+    abstract cache builder behind `empty_serve_caches`/`cache_batch_axes`
+    (so the discovered batch axes can never diverge from the real tree).
+
+    For enc-dec the encoder input is a spec, so no encoder runs."""
+    from repro.configs.base import ENCDEC_SERVE_ENC_LEN
+
+    if arch.family == "encdec":
+        fe = jax.ShapeDtypeStruct(
+            (batch_size, enc_len or ENCDEC_SERVE_ENC_LEN,
+             arch.cfg.d_model), jnp.dtype(arch.cfg.compute_dtype))
+        return jax.eval_shape(
+            lambda p, f: init_serve_caches(arch, p, batch_size, max_len,
+                                           frontend_embeds=f, dtype=dtype),
+            params, fe)
+    return jax.eval_shape(
+        lambda p: init_serve_caches(arch, p, batch_size, max_len,
+                                    dtype=dtype,
+                                    quantize=quantize
+                                    and arch.family == "transformer"),
+        params)
+
+
+def empty_serve_caches(arch: Arch, params, batch_size: int, max_len: int,
+                       *, enc_len: Optional[int] = None,
+                       dtype=jnp.bfloat16, quantize: bool = False):
+    """Batched cache container whose slots await per-slot prefill inserts.
+
+    For every family but enc-dec this IS `init_serve_caches` (cheap, and
+    it preserves non-zero init like the ring-buffer ``pos = -1``).  For
+    enc-dec, `init_serve_caches` would run the encoder — pointless for
+    empty slots — so the container is zeros materialized from its specs;
+    per-slot prefill runs the encoder and overwrites the slot slice.
+    """
+    if arch.family != "encdec":
+        return init_serve_caches(arch, params, batch_size, max_len,
+                                 dtype=dtype,
+                                 quantize=quantize
+                                 and arch.family == "transformer")
+    specs = _slot_cache_specs(arch, params, batch_size, max_len, enc_len,
+                              dtype, quantize)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+
+def cache_batch_axes(arch: Arch, params, max_len: int,
+                     *, enc_len: Optional[int] = None,
+                     dtype=jnp.bfloat16, quantize: bool = False):
+    """Per-leaf batch-axis pytree for the serve cache (-1: no batch axis).
+
+    Found structurally: build the cache specs at batch 1 and 2 and take
+    the (unique) axis whose size differs.  Returns a pytree of ints with
+    the cache's exact structure, usable as a `jax.tree.map` companion.
+    """
+    def build(b):
+        return _slot_cache_specs(arch, params, b, max_len, enc_len,
+                                 dtype, quantize)
+
+    def axis(a, b):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                 if x != y]
+        return diffs[0] if diffs else -1
+
+    return jax.tree.map(axis, build(1), build(2))
+
+
+def take_slot_caches(caches, slot, axes):
+    """Slice one slot (size-1 batch dim kept) out of a batched cache."""
+    return jax.tree.map(
+        lambda leaf, ax: leaf if ax < 0 else
+        jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=ax),
+        caches, axes)
+
+
+def insert_slot_caches(caches, slot_caches, slot, axes):
+    """Write a batch=1 cache tree into slot `slot` of a batched cache.
+
+    `slot` may be traced (one compilation serves every slot).  Leaves
+    without a batch axis are left untouched.
+    """
+    return jax.tree.map(
+        lambda big, small, ax: big if ax < 0 else
+        jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), slot, axis=ax),
+        caches, slot_caches, axes)
+
+
+def reset_slot_caches(caches, template, slot, axes):
+    """Restore slot `slot` to its pristine (empty) state.
+
+    `template` is a batch=1 slice of a freshly initialized cache (NOT
+    plain zeros: ring-buffer position buffers initialize to -1)."""
+    return insert_slot_caches(caches, template, slot, axes)
+
+
+def shift_cache_lens(caches, delta):
+    """Subtract `delta` from every ``"len"`` leaf of a cache tree.
+
+    Used by bucketed prefill (transformer / enc-dec): prompts are padded
+    to a bucket length before the prefill forward, which advances the
+    attention caches' ``len`` by the padded length; shifting by the pad
+    restores the true prompt length so decode resumes at the right
+    position (pad rows beyond it are dead and get overwritten).  `delta`
+    may be traced; recurrent state (no ``len`` leaves) passes through.
+    """
+    if isinstance(caches, dict):
+        return {key: (val - delta if key == "len"
+                      else shift_cache_lens(val, delta))
+                for key, val in caches.items()}
+    if isinstance(caches, (list, tuple)):
+        return type(caches)(shift_cache_lens(v, delta) for v in caches)
+    return caches
+
+
 def serve_cache_specs(arch: Arch, batch_size: int, max_len: int,
                       dtype=jnp.bfloat16, quantize: bool = False):
     """ShapeDtypeStruct tree of the decode-step cache (dry-run input)."""

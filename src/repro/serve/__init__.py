@@ -1,5 +1,8 @@
-from repro.serve.engine import ServeConfig, Engine, BatchScheduler, build_serve_fns
-from repro.serve.sampler import streaming_topk, sample_tokens
+from repro.serve.engine import (ServeConfig, Engine, build_serve_fns,
+                                resolve_logit_softcap)
+from repro.serve.scheduler import ContinuousScheduler, Request
+from repro.serve.sampler import streaming_topk, sample_tokens, top_p_mask
 
-__all__ = ["ServeConfig", "Engine", "BatchScheduler", "build_serve_fns",
-           "streaming_topk", "sample_tokens"]
+__all__ = ["ServeConfig", "Engine", "ContinuousScheduler", "Request",
+           "build_serve_fns", "resolve_logit_softcap",
+           "streaming_topk", "sample_tokens", "top_p_mask"]

@@ -1,141 +1,293 @@
-"""Batched serving engine: prefill + decode steps over the model registry.
+"""Slot-based serving engine: per-slot prefill + batched decode steps.
 
-`build_serve_fns(arch)` returns jit-ready `prefill` and `decode_step`
-functions with the cache pytree threaded functionally; `Engine` wraps them
-with a host-side generation loop and a simple waiting-room batcher
-(requests are grouped to the fixed engine batch; finished rows are
-replaced from the queue — a minimal continuous-batching scheduler).
+The engine treats each row of one live batched cache tree as an
+independent *slot* (DESIGN.md §5.1):
+
+  * `prefill_into_slot(i, prompt)` runs the model over one prompt at
+    batch=1 (prompts bucketed to power-of-two lengths for the attention
+    families, exact for recurrent ones), samples the first token, and
+    splices the resulting cache into slot `i` of the live tree via the
+    registry's per-slot insert — while the other slots keep decoding.
+  * `decode_step()` advances EVERY slot one token with a single jitted
+    forward + streaming top-k sample; the Pallas decode kernel
+    (`kernels/sample_topk`) keeps the step logits-free.
+  * `reset_slot(i)` restores a finished slot to its pristine state.
+
+The engine is deliberately policy-free: admission order, EOS handling,
+per-request bookkeeping, and token streaming live in
+`serve/scheduler.py:ContinuousScheduler`.  `generate()` remains as a
+fixed-batch convenience wrapper (it drives a private scheduler), used by
+the CLI and as the drain-in-groups baseline in `benchmarks/bench_serve`.
+
+Free slots still run the batched decode computation (their outputs are
+discarded and their caches overwritten at the next prefill); an
+all-masked attention row yields NaN hiddens, which stay confined to that
+row — every per-row op is batch-diagonal.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import Arch
-from repro.models.registry import forward_hidden, init_serve_caches
+from repro.configs.base import Arch, ENCDEC_SERVE_ENC_LEN
+from repro.models.registry import (cache_batch_axes, empty_serve_caches,
+                                   forward_hidden, init_serve_caches,
+                                   insert_slot_caches, reset_slot_caches,
+                                   shift_cache_lens, take_slot_caches)
 from repro.serve.sampler import sample_tokens
 
 
 @dataclasses.dataclass
 class ServeConfig:
-    batch_size: int = 8
-    max_len: int = 1024
+    batch_size: int = 8            # number of serving slots
+    max_len: int = 1024            # per-slot cache capacity (tokens)
     temperature: float = 0.0
     top_k: int = 40
-    sample_block_v: int = 8192
+    top_p: Optional[float] = None  # nucleus filter over the top-k logits
+    sample_block_v: int = 8192     # vocab chunk of the 'jax' sampler impl
     cache_dtype: str = "bfloat16"
     quantize_cache: bool = False   # int8 KV (transformer family)
+    logit_softcap: Optional[float] = None   # None -> arch.cfg.logit_softcap
+    sampler_impl: str = "pallas"   # 'pallas' kernel | 'jax' oracle
+    bucket_prefill: bool = True    # pow2 prompt buckets (attention families)
+    enc_len: Optional[int] = None  # enc-dec encoder frames per request
+    autotune: bool = False         # tune decode top-k block plans at init
+    tune_trial_budget: int = 6
+
+
+def resolve_logit_softcap(arch: Arch, sc: ServeConfig) -> Optional[float]:
+    """Sampling softcap: explicit ServeConfig override, else the arch's.
+
+    Threading the arch softcap is load-bearing: a Gemma-style model
+    trained with capped logits must also SAMPLE from capped logits
+    (monotonic, so greedy is safe, but temperature/top-p are not)."""
+    if sc.logit_softcap is not None:
+        return sc.logit_softcap
+    return getattr(arch.cfg, "logit_softcap", None)
 
 
 def build_serve_fns(arch: Arch, sc: ServeConfig, shard=None):
-    valid = arch.vocab_size
+    """(prefill, decode_step) jit-ready functions.
 
-    def prefill(params, caches, batch):
+    prefill(params, slot_caches, batch, true_len, rng) -> (tok (1,), caches)
+        batch['tokens'] is (1, T_bucket) right-padded; `true_len` (traced)
+        is the real prompt length — the hidden state is read at the last
+        REAL position and the caches' ``len`` shifted back by the pad.
+    decode_step(params, caches, tokens (B, 1), rng) -> (tok (B,), caches)
+    """
+    valid = arch.vocab_size
+    softcap = resolve_logit_softcap(arch, sc)
+
+    def _sample(h_last, params, rng):
+        return sample_tokens(
+            h_last, params["lm_head"], rng,
+            temperature=sc.temperature, top_k=sc.top_k, top_p=sc.top_p,
+            block_v=sc.sample_block_v, valid_vocab=valid,
+            logit_softcap=softcap, impl=sc.sampler_impl)
+
+    def prefill(params, caches, batch, true_len, rng):
         h, _, caches = forward_hidden(arch, params, batch, caches=caches,
                                       shard=shard)
-        return h[:, -1, :], caches
+        pad = batch["tokens"].shape[1] - true_len
+        caches = shift_cache_lens(caches, pad)
+        last = h.shape[1] - batch["tokens"].shape[1] + true_len - 1
+        h_last = jax.lax.dynamic_index_in_dim(h, last, axis=1,
+                                              keepdims=False)    # (1, d)
+        return _sample(h_last, params, rng), caches
 
     def decode_step(params, caches, tokens, rng):
         h, _, caches = forward_hidden(arch, params, {"tokens": tokens},
                                       caches=caches, shard=shard)
-        next_tok = sample_tokens(
-            h[:, -1, :], params["lm_head"], rng,
-            temperature=sc.temperature, top_k=sc.top_k,
-            block_v=sc.sample_block_v, valid_vocab=valid)
-        return next_tok, caches
+        return _sample(h[:, -1, :], params, rng), caches
 
     return prefill, decode_step
 
 
+def _bucket_len(true_len: int, max_len: int) -> int:
+    """Smallest power-of-two >= true_len (floor 8, capped at max_len)."""
+    b = 8
+    while b < true_len:
+        b *= 2
+    return min(b, max_len)
+
+
 class Engine:
-    """Host-side batched generation with a waiting-room scheduler."""
+    """Slot-level serving engine over the model registry (one batched
+    cache tree; rows are independently prefilled/recycled slots)."""
 
     def __init__(self, arch: Arch, params, sc: ServeConfig,
-                 frontend_embeds=None, jit: bool = True):
+                 jit: bool = True):
         self.arch = arch
         self.params = params
         self.sc = sc
-        self.frontend_embeds = frontend_embeds
-        prefill, decode = build_serve_fns(arch, sc)
-        self._prefill = jax.jit(prefill) if jit else prefill
-        self._decode = jax.jit(decode) if jit else decode
+        self._cdt = jnp.dtype(sc.cache_dtype)
+        self._quant = sc.quantize_cache and arch.family == "transformer"
+        self._bucketed = (sc.bucket_prefill
+                          and arch.family in ("transformer", "encdec"))
+        self._enc_len = sc.enc_len or ENCDEC_SERVE_ENC_LEN
+        axes = cache_batch_axes(arch, params, sc.max_len,
+                                enc_len=self._enc_len, dtype=self._cdt,
+                                quantize=self._quant)
+        self._axes = axes
 
-    def _fresh_caches(self):
-        return init_serve_caches(
+        if sc.autotune:
+            self._tune_plans()
+
+        prefill, decode = build_serve_fns(arch, sc)
+        wrap = jax.jit if jit else (lambda f, **kw: f)
+        # donate the batched cache operand so decode/insert/reset update it
+        # in place instead of copying the full tree each tick (donation is
+        # unsupported — and warns — on CPU, so only ask off-CPU); the
+        # prefill's slot_caches is a long-lived shared template: never
+        # donated
+        dn = (lambda n: {"donate_argnums": (n,)}) \
+            if jit and jax.default_backend() != "cpu" else (lambda n: {})
+        self._prefill = wrap(prefill)
+        self._decode = wrap(decode, **dn(1))
+        self._insert = wrap(
+            lambda caches, slot_caches, slot:
+            insert_slot_caches(caches, slot_caches, slot, axes), **dn(0))
+        self._reset = wrap(
+            lambda caches, template, slot:
+            reset_slot_caches(caches, template, slot, axes), **dn(0))
+        if arch.family == "encdec":
+            self._enc_init = wrap(
+                lambda params, fe: init_serve_caches(
+                    arch, params, 1, sc.max_len, frontend_embeds=fe,
+                    dtype=self._cdt))
+            self._slot_init = None
+        else:
+            # immutable zero/pristine tree, shared by every prefill
+            self._slot_init = init_serve_caches(
+                arch, params, 1, sc.max_len, dtype=self._cdt,
+                quantize=self._quant)
+        self.reset()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    @property
+    def batch_size(self) -> int:
+        return self.sc.batch_size
+
+    def reset(self, seed: int = 0):
+        """Fresh batched cache container + per-slot pristine template."""
+        self.caches = empty_serve_caches(
             self.arch, self.params, self.sc.batch_size, self.sc.max_len,
-            frontend_embeds=self.frontend_embeds,
-            dtype=jnp.dtype(self.sc.cache_dtype),
-            quantize=(self.sc.quantize_cache
-                      and self.arch.family == "transformer"))
+            enc_len=self._enc_len, dtype=self._cdt, quantize=self._quant)
+        self._template = take_slot_caches(self.caches, 0, self._axes)
+        self.cur = np.zeros((self.sc.batch_size,), np.int32)
+        self._rng = jax.random.PRNGKey(seed)
+
+    def _tune_plans(self):
+        """Populate the tuning cache for the decode/prefill sample shapes
+        BEFORE the first trace, mirroring the train-side tune-at-startup."""
+        from repro.kernels.sample_topk import autotune_topk_plan
+        k = 1 if self.sc.temperature == 0.0 else self.sc.top_k
+        v, d = self.params["lm_head"].shape
+        dtype = jnp.dtype(getattr(self.arch.cfg, "compute_dtype",
+                                  "float32"))
+        for n in sorted({1, self.sc.batch_size}):
+            autotune_topk_plan(
+                n, v, d, k, dtype,
+                trial_budget=self.sc.tune_trial_budget,
+                logit_softcap=resolve_logit_softcap(self.arch, self.sc))
+
+    # -- slot operations ----------------------------------------------------
+
+    def _split(self):
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
+
+    def prefill_into_slot(self, slot: int, prompt, frontend_embeds=None
+                          ) -> int:
+        """Prefill one prompt at batch=1 into slot `slot`; returns the
+        FIRST sampled token (the time-to-first-token token).
+
+        For enc-dec families a missing `frontend_embeds` runs the
+        encoder on zeros — a deliberate unconditioned-decode fallback;
+        pass real frames for conditioned generation."""
+        prompt = np.asarray(prompt, np.int32).reshape(1, -1)
+        true_len = prompt.shape[1]
+        if not 1 <= true_len <= self.sc.max_len:
+            raise ValueError(f"prompt length {true_len} outside "
+                             f"[1, {self.sc.max_len}]")
+        t_b = (_bucket_len(true_len, self.sc.max_len) if self._bucketed
+               else true_len)
+        tokens = np.zeros((1, t_b), np.int32)
+        tokens[0, :true_len] = prompt[0]
+        batch: Dict[str, Any] = {"tokens": jnp.asarray(tokens)}
+
+        cfg = self.arch.cfg
+        if self.arch.family == "encdec":
+            if frontend_embeds is None:
+                frontend_embeds = jnp.zeros(
+                    (1, self._enc_len, cfg.d_model),
+                    jnp.dtype(cfg.compute_dtype))
+            slot_caches = self._enc_init(self.params,
+                                         jnp.asarray(frontend_embeds))
+        else:
+            slot_caches = self._slot_init
+            if getattr(cfg, "frontend_len", 0) and frontend_embeds is not None:
+                batch["frontend_embeds"] = jnp.asarray(frontend_embeds)
+
+        tok, slot_caches = self._prefill(
+            self.params, slot_caches, batch, jnp.int32(true_len),
+            self._split())
+        self.caches = self._insert(self.caches, slot_caches,
+                                   jnp.int32(slot))
+        tok = int(jax.device_get(tok)[0])
+        self.cur[slot] = tok
+        return tok
+
+    def decode_step(self) -> np.ndarray:
+        """Advance every slot one token; returns (B,) sampled ids.
+
+        Rows of free slots are dead compute — callers ignore them."""
+        tok, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(self.cur[:, None]),
+            self._split())
+        toks = np.asarray(jax.device_get(tok), np.int32)
+        self.cur = toks.copy()
+        return toks
+
+    def reset_slot(self, slot: int):
+        """Recycle a finished slot back to its pristine empty state."""
+        self.caches = self._reset(self.caches, self._template,
+                                  jnp.int32(slot))
+        self.cur[slot] = 0
+
+    # -- fixed-batch convenience -------------------------------------------
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
-                 eos_id: Optional[int] = None, seed: int = 0
-                 ) -> np.ndarray:
-        """prompts: (B, T_prompt) int32 (B == engine batch).  Returns
-        (B, max_new_tokens) generated ids (post-eos positions repeat eos).
-        """
-        b, _ = prompts.shape
-        assert b == self.sc.batch_size
-        caches = self._fresh_caches()
-        batch = {"tokens": jnp.asarray(prompts)}
-        if self.frontend_embeds is not None:
-            batch["frontend_embeds"] = self.frontend_embeds
-        h_last, caches = self._prefill(self.params, caches, batch)
-        del h_last
-        rng = jax.random.PRNGKey(seed)
-        cur = jnp.asarray(prompts[:, -1:])
-        outs = []
-        done = np.zeros(b, bool)
-        for i in range(max_new_tokens):
-            rng, sub = jax.random.split(rng)
-            nxt, caches = self._decode(self.params, caches, cur, sub)
-            toks = np.asarray(jax.device_get(nxt))
-            if eos_id is not None:
-                toks = np.where(done, eos_id, toks)
-                done |= (toks == eos_id)
-            outs.append(toks)
-            cur = jnp.asarray(toks[:, None])
-            if eos_id is not None and done.all():
-                outs.extend([np.full(b, eos_id, toks.dtype)]
-                            * (max_new_tokens - i - 1))
-                break
-        return np.stack(outs, axis=1)
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 frontend_embeds=None) -> np.ndarray:
+        """prompts: (R, T_prompt) int32.  Returns (R, max_new_tokens)
+        generated ids (post-eos positions repeat eos).
 
+        `frontend_embeds` (batch=1, shared by every request) is required
+        for meaningful enc-dec output — without it each slot's encoder
+        runs on zeros (see `prefill_into_slot`).
 
-class BatchScheduler:
-    """Minimal waiting-room batcher for the serving example."""
+        Drives a private `ContinuousScheduler`, so finished slots ARE
+        recycled from the queue mid-flight — but the call itself still
+        blocks until every request finishes (use the scheduler directly
+        for streaming)."""
+        from repro.serve.scheduler import ContinuousScheduler
 
-    def __init__(self, engine: Engine, max_new_tokens: int = 32,
-                 eos_id: Optional[int] = None):
-        self.engine = engine
-        self.max_new = max_new_tokens
-        self.eos_id = eos_id
-        self.queue: List[Tuple[int, np.ndarray]] = []
-        self._next_id = 0
-
-    def submit(self, prompt: np.ndarray) -> int:
-        rid = self._next_id
-        self._next_id += 1
-        self.queue.append((rid, prompt))
-        return rid
-
-    def run(self) -> Dict[int, np.ndarray]:
-        """Drain the queue in engine-batch groups (prompts padded left)."""
-        results: Dict[int, np.ndarray] = {}
-        bs = self.engine.sc.batch_size
-        while self.queue:
-            group = self.queue[:bs]
-            self.queue = self.queue[bs:]
-            maxlen = max(len(p) for _, p in group)
-            batch = np.zeros((bs, maxlen), np.int32)
-            for i, (_, p) in enumerate(group):
-                batch[i, maxlen - len(p):] = p     # left-pad
-            outs = self.engine.generate(batch, self.max_new, self.eos_id)
-            for i, (rid, _) in enumerate(group):
-                results[rid] = outs[i]
-        return results
+        self.reset(seed)
+        sched = ContinuousScheduler(self, max_new_tokens=max_new_tokens,
+                                    eos_id=eos_id)
+        rids = [sched.submit(p, frontend_embeds=frontend_embeds)
+                for p in np.asarray(prompts, np.int32)]
+        results = sched.run()
+        fill = eos_id if eos_id is not None else 0
+        out = np.full((len(rids), max_new_tokens), fill, np.int32)
+        for i, rid in enumerate(rids):
+            toks = results[rid]
+            out[i, :len(toks)] = toks
+        return out

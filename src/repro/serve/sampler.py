@@ -2,10 +2,25 @@
 
 The serving-side twin of the paper's idea (and of its Online-Softmax+TopK
 related work): the (B, V) logits tensor for a decode step is never formed.
-`streaming_topk` scans the lm_head in vocab chunks keeping a running
-(values, indices) top-k; greedy is k=1; top-k temperature sampling draws
-from the surviving k logits.  Memory: O(B * (block_v + k)) instead of
-O(B * V) — at B=128, V=262144 that is ~130 MB of logits avoided per step.
+Two implementations share one contract:
+
+  * `streaming_topk` — pure JAX: scans the lm_head in vocab chunks via
+    `lax.scan`, keeping a running (values, indices) top-k.  Runs on any
+    backend; serves as the semantic oracle for the kernel.
+  * `repro.kernels.sample_topk.pallas_topk` — the Pallas TPU kernel with
+    the same VMEM online-scan structure, BlockPlan tiling, and autotune
+    integration as the fused-CE forward (DESIGN.md §5.3).  Bit-identical
+    to the oracle at every finite position, ties included.
+
+`sample_tokens` draws greedy (temperature == 0) or temperature/top-k/
+top-p samples from the surviving k logits.  `logit_softcap` applies the
+Gemma-style tanh cap INSIDE the vocab scan — sampling from uncapped
+logits while the model trained with capped ones is a distribution
+mismatch (the softcap is monotonic, so greedy decode is unaffected, but
+temperature/top-p sampling is not).
+
+Memory: O(B * (block_v + k)) instead of O(B * V) — at B=128, V=262144
+that is ~130 MB of logits avoided per step.
 """
 
 from __future__ import annotations
@@ -15,7 +30,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import LossConfig
+from repro.core.windows import BlockPlan
 
 
 def streaming_topk(
@@ -48,7 +63,9 @@ def streaming_topk(
             z = cap * jnp.tanh(z / cap)
         col = idx * bv + jnp.arange(bv, dtype=jnp.int32)
         z = jnp.where(col[None, :] < valid, z, -jnp.inf)
-        cv, ci = jax.lax.top_k(z, k)                      # chunk top-k
+        # a chunk contributes at most bv candidates, so clamp the chunk
+        # top-k there (k > block_v is legal: the merge keeps k overall)
+        cv, ci = jax.lax.top_k(z, min(k, bv))
         ci = jnp.take(col, ci)
         merged_v = jnp.concatenate([best_v, cv], axis=1)
         merged_i = jnp.concatenate([best_i, ci], axis=1)
@@ -63,17 +80,49 @@ def streaming_topk(
     return vals, idxs
 
 
+def top_p_mask(logits: jax.Array, top_p: float) -> jax.Array:
+    """Nucleus filter over DESCENDING-sorted logits: keep the smallest
+    prefix whose probability mass reaches `top_p`, -inf the rest.
+
+    Both `streaming_topk` and `pallas_topk` return values sorted
+    descending, so no extra sort is needed.  The top-1 token is always
+    kept (`cum - probs < top_p` holds at position 0 for any top_p > 0).
+    """
+    probs = jax.nn.softmax(logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = (cum - probs) < jnp.float32(top_p)
+    return jnp.where(keep, logits, -jnp.inf)
+
+
 def sample_tokens(
     h: jax.Array, w: jax.Array, rng: jax.Array, *,
     temperature: float = 0.0, top_k: int = 40,
+    top_p: Optional[float] = None,
     block_v: int = 8192, valid_vocab: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    impl: str = "pallas", plan: Optional[BlockPlan] = None,
 ) -> jax.Array:
-    """Next-token ids (B,) — greedy when temperature == 0."""
+    """Next-token ids (B,) — greedy when temperature == 0.
+
+    impl: 'pallas' (streaming Pallas kernel, interpret mode off-TPU) or
+    'jax' (the pure-JAX `streaming_topk` oracle).  `plan` pins the kernel
+    tiling; None resolves it through the tuning cache.
+    """
     k = 1 if temperature == 0.0 else top_k
-    vals, idxs = streaming_topk(h, w, k, block_v=block_v,
-                                valid_vocab=valid_vocab)
+    if impl == "pallas":
+        from repro.kernels.sample_topk import pallas_topk
+        vals, idxs = pallas_topk(h, w, k, valid_vocab=valid_vocab,
+                                 logit_softcap=logit_softcap, plan=plan)
+    elif impl == "jax":
+        vals, idxs = streaming_topk(h, w, k, block_v=block_v,
+                                    valid_vocab=valid_vocab,
+                                    logit_softcap=logit_softcap)
+    else:
+        raise ValueError(f"unknown sampler impl {impl!r}")
     if temperature == 0.0:
         return idxs[:, 0]
     logits = vals / jnp.float32(temperature)
+    if top_p is not None:
+        logits = top_p_mask(logits, top_p)
     choice = jax.random.categorical(rng, logits, axis=-1)   # (B,)
     return jnp.take_along_axis(idxs, choice[:, None], axis=1)[:, 0]

@@ -1,0 +1,167 @@
+"""Continuous-batching scheduler: a per-slot request state machine.
+
+Each engine slot cycles  free → prefill → decode → recycled-on-eos :
+
+  * **admit** — whenever a slot is free and the queue is non-empty, the
+    oldest request (FIFO, request-order fair) is prefilled straight into
+    the live batch; the other slots keep decoding.
+  * **decode** — one `Engine.decode_step()` advances every busy slot one
+    token; tokens are streamed per request via the `on_token` callback.
+  * **recycle** — a slot whose request hits its EOS id or its token
+    budget is reset and immediately eligible for the next admit, so a
+    single long request never stalls the rest of the batch (the failure
+    mode of the seed's drain-in-groups `BatchScheduler`).
+
+Free slots are never given ghost work: the engine's batched decode does
+compute their rows, but no request state advances, nothing is recorded,
+and nothing gates completion on them.
+
+The scheduler also keeps the numbers `benchmarks/bench_serve` reports:
+decode steps, slot-occupancy, and per-request time-to-first-token.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+_UNSET = object()
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    eos_id: Optional[int]
+    frontend_embeds: Optional[Any] = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Book-keeping for one busy engine slot."""
+    req: Request
+    tokens: List[int]
+
+
+class ContinuousScheduler:
+    """FIFO continuous batching over a slot `Engine`.
+
+    on_token(rid, token, done) fires for every generated token (the
+    prefill's first token included) as soon as the host sees it.
+    """
+
+    def __init__(self, engine, max_new_tokens: int = 32,
+                 eos_id: Optional[int] = None,
+                 on_token: Optional[Callable[[int, int, bool], None]] = None):
+        self.engine = engine
+        self.default_max_new = max_new_tokens
+        self.default_eos = eos_id
+        self.on_token = on_token
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: List[Optional[_Slot]] = [None] * engine.batch_size
+        self.results: Dict[int, np.ndarray] = {}
+        self._next_rid = 0
+        # benchmark counters
+        self.decode_steps = 0
+        self.slot_busy_steps = 0
+        self.admit_order: List[int] = []
+        self.ttft: Dict[int, float] = {}
+        self._t0: Optional[float] = None
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, prompt, *, max_new_tokens: Optional[int] = None,
+               eos_id=_UNSET, frontend_embeds=None) -> int:
+        """Queue one request; returns its request id."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        max_new = (self.default_max_new if max_new_tokens is None
+                   else max_new_tokens)
+        if max_new < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new}")
+        budget = len(prompt) + max_new - 1          # cache entries needed
+        if budget > self.engine.sc.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds the "
+                f"engine cache capacity max_len={self.engine.sc.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(
+            rid, prompt, max_new,
+            self.default_eos if eos_id is _UNSET else eos_id,
+            frontend_embeds))
+        return rid
+
+    # -- state machine ------------------------------------------------------
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of slots doing useful work per decode step."""
+        total = self.decode_steps * self.engine.batch_size
+        return self.slot_busy_steps / total if total else 0.0
+
+    def _emit(self, rid: int, tok: int, done: bool):
+        if self.on_token is not None:
+            self.on_token(rid, tok, done)
+
+    def _finish(self, idx: int):
+        slot = self.slots[idx]
+        self.results[slot.req.rid] = np.asarray(slot.tokens, np.int32)
+        self.slots[idx] = None
+        self.engine.reset_slot(idx)
+
+    def _token_arrived(self, idx: int, tok: int) -> bool:
+        """Record one token for slot `idx`; returns True when it's done."""
+        slot = self.slots[idx]
+        slot.tokens.append(tok)
+        done = (len(slot.tokens) >= slot.req.max_new_tokens
+                or (slot.req.eos_id is not None
+                    and tok == slot.req.eos_id))
+        self._emit(slot.req.rid, tok, done)
+        if done:
+            self._finish(idx)
+        return done
+
+    def _admit(self):
+        """Prefill queued requests into free slots (FIFO)."""
+        for idx in range(len(self.slots)):
+            # a request that finishes at its prefill token frees the slot
+            # again, so keep admitting into it
+            while self.slots[idx] is None and self.queue:
+                req = self.queue.popleft()
+                first = self.engine.prefill_into_slot(
+                    idx, req.prompt, frontend_embeds=req.frontend_embeds)
+                self.admit_order.append(req.rid)
+                self.ttft[req.rid] = time.perf_counter() - self._t0
+                self.slots[idx] = _Slot(req, [])
+                self._token_arrived(idx, first)
+
+    def step(self) -> int:
+        """One scheduler tick: admit, then advance every busy slot one
+        token.  Returns the number of slots that did useful work."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        self._admit()
+        busy = [i for i, s in enumerate(self.slots) if s is not None]
+        if not busy:
+            return 0
+        toks = self.engine.decode_step()
+        self.decode_steps += 1
+        self.slot_busy_steps += len(busy)
+        for idx in busy:
+            self._token_arrived(idx, int(toks[idx]))
+        return len(busy)
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drive the state machine until queue and slots are empty."""
+        while self.queue or self.active:
+            self.step()
+        return dict(self.results)

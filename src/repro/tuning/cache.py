@@ -32,9 +32,16 @@ _MEMORY_KEY = ":memory:"
 
 
 def plan_key(n_rows: int, vocab: int, d: int, dtype: str,
-             backend: str) -> str:
-    """Canonical cache key: ``"<n>x<V>x<d>:<dtype>:<backend>"``."""
-    return f"{int(n_rows)}x{int(vocab)}x{int(d)}:{dtype}:{backend}"
+             backend: str, op: str = "ce") -> str:
+    """Canonical cache key: ``"<n>x<V>x<d>:<dtype>:<backend>[:<op>]"``.
+
+    ``op`` namespaces entries per kernel family so the fused-CE winner for
+    a shape never shadows e.g. the decode top-k winner for the same shape
+    (the two kernels have different VPU/MXU balance).  The default
+    ``"ce"`` is elided to keep existing fused-CE cache files valid.
+    """
+    base = f"{int(n_rows)}x{int(vocab)}x{int(d)}:{dtype}:{backend}"
+    return base if op == "ce" else f"{base}:{op}"
 
 
 def default_cache_path() -> Optional[str]:

@@ -94,3 +94,29 @@ def test_repair_spec_moves_to_rightmost_divisible(spec, shape, expect):
     mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
     got = repair_spec(spec, shape, mesh)
     assert _norm(got) == _norm(expect), (got, expect)
+
+
+def test_logits_intermediates_detects_bv_defs_only():
+    from repro.analysis.hlo import assert_logits_free, logits_intermediates
+    hlo = "\n".join([
+        "HloModule decode",
+        "  %p0 = f32[512,64]{1,0} parameter(0)",             # lm_head: no
+        "  %h = f32[4,64]{1,0} parameter(1)",
+        "  %z = f32[4,512]{1,0} dot(%h, %p0)",               # logits: yes
+        "  %z3 = f32[4,1,512]{2,1,0} reshape(%z)",           # unit dims: yes
+        "  %ok = f32[8,512]{1,0} custom-call()",             # wrong batch
+    ])
+    hits = logits_intermediates(hlo, 4, 512)
+    assert len(hits) == 2 and "dot" in hits[0] and "reshape" in hits[1]
+    assert logits_intermediates(hlo, 8, 512) == [
+        "%ok = f32[8,512]{1,0} custom-call()"]
+    assert logits_intermediates(hlo, 4, 1024) == []
+    with pytest.raises(AssertionError):
+        assert_logits_free(hlo, 4, (1024, 512))
+    assert_logits_free(hlo, 4, (1024, 2048))                 # no hit: None
+    # batch == 1 degenerates to {vocab}: a [1,V] (or [V]) def still trips
+    hlo1 = "  %z = f32[1,512]{1,0} dot(%a, %b)"
+    assert logits_intermediates(hlo1, 1, 512) == [
+        "%z = f32[1,512]{1,0} dot(%a, %b)"]
+    with pytest.raises(AssertionError):
+        assert_logits_free(hlo1, 1, (512,))

@@ -1,0 +1,182 @@
+"""Streaming top-k Pallas kernel: oracle equivalence + plan machinery.
+
+The dense oracle is a stable `jnp.argsort` over the masked (softcapped)
+logits; the kernel contract is BIT-identical output including tie order
+(lowest index first).  The pure-JAX `streaming_topk` is held to the same
+contract so either can stand in for the other.
+
+A deterministic parameter grid always runs (ties, `valid_vocab` masking,
+softcap, k >= valid, k > V, b < sublane); a hypothesis fuzz over the
+same space runs additionally when the 'test' extra is installed.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.windows import BlockPlan, choose_blocks, tile_bytes
+from repro.kernels.sample_topk import (pallas_topk, run_topk_trials,
+                                       autotune_topk_plan, lookup_topk_plan)
+from repro.serve.sampler import streaming_topk
+from repro.tuning import TuningCache, plan_key
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                     # pragma: no cover - 'test' extra
+    _HAVE_HYPOTHESIS = False
+
+
+def _dense_oracle(h, w, k, valid, cap):
+    z = h.astype(jnp.float32) @ w.T.astype(jnp.float32)
+    if cap is not None:
+        z = cap * jnp.tanh(z / cap)
+    v = w.shape[0]
+    z = jnp.where(jnp.arange(v)[None, :] < valid, z, -jnp.inf)
+    order = jnp.argsort(-z, axis=-1)[:, :min(k, v)]   # stable: ties -> low idx
+    return jnp.take_along_axis(z, order, axis=1), order
+
+
+def _check_against_dense(vals, idxs, h, w, k, valid, cap):
+    dv, di = _dense_oracle(h, w, k, valid, cap)
+    kd = dv.shape[1]
+    np.testing.assert_allclose(np.asarray(vals[:, :kd]), np.asarray(dv),
+                               rtol=1e-5, atol=1e-5)
+    # indices must match exactly wherever the value is finite (tie order
+    # included); -inf positions carry unspecified indices
+    fin = np.isfinite(np.asarray(dv))
+    np.testing.assert_array_equal(np.asarray(idxs[:, :kd])[fin],
+                                  np.asarray(di)[fin])
+    if k > kd:                      # k > V: tail is -inf by contract
+        assert np.all(np.asarray(vals[:, kd:]) == -np.inf)
+
+
+def _problem(b, d, v, quantize, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    h = jax.random.normal(k1, (b, d))
+    w = jax.random.normal(k2, (v, d)) * 0.3
+    if quantize:                    # force massive value ties
+        h = jnp.round(h * 2) / 2
+        w = jnp.round(w * 2) / 2
+    return h, w
+
+
+_GRID = [
+    # b, d,  v,   k,  valid, cap,  quantize
+    (4, 32, 333,  8,  300,   None, False),
+    (1, 16, 100,  1,  100,   None, False),
+    (3,  8,  50, 60,   10,   None, False),   # k > valid and k > V
+    (5, 64, 520, 40,  517,   30.0, False),   # ragged vocab + softcap
+    (6, 16, 200, 16,  200,   None, True),    # massive ties
+    (2,  8, 130, 12,  64,    5.0,  True),    # ties + mask + softcap
+    (8,  4,   3,  3,   3,    None, False),   # tiny vocab
+]
+
+
+@pytest.mark.parametrize("b,d,v,k,valid,cap,quantize", _GRID)
+def test_pallas_topk_matches_dense(b, d, v, k, valid, cap, quantize):
+    h, w = _problem(b, d, v, quantize, seed=b * 7 + k)
+    vals, idxs = pallas_topk(h, w, k, valid_vocab=valid, logit_softcap=cap)
+    assert vals.shape == idxs.shape == (b, k)
+    _check_against_dense(vals, idxs, h, w, k, valid, cap)
+    assert np.all(np.asarray(idxs) < max(valid, 1))
+
+
+@pytest.mark.parametrize("b,d,v,k,valid,cap,quantize", _GRID)
+def test_streaming_topk_matches_dense(b, d, v, k, valid, cap, quantize):
+    """The pure-JAX oracle obeys the same contract, k > block_v and
+    k > V included (the chunk top-k is clamped at min(k, block_v))."""
+    h, w = _problem(b, d, v, quantize, seed=b * 11 + k)
+    vals, idxs = streaming_topk(h, w, k, block_v=37, valid_vocab=valid,
+                                logit_softcap=cap)
+    _check_against_dense(vals, idxs, h, w, k, valid, cap)
+
+
+def test_kernel_equals_jax_oracle_with_explicit_plan():
+    """kernel == streaming_topk under a deliberately awkward tiling."""
+    h = jax.random.normal(jax.random.PRNGKey(0), (5, 24))
+    w = jax.random.normal(jax.random.PRNGKey(1), (300, 24))
+    plan = BlockPlan(8, 128, tile_bytes(8, 128, 24))
+    kv, ki = pallas_topk(h, w, 7, valid_vocab=290, logit_softcap=20.0,
+                         plan=plan)
+    ov, oi = streaming_topk(h, w, 7, block_v=64, valid_vocab=290,
+                            logit_softcap=20.0)
+    np.testing.assert_allclose(np.asarray(kv), np.asarray(ov), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(oi))
+
+
+def test_topk_col_offset_shards_merge():
+    """TP shards: per-shard top-k with col_offset merges to the global."""
+    h = jax.random.normal(jax.random.PRNGKey(0), (3, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 16))
+    k = 6
+    full_v, full_i = pallas_topk(h, w, k)
+    shard_v, shard_i = [], []
+    for lo in (0, 64):
+        sv, si = pallas_topk(h, w[lo:lo + 64], k, col_offset=lo,
+                             valid_vocab=128)
+        shard_v.append(sv)
+        shard_i.append(si)
+    mv = jnp.concatenate(shard_v, axis=1)
+    mi = jnp.concatenate(shard_i, axis=1)
+    gv, sel = jax.lax.top_k(mv, k)
+    gi = jnp.take_along_axis(mi, sel, axis=1)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(full_v),
+                               rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(full_i))
+
+
+def test_plan_key_topk_namespaced():
+    """The top-k cache entries never shadow fused-CE entries (and k is
+    part of the namespace: greedy and top-40 tune independently)."""
+    ce = plan_key(8, 512, 64, "float32", "cpu")
+    t1 = plan_key(8, 512, 64, "float32", "cpu", op="topk1")
+    t40 = plan_key(8, 512, 64, "float32", "cpu", op="topk40")
+    assert len({ce, t1, t40}) == 3
+    assert ce == "8x512x64:float32:cpu"      # legacy CE keys unchanged
+
+
+def test_topk_autotune_cache_roundtrip(tmp_path):
+    cache = TuningCache(str(tmp_path / "plans.json"))
+    plan = autotune_topk_plan(8, 256, 32, 4, jnp.float32, cache=cache,
+                              trial_budget=2, trial_iters=1)
+    hit = lookup_topk_plan(8, 256, 32, 4, jnp.float32, cache=cache)
+    assert hit.shape == plan.shape
+    # a different k is a different key -> heuristic fallback
+    miss = lookup_topk_plan(8, 256, 32, 9, jnp.float32, cache=cache)
+    assert miss.shape == choose_blocks(8, 256, 32, in_bytes=4).shape
+
+
+def test_topk_trials_best_not_worse_than_heuristic():
+    res = run_topk_trials(8, 256, 32, 4, jnp.float32, trial_budget=3,
+                          trial_iters=1)
+    assert res.best_us <= res.heuristic_us
+    assert any(p.shape == res.heuristic.shape for p, _ in res.trials)
+
+
+if _HAVE_HYPOTHESIS:
+    _SETTINGS = dict(max_examples=15, deadline=None)
+
+    @given(b=st.integers(1, 6), d=st.sampled_from([4, 16, 33]),
+           v=st.integers(3, 260), k=st.integers(1, 20),
+           valid_frac=st.floats(0.1, 1.0),
+           cap=st.sampled_from([None, 5.0, 30.0]),
+           quantize=st.booleans(), seed=st.integers(0, 10_000))
+    @settings(**_SETTINGS)
+    def test_pallas_topk_matches_dense_fuzz(b, d, v, k, valid_frac, cap,
+                                            quantize, seed):
+        h, w = _problem(b, d, v, quantize, seed)
+        valid = max(1, int(v * valid_frac))
+        vals, idxs = pallas_topk(h, w, k, valid_vocab=valid,
+                                 logit_softcap=cap)
+        _check_against_dense(vals, idxs, h, w, k, valid, cap)
+        assert np.all(np.asarray(idxs) < max(valid, 1))
+
+    @given(b=st.integers(1, 4), v=st.integers(5, 150), k=st.integers(1, 12),
+           block=st.integers(3, 70), seed=st.integers(0, 10_000))
+    @settings(**_SETTINGS)
+    def test_streaming_topk_matches_dense_fuzz(b, v, k, block, seed):
+        h, w = _problem(b, 8, v, True, seed)
+        vals, idxs = streaming_topk(h, w, k, block_v=block)
+        _check_against_dense(vals, idxs, h, w, k, v, None)

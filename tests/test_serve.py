@@ -1,12 +1,16 @@
-"""Serving: streaming top-k sampler, engine, batch scheduler."""
+"""Serving: streaming samplers, softcap/top-p threading, slot engine."""
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.models.registry import get_arch, init_params
-from repro.serve import (ServeConfig, Engine, BatchScheduler,
-                         streaming_topk, sample_tokens)
+from repro.serve import (ServeConfig, Engine, ContinuousScheduler,
+                         build_serve_fns, resolve_logit_softcap,
+                         streaming_topk, sample_tokens, top_p_mask)
 
 
 def test_streaming_topk_equals_dense():
@@ -21,18 +25,76 @@ def test_streaming_topk_equals_dense():
     assert (np.asarray(idxs) < 300).all()
 
 
-def test_sample_tokens_greedy_and_topk():
+@pytest.mark.parametrize("impl", ["jax", "pallas"])
+def test_sample_tokens_greedy_and_topk(impl):
     h = jax.random.normal(jax.random.PRNGKey(0), (3, 16))
     w = jax.random.normal(jax.random.PRNGKey(1), (100, 16))
-    greedy = sample_tokens(h, w, jax.random.PRNGKey(2), temperature=0.0)
+    greedy = sample_tokens(h, w, jax.random.PRNGKey(2), temperature=0.0,
+                           impl=impl)
     np.testing.assert_array_equal(np.asarray(greedy),
                                   np.asarray(jnp.argmax(h @ w.T, -1)))
     sampled = sample_tokens(h, w, jax.random.PRNGKey(3), temperature=1.0,
-                            top_k=5)
+                            top_k=5, impl=impl)
     # sampled tokens must be within the dense top-5
     _, top5 = jax.lax.top_k(h @ w.T, 5)
     for i in range(3):
         assert int(sampled[i]) in np.asarray(top5[i]).tolist()
+
+
+def test_sample_tokens_softcap_changes_distribution():
+    """The softcap must be applied INSIDE the scan: capped top-k values
+    equal cap*tanh(z/cap) of the dense logits (greedy is unaffected —
+    tanh is monotonic — but sampling temperature sees capped gaps)."""
+    h = jax.random.normal(jax.random.PRNGKey(0), (2, 16)) * 4
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    cap = 5.0
+    vals, idxs = streaming_topk(h, w, 4, block_v=16, logit_softcap=cap)
+    z = cap * jnp.tanh((h @ w.T) / cap)
+    dv, di = jax.lax.top_k(z, 4)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(dv), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(idxs), np.asarray(di))
+    assert float(jnp.max(jnp.abs(vals))) <= cap
+
+
+def test_resolve_logit_softcap_threads_arch_value():
+    """Gemma-style archs sample from capped logits without any config."""
+    arch = get_arch("qwen3-0.6b", reduced=True)
+    assert resolve_logit_softcap(arch, ServeConfig()) is None
+    capped = dataclasses.replace(arch, cfg=dataclasses.replace(
+        arch.cfg, logit_softcap=30.0))
+    assert resolve_logit_softcap(capped, ServeConfig()) == 30.0
+    # explicit ServeConfig override wins
+    assert resolve_logit_softcap(
+        capped, ServeConfig(logit_softcap=7.0)) == 7.0
+    # and the capped arch still serves end-to-end
+    params = init_params(capped, jax.random.PRNGKey(0))
+    eng = Engine(capped, params, ServeConfig(batch_size=2, max_len=32,
+                                             temperature=0.7, top_k=8))
+    out = eng.generate(np.ones((2, 4), np.int32), 3)
+    assert out.shape == (2, 3)
+
+
+def test_top_p_mask_keeps_smallest_sufficient_prefix():
+    logits = jnp.log(jnp.asarray([[0.6, 0.25, 0.1, 0.05]]))
+    near_all = top_p_mask(logits, 0.99)
+    assert np.isfinite(np.asarray(near_all)).sum() == 4
+    nucleus = top_p_mask(logits, 0.7)            # 0.6 < 0.7 <= 0.85
+    np.testing.assert_array_equal(np.isfinite(np.asarray(nucleus))[0],
+                                  [True, True, False, False])
+    greedy_like = top_p_mask(logits, 0.1)        # top-1 always kept
+    np.testing.assert_array_equal(np.isfinite(np.asarray(greedy_like))[0],
+                                  [True, False, False, False])
+
+
+def test_sample_tokens_top_p_tiny_equals_greedy():
+    h = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (80, 16))
+    greedy = sample_tokens(h, w, jax.random.PRNGKey(2), temperature=0.0)
+    for seed in range(3):
+        nucleus = sample_tokens(h, w, jax.random.PRNGKey(seed),
+                                temperature=1.0, top_k=10, top_p=1e-6)
+        np.testing.assert_array_equal(np.asarray(nucleus),
+                                      np.asarray(greedy))
 
 
 def test_engine_generate_and_scheduler():
@@ -49,13 +111,16 @@ def test_engine_generate_and_scheduler():
     out2 = eng.generate(prompts, max_new_tokens=5)
     np.testing.assert_array_equal(out, out2)
 
-    sched = BatchScheduler(eng, max_new_tokens=3)
+    # more requests than slots: the scheduler recycles slots to serve all
+    eng.reset()
+    sched = ContinuousScheduler(eng, max_new_tokens=3)
     rng = np.random.default_rng(1)
     ids = [sched.submit(rng.integers(1, 50, (int(rng.integers(2, 8)),))
                         .astype(np.int32)) for _ in range(5)]
     res = sched.run()
     assert sorted(res) == sorted(ids)
     assert all(r.shape == (3,) for r in res.values())
+    assert sched.occupancy > 0.5
 
 
 def test_engine_eos_early_stop():
@@ -65,3 +130,75 @@ def test_engine_eos_early_stop():
     prompts = np.ones((2, 4), np.int32)
     out = eng.generate(prompts, max_new_tokens=6, eos_id=int(1e9))
     assert out.shape == (2, 6)      # eos never hit -> full length
+
+
+@pytest.mark.parametrize("arch_id,kw", [
+    ("recurrentgemma-9b", {}),
+    ("xlstm-125m", {}),
+    ("seamless-m4t-medium", {"enc_len": 8}),
+])
+def test_engine_other_families(arch_id, kw):
+    arch = get_arch(arch_id, reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    eng = Engine(arch, params, ServeConfig(batch_size=2, max_len=48, **kw))
+    fe = None
+    if arch.family == "encdec":
+        fe = jax.random.normal(
+            jax.random.PRNGKey(1), (1, 8, arch.cfg.d_model)).astype(
+                jnp.dtype(arch.cfg.compute_dtype))
+    sched = ContinuousScheduler(eng, max_new_tokens=4)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, arch.vocab_size, (n,)).astype(np.int32)
+               for n in (5, 7, 4)]
+    rids = [sched.submit(p, frontend_embeds=fe) for p in prompts]
+    res = sched.run()
+    assert all(res[r].shape == (4,) for r in rids)
+    # slot isolation: the 2nd request decodes identically when served alone
+    eng.reset()
+    solo = ContinuousScheduler(eng, max_new_tokens=4)
+    rid = solo.submit(prompts[1], frontend_embeds=fe)
+    ref = solo.run()[rid]
+    np.testing.assert_array_equal(res[rids[1]], ref)
+
+
+def test_bucketed_prefill_matches_exact():
+    arch = get_arch("qwen3-0.6b", reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    p = np.random.default_rng(3).integers(
+        1, arch.vocab_size, (11,)).astype(np.int32)   # bucket 16, pad 5
+    outs = {}
+    for bucket in (True, False):
+        eng = Engine(arch, params, ServeConfig(batch_size=2, max_len=64,
+                                               bucket_prefill=bucket))
+        sched = ContinuousScheduler(eng, max_new_tokens=6)
+        rid = sched.submit(p)
+        outs[bucket] = sched.run()[rid]
+    np.testing.assert_array_equal(outs[True], outs[False])
+
+
+def test_compiled_decode_step_is_logits_free():
+    """The acceptance gate: no (B, V) intermediate in the compiled decode
+    step — and the detector itself flags a dense decode (negative case
+    lives in benchmarks/bench_serve.check_decode_logits_free too)."""
+    from repro.analysis.hlo import assert_logits_free, logits_intermediates
+    from repro.models.registry import forward_hidden
+
+    arch = get_arch("qwen3-0.6b", reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    sc = ServeConfig(batch_size=4, max_len=32)
+    eng = Engine(arch, params, sc)
+    _, decode = build_serve_fns(arch, sc)
+    cur = jnp.zeros((4, 1), jnp.int32)
+    txt = (jax.jit(decode)
+           .lower(params, eng.caches, cur, jax.random.PRNGKey(0))
+           .compile().as_text())
+    assert_logits_free(txt, 4, (arch.vocab_size, arch.padded_vocab))
+
+    def dense(params, caches, tokens):
+        h, _, caches = forward_hidden(arch, params, {"tokens": tokens},
+                                      caches=caches)
+        return jnp.argmax(h[:, -1, :] @ params["lm_head"].T, -1), caches
+
+    dense_txt = (jax.jit(dense).lower(params, eng.caches, cur)
+                 .compile().as_text())
+    assert logits_intermediates(dense_txt, 4, arch.padded_vocab)
