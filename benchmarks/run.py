@@ -12,9 +12,11 @@ Prints ``name,us_per_call,derived`` CSV.
                                                      block plans)
   §5 serving       -> bench_serve.bench_serve (continuous vs fixed-group
                                                batching, logits-free check)
+  §6 spec decode   -> bench_spec.bench_spec (speculative vs plain
+                                             continuous, logits-free verify)
 
 Run:  PYTHONPATH=src python -m benchmarks.run \
-          [--only lat,mem,train,topk,roof,tune,serve]
+          [--only lat,mem,train,topk,roof,tune,serve,spec]
 """
 
 from __future__ import annotations
@@ -25,7 +27,8 @@ import sys
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="lat,mem,train,topk,roof,tune,serve")
+    ap.add_argument("--only",
+                    default="lat,mem,train,topk,roof,tune,serve,spec")
     args = ap.parse_args()
     parts = set(args.only.split(","))
 
@@ -57,6 +60,9 @@ def main() -> None:
     if "serve" in parts:
         from benchmarks.bench_serve import bench_serve
         bench_serve(emit)
+    if "spec" in parts:
+        from benchmarks.bench_spec import bench_spec
+        bench_spec(emit)
 
 
 if __name__ == "__main__":

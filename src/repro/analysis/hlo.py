@@ -103,19 +103,30 @@ _DEF_RE = re.compile(
     r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s(]*))")
 
 
-def logits_intermediates(hlo_text: str, batch: int, vocab: int
-                         ) -> List[str]:
-    """Lines that DEFINE a `(batch, vocab)`-shaped tensor.
+def logits_intermediates(hlo_text: str, batch: int, vocab: int,
+                         seq: Optional[int] = None) -> List[str]:
+    """Lines that DEFINE a logits-shaped tensor.
 
     A materialized decode logits tensor shows up in HLO as a result whose
-    non-unit dims are exactly {batch, vocab} (in either order, any number
-    of size-1 dims) — for batch == 1 that degenerates to {vocab} alone,
-    so a `[1, V]` (or `[V]`) tensor is still caught.  Only result types
-    are inspected, so weights like the `(V, d)` lm_head never match;
-    callers should check both the raw and the padded vocabulary.
-    Returns the offending lines (empty == logits-free).
+    non-unit dims are exactly the multiset {batch, vocab} (in either
+    order, any number of size-1 dims) — for batch == 1 that degenerates
+    to {vocab} alone, so a `[1, V]` (or `[V]`) tensor is still caught.
+
+    With `seq` (the speculative-verification token count K+1, DESIGN.md
+    §6.5) the detector additionally flags the multi-token forms:
+    {batch, seq, vocab} and the row-flattened {batch*seq, vocab}.
+
+    Only result types are inspected, so weights like the `(V, d)` lm_head
+    never match; callers should check both the raw and the padded
+    vocabulary.  Returns the offending lines (empty == logits-free).
     """
-    want = sorted({int(batch), int(vocab)} - {1})
+    def nonunit(dims):
+        return tuple(sorted(d for d in dims if d != 1))
+
+    targets = {nonunit((int(batch), int(vocab)))}
+    if seq is not None:
+        targets.add(nonunit((int(batch), int(seq), int(vocab))))
+        targets.add(nonunit((int(batch) * int(seq), int(vocab))))
     hits: List[str] = []
     for line in hlo_text.splitlines():
         m = _DEF_RE.search(line)
@@ -123,20 +134,25 @@ def logits_intermediates(hlo_text: str, batch: int, vocab: int
             continue
         for _, dims in _SHAPE_RE.findall(m.group(1)):
             ds = [int(x) for x in dims.split(",") if x]
-            if sorted(x for x in ds if x != 1) == want:
+            if nonunit(ds) in targets:
                 hits.append(line.strip())
                 break
     return hits
 
 
-def assert_logits_free(hlo_text: str, batch: int, vocabs) -> None:
-    """Raise if the module materializes a (batch, V) tensor for any V in
-    `vocabs` (pass both `arch.vocab_size` and `arch.padded_vocab`)."""
+def assert_logits_free(hlo_text: str, batch: int, vocabs,
+                       seq: Optional[int] = None) -> None:
+    """Raise if the module materializes a (batch, V) — or, with `seq`,
+    a (batch, seq, V) / (batch*seq, V) — tensor for any V in `vocabs`
+    (pass both `arch.vocab_size` and `arch.padded_vocab`)."""
     for v in vocabs:
-        hits = logits_intermediates(hlo_text, batch, v)
+        hits = logits_intermediates(hlo_text, batch, v, seq=seq)
         if hits:
+            shapes = f"({batch}, {v})" if seq is None else (
+                f"({batch}, {v}) / ({batch}, {seq}, {v}) / "
+                f"({batch * seq}, {v})")
             raise AssertionError(
-                f"({batch}, {v}) logits intermediate(s) in compiled "
+                f"{shapes} logits intermediate(s) in compiled "
                 f"module:\n  " + "\n  ".join(hits[:8]))
 
 

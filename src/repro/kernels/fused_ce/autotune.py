@@ -4,7 +4,8 @@
 budgets and arithmetic intensity but never measures anything.  The paper's
 §3.2.1 window-size study — and Cut Your Losses before it — shows tile
 selection is shape-dependent enough that the analytic model leaves real
-latency on the table.  This module closes the loop (DESIGN.md §3.2):
+latency on the table.  This module closes the loop (DESIGN.md §3.2)
+through the shared tuning protocol in `kernels/plan_tuner.py`:
 
   1. `candidate_plans` enumerates every aligned (block_rows, block_v)
      tile shape under the VMEM budget, largest tiles first;
@@ -24,69 +25,24 @@ plan, miss → `choose_blocks`.  It never measures.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
-import logging
 import time
-from typing import List, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.types import LossConfig
-from repro.core.windows import (BlockPlan, choose_blocks, tile_bytes,
-                                _DEFAULT_BUDGET, _LANE, _SUBLANE)
+from repro.core.windows import BlockPlan
 from repro.kernels.fused_ce import kernel as K
-from repro.tuning import TuningCache, get_cache, plan_key
+# re-exported: every kernel autotuner's trial machinery lives here
+from repro.kernels.plan_tuner import (TuneResult, autotune_cached,
+                                      candidate_plans, lookup_cached,
+                                      run_plan_trials)
+from repro.tuning import TuningCache
 
-log = logging.getLogger("repro.autotune")
-
-# power-of-two ladders; rows stay sublane-aligned, vocab lane-aligned
-_ROW_CANDIDATES = (8, 16, 32, 64, 128, 256, 512, 1024)
-_V_CANDIDATES = (128, 256, 512, 1024, 2048, 4096)
-
-
-def _round_up(x: int, m: int) -> int:
-    return -(-int(x) // m) * m
-
-
-def candidate_plans(
-    n_rows: int,
-    vocab: int,
-    d: int,
-    *,
-    in_bytes: int = 2,
-    vmem_budget: int = _DEFAULT_BUDGET,
-    max_block_rows: int = 1024,
-    max_block_v: int = 4096,
-) -> List[BlockPlan]:
-    """Aligned tile shapes under the VMEM budget, largest tiles first.
-
-    Tiles larger than the (padded) problem only add masked work, so the
-    ladders are capped at round_up(n_rows, 8) / round_up(vocab, 128).
-    The `choose_blocks` heuristic is appended if enumeration missed it
-    (possible only when even the minimum tile busts the budget), so the
-    heuristic is always a member of every candidate set.
-    """
-    bm_cap = min(max_block_rows, max(_round_up(n_rows, _SUBLANE), _SUBLANE))
-    bv_cap = min(max_block_v, max(_round_up(vocab, _LANE), _LANE))
-    plans = [
-        BlockPlan(bm, bv, tile_bytes(bm, bv, d, in_bytes))
-        for bm in _ROW_CANDIDATES if bm <= bm_cap
-        for bv in _V_CANDIDATES if bv <= bv_cap
-        and tile_bytes(bm, bv, d, in_bytes) <= vmem_budget
-    ]
-    heur = choose_blocks(n_rows, vocab, d, in_bytes=in_bytes,
-                         vmem_budget=vmem_budget,
-                         max_block_rows=max_block_rows,
-                         max_block_v=max_block_v)
-    if heur.shape not in {p.shape for p in plans}:
-        plans.append(heur)
-    # biggest tiles first: fewer grid steps, more MXU work per step —
-    # when a trial budget trims the list, the plausible winners survive
-    plans.sort(key=lambda p: (p.block_rows * p.block_v, p.block_v),
-               reverse=True)
-    return plans
+__all__ = ["TuneResult", "candidate_plans", "measure_plan", "run_trials",
+           "autotune_plan", "lookup_plan"]
 
 
 def measure_plan(
@@ -123,17 +79,6 @@ def measure_plan(
     return best * 1e6
 
 
-@dataclasses.dataclass(frozen=True)
-class TuneResult:
-    """Outcome of one trial sweep for a single problem shape."""
-
-    best: BlockPlan
-    best_us: float
-    heuristic: BlockPlan
-    heuristic_us: float
-    trials: Tuple[Tuple[BlockPlan, float], ...]
-
-
 def run_trials(
     n_rows: int,
     vocab: int,
@@ -147,46 +92,22 @@ def run_trials(
     interpret: Optional[bool] = None,
     seed: int = 0,
 ) -> TuneResult:
-    """Time candidate plans on synthetic data of the exact problem shape.
-
-    `trial_budget` caps how many candidates are timed (<= 0: no cap); the
-    heuristic plan is always timed even when the cap would drop it, so
-    `best_us <= heuristic_us` holds by construction within one sweep.
-    Candidates whose measurement raises (e.g. an interpret-mode resource
-    limit) score +inf rather than aborting the sweep.
-    """
+    """Time candidate plans on synthetic data of the exact problem shape
+    (see `plan_tuner.run_plan_trials` for the sweep semantics)."""
     cfg = cfg or LossConfig()
     dtype = jnp.dtype(dtype)
-    heur = choose_blocks(n_rows, vocab, d, in_bytes=dtype.itemsize)
-    cands = candidate_plans(n_rows, vocab, d, in_bytes=dtype.itemsize)
-    if trial_budget > 0 and len(cands) > trial_budget:
-        cands = cands[:trial_budget]
-    if heur.shape not in {p.shape for p in cands}:
-        cands.append(heur)
-
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
     h = (jax.random.normal(k1, (n_rows, d)) * 0.5).astype(dtype)
     w = (jax.random.normal(k2, (vocab, d)) * 0.05).astype(dtype)
     y = jax.random.randint(k3, (n_rows,), 0,
                            max(cfg.resolve_vocab(vocab), 1))
-
-    trials = []
-    for plan in cands:
-        try:
-            us = measure_plan(h, w, y, cfg, plan, iters=trial_iters,
-                              include_bwd=include_bwd, interpret=interpret)
-        except Exception:  # noqa: BLE001 — a bad tile must not end tuning
-            log.warning("trial failed for plan %s at %dx%dx%d",
-                        plan.shape, n_rows, vocab, d, exc_info=True)
-            us = float("inf")
-        trials.append((plan, us))
-        log.debug("plan %s: %.1f us", plan.shape, us)
-
-    best, best_us = min(trials, key=lambda t: t[1])
-    heur_us = next(us for p, us in trials if p.shape == heur.shape)
-    if best_us == float("inf"):
-        best, best_us = heur, heur_us  # nothing measured: trust the model
-    return TuneResult(best, best_us, heur, heur_us, tuple(trials))
+    # `measure_plan` resolved from module globals at call time, so tests
+    # (and callers) may monkeypatch it
+    return run_plan_trials(
+        lambda plan: measure_plan(h, w, y, cfg, plan, iters=trial_iters,
+                                  include_bwd=include_bwd,
+                                  interpret=interpret),
+        n_rows, vocab, d, dtype, trial_budget=trial_budget)
 
 
 def autotune_plan(
@@ -210,31 +131,14 @@ def autotune_plan(
     The winner and its latency are persisted via ``cache.save()`` so the
     next process is a pure cache hit.
     """
-    dtype = jnp.dtype(dtype)
-    key = plan_key(n_rows, vocab, d, dtype.name, jax.default_backend())
-    cache = cache if cache is not None else get_cache()
-    if not refresh:
-        hit = cache.get(key)
-        if hit is not None:
-            return hit
-    if trial_budget <= 0:
-        return choose_blocks(n_rows, vocab, d, in_bytes=dtype.itemsize)
-    result = run_trials(n_rows, vocab, d, dtype, cfg=cfg,
-                        trial_budget=trial_budget, trial_iters=trial_iters,
-                        include_bwd=include_bwd, interpret=interpret)
-    if result.best_us == float("inf"):
-        # nothing measured (every trial raised): fall back without
-        # memoizing, so tuning retries once the transient cause clears —
-        # and never write Infinity into the JSON cache
-        log.warning("all trials failed for %s; using heuristic %s "
-                    "uncached", key, result.best.shape)
-        return result.best
-    log.info("tuned %s -> %s (%.1f us; heuristic %s %.1f us)",
-             key, result.best.shape, result.best_us,
-             result.heuristic.shape, result.heuristic_us)
-    cache.put(key, result.best, us=result.best_us)
-    cache.save()
-    return result.best
+    return autotune_cached(
+        "ce",
+        lambda: run_trials(n_rows, vocab, d, dtype, cfg=cfg,
+                           trial_budget=trial_budget,
+                           trial_iters=trial_iters,
+                           include_bwd=include_bwd, interpret=interpret),
+        n_rows, vocab, d, dtype, cache=cache, trial_budget=trial_budget,
+        refresh=refresh)
 
 
 def lookup_plan(
@@ -251,10 +155,4 @@ def lookup_plan(
     (shape, dtype, backend) key, otherwise the `choose_blocks`
     heuristic.  Safe to call at trace time.
     """
-    dtype = jnp.dtype(dtype)
-    cache = cache if cache is not None else get_cache()
-    hit = cache.get(plan_key(n_rows, vocab, d, dtype.name,
-                             jax.default_backend()))
-    if hit is not None:
-        return hit
-    return choose_blocks(n_rows, vocab, d, in_bytes=dtype.itemsize)
+    return lookup_cached("ce", n_rows, vocab, d, dtype, cache=cache)

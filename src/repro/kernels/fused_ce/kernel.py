@@ -34,21 +34,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.types import LossConfig
 from repro.core.windows import choose_blocks, BlockPlan
+from repro.kernels.pallas_utils import compiler_params, interpret_default
 
 _NEG_INF = float("-inf")
-
-
-def _compiler_params(n_parallel_first: bool):
-    """dimension_semantics: first axis parallel, second sequential."""
-    sem = ("parallel", "arbitrary")
-    try:
-        return pltpu.CompilerParams(dimension_semantics=sem)
-    except (AttributeError, TypeError):  # pragma: no cover - older jax
-        return pltpu.TPUCompilerParams(dimension_semantics=sem)
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _tile_logits(h_tile, w_tile, cfg: LossConfig):
@@ -131,7 +119,7 @@ def fwd_stats(
         cfg.resolve_vocab(v_orig))
     plan = plan or choose_blocks(n, v_orig, d, in_bytes=h.dtype.itemsize)
     bm, bv = plan.block_rows, plan.block_v
-    interpret = _interpret_default() if interpret is None else interpret
+    interpret = interpret_default() if interpret is None else interpret
 
     n_pad = (-n) % bm
     v_pad = (-v_orig) % bv
@@ -161,7 +149,7 @@ def fwd_stats(
         out_specs=[row_spec, row_spec, row_spec],
         out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bm, 1), jnp.float32) for _ in range(4)],
-        compiler_params=_compiler_params(True),
+        compiler_params=compiler_params(),
         interpret=interpret,
     )(off, y2, h, w)
     return lse[:n, 0], ztgt[:n, 0], zsum[:n, 0]
@@ -260,7 +248,7 @@ def bwd_grads(
         cfg.resolve_vocab(v_orig))
     plan = plan or choose_blocks(n, v_orig, d, in_bytes=h.dtype.itemsize)
     bm, bv = plan.block_rows, plan.block_v
-    interpret = _interpret_default() if interpret is None else interpret
+    interpret = interpret_default() if interpret is None else interpret
 
     n_pad = (-n) % bm
     v_pad = (-v_orig) % bv
@@ -296,7 +284,7 @@ def bwd_grads(
         out_specs=pl.BlockSpec((bm, d), row_in),
         out_shape=jax.ShapeDtypeStruct((np_, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, d), jnp.float32)],
-        compiler_params=_compiler_params(True),
+        compiler_params=compiler_params(),
         interpret=interpret,
     )(off, y2, lse2, gm2, pc2, h, w)
 
@@ -317,7 +305,7 @@ def bwd_grads(
         out_specs=pl.BlockSpec((bv, d), lambda v, r: (v, 0)),
         out_shape=jax.ShapeDtypeStruct((vp, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bv, d), jnp.float32)],
-        compiler_params=_compiler_params(True),
+        compiler_params=compiler_params(),
         interpret=interpret,
     )(off, y2, lse2, gm2, pc2, h, w)
 

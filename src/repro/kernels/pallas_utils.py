@@ -1,0 +1,24 @@
+"""Tiny shared helpers for the Pallas TPU kernels (fused-CE, top-k,
+token scoring) — one place to absorb pallas API drift across jax
+versions and the interpret-mode backend check."""
+
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params():
+    """dimension_semantics: first grid axis parallel, second sequential —
+    the layout every kernel in this repo uses (state scratch is carried
+    across the innermost, sequential axis)."""
+    sem = ("parallel", "arbitrary")
+    try:
+        return pltpu.CompilerParams(dimension_semantics=sem)
+    except (AttributeError, TypeError):  # pragma: no cover - older jax
+        return pltpu.TPUCompilerParams(dimension_semantics=sem)
+
+
+def interpret_default() -> bool:
+    """Interpret mode everywhere but real TPU."""
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,193 @@
+"""Shared block-plan tuning loop for every kernel family (DESIGN.md §3.2).
+
+Three kernels autotune their tiles — fused-CE (`op="ce"`), streaming
+top-k (`"topk<k>"`), token scoring (`"score<P>"`) — and all follow the
+same protocol: enumerate aligned candidates (heuristic always in the
+timed set), time each on synthetic data of the exact problem shape,
+inf-on-exception so a bad tile never aborts the sweep, memoize the
+winner in the persistent JSON cache, and never persist a sweep where
+every trial failed.  This module is that loop, parameterized by a
+``measure(plan) -> us`` callable and the cache-key namespace; the
+per-kernel ``autotune.py`` modules supply only the synthetic inputs and
+the measured call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.windows import (BlockPlan, choose_blocks, tile_bytes,
+                                _DEFAULT_BUDGET, _LANE, _SUBLANE)
+from repro.tuning import TuningCache, get_cache, plan_key
+
+log = logging.getLogger("repro.autotune")
+
+# power-of-two ladders; rows stay sublane-aligned, vocab lane-aligned
+_ROW_CANDIDATES = (8, 16, 32, 64, 128, 256, 512, 1024)
+_V_CANDIDATES = (128, 256, 512, 1024, 2048, 4096)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-int(x) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """Outcome of one trial sweep for a single problem shape."""
+
+    best: BlockPlan
+    best_us: float
+    heuristic: BlockPlan
+    heuristic_us: float
+    trials: Tuple[Tuple[BlockPlan, float], ...]
+
+
+def candidate_plans(
+    n_rows: int,
+    vocab: int,
+    d: int,
+    *,
+    in_bytes: int = 2,
+    vmem_budget: int = _DEFAULT_BUDGET,
+    max_block_rows: int = 1024,
+    max_block_v: int = 4096,
+) -> List[BlockPlan]:
+    """Aligned tile shapes under the VMEM budget, largest tiles first.
+
+    Tiles larger than the (padded) problem only add masked work, so the
+    ladders are capped at round_up(n_rows, 8) / round_up(vocab, 128).
+    The `choose_blocks` heuristic is appended if enumeration missed it
+    (possible only when even the minimum tile busts the budget), so the
+    heuristic is always a member of every candidate set.
+    """
+    bm_cap = min(max_block_rows, max(_round_up(n_rows, _SUBLANE), _SUBLANE))
+    bv_cap = min(max_block_v, max(_round_up(vocab, _LANE), _LANE))
+    plans = [
+        BlockPlan(bm, bv, tile_bytes(bm, bv, d, in_bytes))
+        for bm in _ROW_CANDIDATES if bm <= bm_cap
+        for bv in _V_CANDIDATES if bv <= bv_cap
+        and tile_bytes(bm, bv, d, in_bytes) <= vmem_budget
+    ]
+    heur = choose_blocks(n_rows, vocab, d, in_bytes=in_bytes,
+                         vmem_budget=vmem_budget,
+                         max_block_rows=max_block_rows,
+                         max_block_v=max_block_v)
+    if heur.shape not in {p.shape for p in plans}:
+        plans.append(heur)
+    # biggest tiles first: fewer grid steps, more MXU work per step —
+    # when a trial budget trims the list, the plausible winners survive
+    plans.sort(key=lambda p: (p.block_rows * p.block_v, p.block_v),
+               reverse=True)
+    return plans
+
+
+def run_plan_trials(
+    measure: Callable[[BlockPlan], float],
+    n_rows: int,
+    vocab: int,
+    d: int,
+    dtype,
+    *,
+    trial_budget: int = 8,
+    tag: str = "",
+) -> TuneResult:
+    """Time candidate plans via `measure(plan) -> us`.
+
+    `trial_budget` caps how many candidates are timed (<= 0: no cap);
+    the heuristic plan is always timed even when the cap would drop it,
+    so ``best_us <= heuristic_us`` holds by construction within one
+    sweep.  Candidates whose measurement raises (e.g. an interpret-mode
+    resource limit) score +inf rather than aborting the sweep; if EVERY
+    trial failed the heuristic is returned with ``best_us == inf``.
+    """
+    dtype = jnp.dtype(dtype)
+    heur = choose_blocks(n_rows, vocab, d, in_bytes=dtype.itemsize)
+    cands = candidate_plans(n_rows, vocab, d, in_bytes=dtype.itemsize)
+    if trial_budget > 0 and len(cands) > trial_budget:
+        cands = cands[:trial_budget]
+    if heur.shape not in {p.shape for p in cands}:
+        cands.append(heur)
+
+    trials = []
+    for plan in cands:
+        try:
+            us = measure(plan)
+        except Exception:  # noqa: BLE001 — a bad tile must not end tuning
+            log.warning("%strial failed for plan %s at %dx%dx%d",
+                        tag, plan.shape, n_rows, vocab, d, exc_info=True)
+            us = float("inf")
+        trials.append((plan, us))
+        log.debug("%splan %s: %.1f us", tag, plan.shape, us)
+
+    best, best_us = min(trials, key=lambda t: t[1])
+    heur_us = next(us for p, us in trials if p.shape == heur.shape)
+    if best_us == float("inf"):
+        best, best_us = heur, heur_us  # nothing measured: trust the model
+    return TuneResult(best, best_us, heur, heur_us, tuple(trials))
+
+
+def autotune_cached(
+    op: str,
+    run: Callable[[], TuneResult],
+    n_rows: int,
+    vocab: int,
+    d: int,
+    dtype,
+    *,
+    cache: Optional[TuningCache] = None,
+    trial_budget: int = 8,
+    refresh: bool = False,
+) -> BlockPlan:
+    """Memoized empirical plan: cache hit → stored winner, miss → `run()`.
+
+    `trial_budget <= 0` disables measurement entirely and returns the
+    `choose_blocks` heuristic (still the universal cold-cache fallback).
+    A sweep where every trial failed falls back to the heuristic WITHOUT
+    memoizing, so tuning retries once the transient cause clears — and
+    Infinity is never written into the JSON cache.
+    """
+    dtype = jnp.dtype(dtype)
+    key = plan_key(n_rows, vocab, d, dtype.name, jax.default_backend(),
+                   op=op)
+    cache = cache if cache is not None else get_cache()
+    if not refresh:
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
+    if trial_budget <= 0:
+        return choose_blocks(n_rows, vocab, d, in_bytes=dtype.itemsize)
+    result = run()
+    if result.best_us == float("inf"):
+        log.warning("all trials failed for %s; using heuristic %s "
+                    "uncached", key, result.best.shape)
+        return result.best
+    log.info("tuned %s -> %s (%.1f us; heuristic %s %.1f us)",
+             key, result.best.shape, result.best_us,
+             result.heuristic.shape, result.heuristic_us)
+    cache.put(key, result.best, us=result.best_us)
+    cache.save()
+    return result.best
+
+
+def lookup_cached(
+    op: str,
+    n_rows: int,
+    vocab: int,
+    d: int,
+    dtype,
+    *,
+    cache: Optional[TuningCache] = None,
+) -> BlockPlan:
+    """Zero-cost plan resolution for hot paths (never measures)."""
+    dtype = jnp.dtype(dtype)
+    cache = cache if cache is not None else get_cache()
+    hit = cache.get(plan_key(n_rows, vocab, d, dtype.name,
+                             jax.default_backend(), op=op))
+    if hit is not None:
+        return hit
+    return choose_blocks(n_rows, vocab, d, in_bytes=dtype.itemsize)

@@ -1,8 +1,8 @@
 """Block-plan autotuning for the streaming top-k decode kernel.
 
-Same closed loop as the fused-CE autotuner (DESIGN.md §3.2), pointed at
-`sample_topk.kernel.topk_scores`: enumerate aligned tile candidates with
-the shared `candidate_plans` ladder, time each on synthetic data of the
+Same closed loop as the fused-CE autotuner (DESIGN.md §3.2, shared via
+`kernels/plan_tuner.py`), pointed at `sample_topk.kernel.topk_scores`:
+enumerate aligned tile candidates, time each on synthetic data of the
 exact decode shape, memoize the winner in the persistent JSON cache.
 
 The cache key is namespaced ``topk<k>`` (see `repro.tuning.plan_key`):
@@ -15,19 +15,17 @@ neither may shadow the fused-CE winner for the same (n, V, d).
 from __future__ import annotations
 
 import functools
-import logging
 import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.windows import BlockPlan, choose_blocks
-from repro.kernels.fused_ce.autotune import TuneResult, candidate_plans
+from repro.core.windows import BlockPlan
+from repro.kernels.plan_tuner import (TuneResult, autotune_cached,
+                                      lookup_cached, run_plan_trials)
 from repro.kernels.sample_topk import kernel as K
-from repro.tuning import TuningCache, get_cache, plan_key
-
-log = logging.getLogger("repro.autotune")
+from repro.tuning import TuningCache
 
 
 def _op(k: int) -> str:
@@ -68,35 +66,15 @@ def run_topk_trials(
     """Time candidate plans for the decode top-k shape; heuristic always in
     the timed set, so ``best_us <= heuristic_us`` within one sweep."""
     dtype = jnp.dtype(dtype)
-    heur = choose_blocks(n_rows, vocab, d, in_bytes=dtype.itemsize)
-    cands = candidate_plans(n_rows, vocab, d, in_bytes=dtype.itemsize)
-    if trial_budget > 0 and len(cands) > trial_budget:
-        cands = cands[:trial_budget]
-    if heur.shape not in {p.shape for p in cands}:
-        cands.append(heur)
-
     k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
     h = (jax.random.normal(k1, (n_rows, d)) * 0.5).astype(dtype)
     w = (jax.random.normal(k2, (vocab, d)) * 0.05).astype(dtype)
-
-    trials = []
-    for plan in cands:
-        try:
-            us = measure_topk_plan(h, w, k, plan, iters=trial_iters,
-                                   logit_softcap=logit_softcap,
-                                   interpret=interpret)
-        except Exception:  # noqa: BLE001 — a bad tile must not end tuning
-            log.warning("topk trial failed for plan %s at %dx%dx%d k=%d",
-                        plan.shape, n_rows, vocab, d, k, exc_info=True)
-            us = float("inf")
-        trials.append((plan, us))
-        log.debug("topk plan %s: %.1f us", plan.shape, us)
-
-    best, best_us = min(trials, key=lambda t: t[1])
-    heur_us = next(us for p, us in trials if p.shape == heur.shape)
-    if best_us == float("inf"):
-        best, best_us = heur, heur_us  # nothing measured: trust the model
-    return TuneResult(best, best_us, heur, heur_us, tuple(trials))
+    return run_plan_trials(
+        lambda plan: measure_topk_plan(h, w, k, plan, iters=trial_iters,
+                                       logit_softcap=logit_softcap,
+                                       interpret=interpret),
+        n_rows, vocab, d, dtype, trial_budget=trial_budget,
+        tag=f"topk{k} ")
 
 
 def autotune_topk_plan(
@@ -114,31 +92,15 @@ def autotune_topk_plan(
     refresh: bool = False,
 ) -> BlockPlan:
     """Memoized empirical plan for the decode top-k kernel."""
-    dtype = jnp.dtype(dtype)
-    key = plan_key(n_rows, vocab, d, dtype.name, jax.default_backend(),
-                   op=_op(k))
-    cache = cache if cache is not None else get_cache()
-    if not refresh:
-        hit = cache.get(key)
-        if hit is not None:
-            return hit
-    if trial_budget <= 0:
-        return choose_blocks(n_rows, vocab, d, in_bytes=dtype.itemsize)
-    result = run_topk_trials(n_rows, vocab, d, k, dtype,
-                             trial_budget=trial_budget,
-                             trial_iters=trial_iters,
-                             logit_softcap=logit_softcap,
-                             interpret=interpret)
-    if result.best_us == float("inf"):
-        log.warning("all topk trials failed for %s; using heuristic %s "
-                    "uncached", key, result.best.shape)
-        return result.best
-    log.info("tuned %s -> %s (%.1f us; heuristic %s %.1f us)",
-             key, result.best.shape, result.best_us,
-             result.heuristic.shape, result.heuristic_us)
-    cache.put(key, result.best, us=result.best_us)
-    cache.save()
-    return result.best
+    return autotune_cached(
+        _op(k),
+        lambda: run_topk_trials(n_rows, vocab, d, k, dtype,
+                                trial_budget=trial_budget,
+                                trial_iters=trial_iters,
+                                logit_softcap=logit_softcap,
+                                interpret=interpret),
+        n_rows, vocab, d, dtype, cache=cache, trial_budget=trial_budget,
+        refresh=refresh)
 
 
 def lookup_topk_plan(
@@ -151,10 +113,4 @@ def lookup_topk_plan(
     cache: Optional[TuningCache] = None,
 ) -> BlockPlan:
     """Zero-cost plan resolution for the decode hot path (never measures)."""
-    dtype = jnp.dtype(dtype)
-    cache = cache if cache is not None else get_cache()
-    hit = cache.get(plan_key(n_rows, vocab, d, dtype.name,
-                             jax.default_backend(), op=_op(k)))
-    if hit is not None:
-        return hit
-    return choose_blocks(n_rows, vocab, d, in_bytes=dtype.itemsize)
+    return lookup_cached(_op(k), n_rows, vocab, d, dtype, cache=cache)

@@ -41,26 +41,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.windows import BlockPlan, choose_blocks
+from repro.core.windows import _LANE, BlockPlan, choose_blocks
+from repro.kernels.pallas_utils import compiler_params, interpret_default
 
 _NEG_INF = float("-inf")
-_LANE = 128
 # sentinel > any global vocab id; used by the lowest-index tie-break scans
 # (plain int — a jnp scalar here would be a captured constant in the kernel)
 _BIG_IDX = 2 ** 30
-
-
-def _compiler_params():
-    """First grid axis parallel (rows), second sequential (vocab scan)."""
-    sem = ("parallel", "arbitrary")
-    try:
-        return pltpu.CompilerParams(dimension_semantics=sem)
-    except (AttributeError, TypeError):  # pragma: no cover - older jax
-        return pltpu.TPUCompilerParams(dimension_semantics=sem)
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _topk_kernel(off_ref, h_ref, w_ref,          # inputs
@@ -160,7 +147,7 @@ def topk_scores(
     valid = v_orig if valid_vocab is None else valid_vocab
     plan = plan or choose_blocks(n, v_orig, d, in_bytes=h.dtype.itemsize)
     bm, bv = plan.block_rows, plan.block_v
-    interpret = _interpret_default() if interpret is None else interpret
+    interpret = interpret_default() if interpret is None else interpret
     kp = -(-k // _LANE) * _LANE                     # lane-aligned state
 
     n_pad = (-n) % bm
@@ -189,7 +176,7 @@ def topk_scores(
                    jax.ShapeDtypeStruct((np_, kp), jnp.int32)],
         scratch_shapes=[pltpu.VMEM((bm, kp), jnp.float32),
                         pltpu.VMEM((bm, kp), jnp.int32)],
-        compiler_params=_compiler_params(),
+        compiler_params=compiler_params(),
         interpret=interpret,
     )(off, h, w)
     return vals[:n, :k], idxs[:n, :k]

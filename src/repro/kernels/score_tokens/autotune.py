@@ -1,0 +1,119 @@
+"""Block-plan autotuning for the token-scoring kernel.
+
+Same closed loop as the fused-CE / top-k autotuners (DESIGN.md §3.2,
+shared via `kernels/plan_tuner.py`), pointed at
+`score_tokens.kernel.score_stats`: enumerate aligned tile candidates,
+time each on synthetic data of the exact verification shape, memoize
+the winner in the persistent JSON cache.
+
+The cache key is namespaced ``score<P>`` (see `repro.tuning.plan_key`):
+the gather cost of a vocab step grows with the candidate count P (P
+mask-and-reduce passes on the VPU against one tile GEMM on the MXU), so
+the best tile for single-candidate verification and for P-way
+loglikelihood scoring can differ — and neither may shadow the fused-CE
+or top-k winner for the same (n, V, d).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.windows import BlockPlan
+from repro.kernels.plan_tuner import (TuneResult, autotune_cached,
+                                      lookup_cached, run_plan_trials)
+from repro.kernels.score_tokens import kernel as K
+from repro.tuning import TuningCache
+
+
+def _op(p: int) -> str:
+    return f"score{int(p)}"
+
+
+def measure_score_plan(
+    h: jax.Array, w: jax.Array, ids: jax.Array, plan: BlockPlan, *,
+    iters: int = 2, logit_softcap: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> float:
+    """Min-of-`iters` wall time (µs) of one `score_stats` call."""
+    fn = jax.jit(functools.partial(K.score_stats, plan=plan,
+                                   logit_softcap=logit_softcap,
+                                   interpret=interpret))
+    jax.block_until_ready(fn(h, w, ids))   # compile, excluded from timing
+    best = float("inf")
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(h, w, ids))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run_score_trials(
+    n_rows: int,
+    vocab: int,
+    d: int,
+    n_cand: int,
+    dtype=jnp.bfloat16,
+    *,
+    trial_budget: int = 8,
+    trial_iters: int = 2,
+    logit_softcap: Optional[float] = None,
+    interpret: Optional[bool] = None,
+    seed: int = 0,
+) -> TuneResult:
+    """Time candidate plans for the scoring shape; the heuristic is always
+    in the timed set, so ``best_us <= heuristic_us`` within one sweep."""
+    dtype = jnp.dtype(dtype)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    h = (jax.random.normal(k1, (n_rows, d)) * 0.5).astype(dtype)
+    w = (jax.random.normal(k2, (vocab, d)) * 0.05).astype(dtype)
+    ids = jax.random.randint(k3, (n_rows, n_cand), 0, vocab, jnp.int32)
+    return run_plan_trials(
+        lambda plan: measure_score_plan(h, w, ids, plan, iters=trial_iters,
+                                        logit_softcap=logit_softcap,
+                                        interpret=interpret),
+        n_rows, vocab, d, dtype, trial_budget=trial_budget,
+        tag=f"score{n_cand} ")
+
+
+def autotune_score_plan(
+    n_rows: int,
+    vocab: int,
+    d: int,
+    n_cand: int,
+    dtype=jnp.bfloat16,
+    *,
+    cache: Optional[TuningCache] = None,
+    trial_budget: int = 8,
+    trial_iters: int = 2,
+    logit_softcap: Optional[float] = None,
+    interpret: Optional[bool] = None,
+    refresh: bool = False,
+) -> BlockPlan:
+    """Memoized empirical plan for the token-scoring kernel."""
+    return autotune_cached(
+        _op(n_cand),
+        lambda: run_score_trials(n_rows, vocab, d, n_cand, dtype,
+                                 trial_budget=trial_budget,
+                                 trial_iters=trial_iters,
+                                 logit_softcap=logit_softcap,
+                                 interpret=interpret),
+        n_rows, vocab, d, dtype, cache=cache, trial_budget=trial_budget,
+        refresh=refresh)
+
+
+def lookup_score_plan(
+    n_rows: int,
+    vocab: int,
+    d: int,
+    n_cand: int,
+    dtype=jnp.bfloat16,
+    *,
+    cache: Optional[TuningCache] = None,
+) -> BlockPlan:
+    """Zero-cost plan resolution for the verify hot path (never measures)."""
+    return lookup_cached(_op(n_cand), n_rows, vocab, d, dtype, cache=cache)

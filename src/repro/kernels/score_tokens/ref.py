@@ -1,0 +1,77 @@
+"""Pure-JAX streaming reference for the token-scoring kernel.
+
+Scans the lm_head in vocab chunks via `lax.scan` carrying the online
+(m, a, z_cand) state — same math, any backend.  Serves as the semantic
+oracle for `kernel.score_stats` and as the ``impl='jax'`` scoring path
+of the speculative-decoding verifier (`serve/spec.py`).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def streaming_score(
+    h: jax.Array, w: jax.Array, ids: jax.Array, *,
+    block_v: int = 8192, valid_vocab: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    temperature: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """(logp (N, P) f32, lse (N,) f32) of candidate ids under h @ w.T.
+
+    h: (N, d); w: (V, d); ids: (N,) or (N, P) int32.  Ids outside
+    ``[0, valid_vocab)`` score -inf.  `temperature` > 0 scales logits
+    by 1/T after the softcap (the sampled distribution); None or <= 0
+    scores unscaled.  Mirrors `ops.pallas_score_tokens`.
+    """
+    if ids.ndim == 1:
+        ids = ids[:, None]
+    n, d = h.shape
+    v = w.shape[0]
+    valid = v if valid_vocab is None else valid_vocab
+    inv_temp = (1.0 / float(temperature)
+                if temperature is not None and temperature > 0 else 1.0)
+    bv = min(block_v, v)
+    pad = (-v) % bv
+    if pad:
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    n_chunks = w.shape[0] // bv
+    w_chunks = w.reshape(n_chunks, bv, d)
+    h32 = h.astype(jnp.float32)
+    ids = ids.astype(jnp.int32)
+
+    def body(carry, inputs):
+        m, a, zt = carry
+        w_chunk, idx = inputs
+        z = jnp.dot(h32, w_chunk.T.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)     # (N, bv)
+        if logit_softcap is not None:
+            cap = jnp.float32(logit_softcap)
+            z = cap * jnp.tanh(z / cap)
+        if inv_temp != 1.0:
+            z = z * jnp.float32(inv_temp)
+        col = idx * bv + jnp.arange(bv, dtype=jnp.int32)
+        col_valid = col[None, :] < valid
+        zm = jnp.where(col_valid, z, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(zm, axis=1, keepdims=True))
+        safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        a = a * jnp.exp(m - safe) + jnp.sum(jnp.exp(zm - safe), axis=1,
+                                            keepdims=True)
+        # gather: each candidate matches at most one column per chunk
+        hit = (ids[:, :, None] == col[None, None, :]) & \
+            col_valid[:, None, :]
+        zt = zt + jnp.sum(jnp.where(hit, z[:, None, :], 0.0), axis=2)
+        return (m_new, a, zt), None
+
+    init = (jnp.full((n, 1), -jnp.inf, jnp.float32),
+            jnp.zeros((n, 1), jnp.float32),
+            jnp.zeros(ids.shape, jnp.float32))
+    (m, a, zt), _ = jax.lax.scan(
+        body, init, (w_chunks, jnp.arange(n_chunks, dtype=jnp.int32)))
+    lse = (m + jnp.log(a))[:, 0]
+    ok = (ids >= 0) & (ids < valid)
+    logp = jnp.where(ok, zt - lse[:, None], -jnp.inf)
+    return logp, lse

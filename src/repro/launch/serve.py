@@ -5,18 +5,27 @@
 
 Submits `--requests` (default: one per slot) prompts to the continuous
 scheduler and prints per-request tokens plus throughput/occupancy.
+
+Speculative decoding: pass ``--spec-draft <arch-id>`` (the draft model's
+config; ``self`` drafts with the target model itself) and ``--spec-k N``
+to decode through `serve.spec.SpecEngine` — each engine step emits up to
+N+1 tokens.  ``--stats-json [PATH]`` dumps the scheduler's run report
+(per-request TTFT/latency, tokens-per-step, acceptance rate) as JSON to
+PATH, or to stdout when no PATH is given.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import numpy as np
 
 from repro.models.registry import get_arch, init_params
-from repro.serve import ServeConfig, Engine, ContinuousScheduler
+from repro.serve import (ServeConfig, Engine, ContinuousScheduler,
+                         SpecConfig, SpecEngine)
 
 
 def main(argv=None):
@@ -37,6 +46,15 @@ def main(argv=None):
                     choices=("pallas", "jax"))
     ap.add_argument("--autotune", action="store_true",
                     help="tune decode top-k block plans at engine init")
+    ap.add_argument("--spec-draft", default=None,
+                    help="draft arch id for speculative decoding "
+                         "('self': draft with the target model)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per speculative step")
+    ap.add_argument("--stats-json", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="dump the scheduler stats report as JSON "
+                         "(to stdout when PATH is omitted)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -53,7 +71,19 @@ def main(argv=None):
                      temperature=args.temperature, top_k=args.top_k,
                      top_p=args.top_p, sampler_impl=args.sampler_impl,
                      enc_len=enc_len, autotune=args.autotune)
-    eng = Engine(arch, params, sc)
+    if args.spec_draft:
+        if args.spec_draft == "self":
+            draft_arch, draft_params = arch, params
+        else:
+            draft_arch = get_arch(args.spec_draft, reduced=args.reduced)
+            draft_params = init_params(draft_arch,
+                                       jax.random.PRNGKey(args.seed + 1))
+        eng = SpecEngine(arch, params, sc, draft_arch, draft_params,
+                         SpecConfig(k=args.spec_k))
+        mode = f"spec(draft={args.spec_draft}, k={args.spec_k})"
+    else:
+        eng = Engine(arch, params, sc)
+        mode = "continuous"
     rng = np.random.default_rng(args.seed)
     n_req = args.requests or args.batch
     prompts = rng.integers(1, arch.vocab_size,
@@ -65,10 +95,21 @@ def main(argv=None):
     results = sched.run()
     dt = time.perf_counter() - t0
     total = sum(len(results[r]) for r in rids)
-    print(f"[serve] arch={arch.arch_id} served {len(rids)} requests "
-          f"({total} tokens) in {dt:.2f}s ({total / dt:.1f} tok/s incl. "
-          f"compile; occupancy {sched.occupancy:.2f}, "
-          f"{sched.decode_steps} decode steps)")
+    print(f"[serve] arch={arch.arch_id} mode={mode} served {len(rids)} "
+          f"requests ({total} tokens) in {dt:.2f}s ({total / dt:.1f} tok/s "
+          f"incl. compile; occupancy {sched.occupancy:.2f}, "
+          f"{sched.decode_steps} decode steps, "
+          f"{sched.tokens_per_step:.2f} tok/slot-step"
+          + (f", acceptance {sched.acceptance_rate:.2f}"
+             if args.spec_draft else "") + ")")
+    if args.stats_json is not None:
+        report = json.dumps(sched.stats(), indent=1, sort_keys=True)
+        if args.stats_json == "-":
+            print(report)
+        else:
+            with open(args.stats_json, "w", encoding="utf-8") as f:
+                f.write(report + "\n")
+            print(f"[serve] stats written to {args.stats_json}")
     out = np.stack([np.pad(results[r], (0, args.max_new - len(results[r])))
                     for r in rids])
     print("[serve] sample row:", out[0][:16])

@@ -330,18 +330,27 @@ def decode_attention(
     q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     cache_len: jax.Array, cfg: AttnConfig,
 ) -> jax.Array:
-    """Single-step decode: q (B, 1, nq, hd) vs cache (B, S, nkv, hd)."""
+    """Cached decode: q (B, Tq, nq, hd) vs cache (B, S, nkv, hd).
+
+    `cache_len` (B,) is the cache length AFTER the Tq new entries were
+    appended, so query i sits at absolute position ``cache_len - Tq + i``
+    and attends causally to everything at or before it.  Tq == 1 is the
+    classic single-step decode; Tq > 1 is the speculative-verification
+    path (DESIGN.md §6.3) — scores are O(Tq * S), no tiling needed for
+    the small Tq = K+1 drafts-per-step.
+    """
     b, tq, nq, hd = q.shape
     s_len = k_cache.shape[1]
     nkv = k_cache.shape[2]
     g = nq // nkv
     q5 = q.reshape(b, tq, nkv, g, hd)
-    s = _tile_scores(q5, k_cache, cfg)                   # (B,nkv,g,1,S)
+    s = _tile_scores(q5, k_cache, cfg)                   # (B,nkv,g,Tq,S)
     kpos = jnp.arange(s_len)
-    mask = kpos[None, :] < cache_len[:, None]            # (B, S)
+    qpos = cache_len[:, None] - tq + jnp.arange(tq)[None, :]   # (B, Tq)
+    mask = kpos[None, None, :] <= qpos[:, :, None]       # (B, Tq, S)
     if cfg.window is not None:
-        mask = mask & (kpos[None, :] > cache_len[:, None] - 1 - cfg.window)
-    s = jnp.where(mask[:, None, None, None, :], s, _NEG_INF)
+        mask = mask & (kpos[None, None, :] > qpos[:, :, None] - cfg.window)
+    s = jnp.where(mask[:, None, None, :, :], s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bngqk,bknh->bqngh", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
@@ -358,12 +367,18 @@ def attention_layer(
     positions: Optional[jax.Array] = None,
     cache: Optional[dict] = None,
     shard=None,
+    decode: bool = False,
 ) -> Tuple[jax.Array, Optional[dict]]:
     """Self-attention layer.
 
     cache: None for training; {'k','v','len'} for serving.  When x has
     T > 1 and cache is given, this is a prefill (cache is filled); when
-    T == 1 it is a decode step (append + attend).
+    T == 1 it is a decode step (append + attend).  ``decode=True``
+    (static) forces decode semantics for T > 1 too: the new tokens are
+    appended at each row's own cache position and attend over the FULL
+    cache with per-row absolute-position causal masking — the
+    speculative-verification path, where slots of a batch sit at
+    different lengths and the cache is not empty.
     Returns (out, new_cache).
     """
     b, t, _ = x.shape
@@ -377,12 +392,13 @@ def attention_layer(
     # weight shardings; mixed explicit specs here caused involuntary
     # resharding/remat inside the flash loops (see EXPERIMENTS §Perf).
 
+    is_decode = decode or t == 1
     new_cache = None
     if cache is None:
         out = blockwise_attention(q, k, v, cfg)
     elif "pos" in cache:                                  # ring-buffer local
         new_cache = _ring_update(cache, k, v)
-        if t == 1:
+        if is_decode:
             out = _ring_decode(q, new_cache, cfg)
         else:
             out = blockwise_attention(q, k, v, cfg)
@@ -396,7 +412,7 @@ def attention_layer(
             "v_scale": _update_cache(cache["v_scale"], vs, cache["len"]),
             "len": cache["len"] + t,
         }
-        if t == 1:
+        if is_decode:
             out = _decode_quantized(q, new_cache, cfg)
         else:
             out = blockwise_attention(q, k, v, cfg)       # fresh prefill
@@ -405,7 +421,7 @@ def attention_layer(
         v_cache = _update_cache(cache["v"], v, cache["len"])
         new_len = cache["len"] + t
         new_cache = {"k": k_cache, "v": v_cache, "len": new_len}
-        if t == 1:
+        if is_decode:
             out = decode_attention(q, k_cache, v_cache, new_len, cfg)
         else:
             # prefill: attend within the fresh segment (cache assumed empty
@@ -420,21 +436,28 @@ def attention_layer(
 def _update_cache(cache_arr, new_vals, cur_len):
     """Write new_vals at position cur_len along the time axis (per batch).
 
-    Decode steps (t == 1) scatter each row at its OWN length — under
-    continuous batching the slots of a batch sit at different positions.
-    Prefill (t > 1) writes a contiguous slab; the slot engine prefills at
-    batch == 1 so a single uniform start (row 0) is exact there.
+    With a per-row `cur_len` (batched serving) each row scatters at its
+    OWN length — under continuous batching the slots of a batch sit at
+    different positions; t > 1 writes a contiguous per-row slab (the
+    speculative-verification append).  Entries that would run past the
+    cache are clamped into the last slot — callers guarantee capacity
+    for live rows, so only dead/ghost rows ever clamp.
+    A scalar `cur_len` writes one uniform slab (batch == 1 prefill).
     """
     b, t = new_vals.shape[:2]
     if jnp.ndim(cur_len) == 0:
         return jax.lax.dynamic_update_slice_in_dim(
             cache_arr, new_vals.astype(cache_arr.dtype), cur_len, axis=1)
-    if t == 1:
-        idx = jnp.clip(cur_len, 0, cache_arr.shape[1] - 1)
-        return cache_arr.at[jnp.arange(b), idx].set(
-            new_vals[:, 0].astype(cache_arr.dtype))
-    return jax.lax.dynamic_update_slice_in_dim(
-        cache_arr, new_vals.astype(cache_arr.dtype), cur_len[0], axis=1)
+    if b == 1:
+        # one row: a contiguous dynamic-update-slice beats a scatter —
+        # this is the slot engine's per-request prefill hot path
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache_arr, new_vals.astype(cache_arr.dtype), cur_len[0],
+            axis=1)
+    idx = jnp.clip(cur_len[:, None] + jnp.arange(t)[None, :],
+                   0, cache_arr.shape[1] - 1)            # (B, t)
+    return cache_arr.at[jnp.arange(b)[:, None], idx].set(
+        new_vals.astype(cache_arr.dtype))
 
 
 def init_cache(batch, max_len, cfg: AttnConfig, dtype=jnp.bfloat16,
@@ -469,7 +492,9 @@ def quantize_kv(x):
 
 def _decode_quantized(q, cache, cfg: AttnConfig, chunk: int = 4096):
     """Decode against an int8 cache, dequantizing one chunk at a time
-    (bounded transient memory; online-softmax merge across chunks)."""
+    (bounded transient memory; online-softmax merge across chunks).
+    Tq >= 1 queries: query i is at absolute position ``len - Tq + i``
+    and attends causally (the speculative-verification path)."""
     b, tq, nq, hd = q.shape
     s_len = cache["k"].shape[1]
     nkv = cache["k"].shape[2]
@@ -479,6 +504,7 @@ def _decode_quantized(q, cache, cfg: AttnConfig, chunk: int = 4096):
     nkb = (s_len + pad) // ck
     q5 = q.reshape(b, tq, nkv, g, hd)
     cache_len = cache["len"] + 0
+    qpos = cache_len[:, None] - tq + jnp.arange(tq)[None, :]   # (B, Tq)
 
     def step(kj, carry):
         m, a, acc = carry
@@ -493,14 +519,15 @@ def _decode_quantized(q, cache, cfg: AttnConfig, chunk: int = 4096):
                                           axis=1)
         kb = kq.astype(jnp.float32) * ks
         vb = vq.astype(jnp.float32) * vs
-        s = _tile_scores(q5, kb.astype(q.dtype), cfg)    # (B,nkv,g,1,ck)
+        s = _tile_scores(q5, kb.astype(q.dtype), cfg)    # (B,nkv,g,Tq,ck)
         kpos = start + jnp.arange(ck)
         own = (kpos >= kj * ck) & (kpos < (kj + 1) * ck)
-        mask = own[None, :] & (kpos[None, :] < cache_len[:, None])
+        mask = own[None, None, :] & \
+            (kpos[None, None, :] <= qpos[:, :, None])    # (B, Tq, ck)
         if cfg.window is not None:
-            mask = mask & (kpos[None, :] > cache_len[:, None] - 1
+            mask = mask & (kpos[None, None, :] > qpos[:, :, None]
                            - cfg.window)
-        s = jnp.where(mask[:, None, None, None, :], s, _NEG_INF)
+        s = jnp.where(mask[:, None, None, :, :], s, _NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
         p = jnp.exp(s - m_safe[..., None])
@@ -550,18 +577,22 @@ def _ring_update(cache, k, v):
 
 
 def _ring_decode(q, cache, cfg: AttnConfig):
-    """Decode against the ring buffer using stored absolute positions."""
+    """Decode against the ring buffer using stored absolute positions.
+
+    Handles Tq >= 1 new queries: query i sits at absolute position
+    ``len - Tq + i`` (`len` counts the Tq entries just ring-appended)
+    and attends to every in-window cache entry at or before it."""
     b, tq, nq, hd = q.shape
     nkv = cache["k"].shape[2]
     g = nq // nkv
     q5 = q.reshape(b, tq, nkv, g, hd)
-    s = _tile_scores(q5, cache["k"], cfg)                 # (B,nkv,g,1,W)
-    cur = cache["len"][:, None] - 1                       # pos of the query
+    s = _tile_scores(q5, cache["k"], cfg)                 # (B,nkv,g,Tq,W)
+    qpos = cache["len"][:, None] - tq + jnp.arange(tq)[None, :]  # (B, Tq)
     kpos = cache["pos"]                                   # (B, W)
-    mask = (kpos >= 0) & (kpos <= cur)
+    mask = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= qpos[:, :, None])
     if cfg.window is not None:
-        mask = mask & (kpos > cur - cfg.window)
-    s = jnp.where(mask[:, None, None, None, :], s, _NEG_INF)
+        mask = mask & (kpos[:, None, :] > qpos[:, :, None] - cfg.window)
+    s = jnp.where(mask[:, None, None, :, :], s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bngqk,bknh->bqngh", p.astype(cache["v"].dtype),
                      cache["v"], preferred_element_type=jnp.float32)

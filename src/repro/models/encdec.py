@@ -130,11 +130,13 @@ def init_dec_block(key, cfg: EncDecConfig, dtype):
     }
 
 
-def apply_dec_block(p, x, kv, cfg: EncDecConfig, cache=None, shard=None):
+def apply_dec_block(p, x, kv, cfg: EncDecConfig, cache=None, shard=None,
+                    decode=False):
     """kv: cross (k, v).  cache: self-attn KV cache (serving only)."""
     h, new_cache = A.attention_layer(
         p["attn"], L.rmsnorm(p["ln_self"], x, cfg.norm_eps),
-        cfg.attn_config(causal=True), cache=cache, shard=shard)
+        cfg.attn_config(causal=True), cache=cache, shard=shard,
+        decode=decode)
     x = x + h
     x = x + cross_attention(
         p["cross_attn"], L.rmsnorm(p["ln_cross"], x, cfg.norm_eps), kv, cfg)
@@ -192,9 +194,10 @@ def encode(params, frame_embeds, cfg: EncDecConfig, shard=None):
 
 
 def decode_hidden(params, tokens, enc_out, cfg: EncDecConfig, *,
-                  caches=None, cross_kvs=None, shard=None):
+                  caches=None, cross_kvs=None, shard=None, decode=False):
     """Decoder forward.  For serving pass precomputed `cross_kvs` (stacked)
-    and self-attn `caches`; for training pass `enc_out` only."""
+    and self-attn `caches`; for training pass `enc_out` only.
+    ``decode=True``: cached T > 1 extends per-row (spec verification)."""
     x = L.embed_lookup(params["embed"]["table"], tokens,
                        shard=shard).astype(jnp.dtype(cfg.compute_dtype))
     if shard is not None:
@@ -223,7 +226,7 @@ def decode_hidden(params, tokens, enc_out, cfg: EncDecConfig, *,
         def body_serve(x, ps):
             p, kv, cache = ps
             x, new_cache = apply_dec_block(p, x, kv, cfg, cache=cache,
-                                           shard=shard)
+                                           shard=shard, decode=decode)
             return x, new_cache
 
         if cfg.scan_layers:
@@ -239,7 +242,7 @@ def decode_hidden(params, tokens, enc_out, cfg: EncDecConfig, *,
 
 
 def forward(params, tokens, cfg: EncDecConfig, *, frontend_embeds=None,
-            caches=None, shard=None):
+            caches=None, shard=None, decode: bool = False):
     """Training/prefill entry matching the LM-family signature.
 
     frontend_embeds: (B, T_enc, d) frame embeddings (the stub frontend).
@@ -249,7 +252,7 @@ def forward(params, tokens, cfg: EncDecConfig, *, frontend_embeds=None,
         # serving: encoder output already folded into caches['cross']
         x, self_caches = decode_hidden(
             params, tokens, None, cfg, caches=caches["self"],
-            cross_kvs=caches["cross"], shard=shard)
+            cross_kvs=caches["cross"], shard=shard, decode=decode)
         return x, jnp.zeros((), jnp.float32), {"self": self_caches,
                                                "cross": caches["cross"]}
     enc_out = encode(params, frontend_embeds, cfg, shard=shard)

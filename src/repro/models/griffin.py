@@ -195,12 +195,12 @@ def init_temporal_block(key, kind: str, cfg: GriffinConfig, dtype):
 
 
 def apply_temporal_block(p, x, kind: str, cfg: GriffinConfig, state=None,
-                         shard=None):
+                         shard=None, decode=False):
     if kind == "attn":
         h, new_state = A.attention_layer(
             p["temporal"]["attn"],
             L.rmsnorm(p["temporal"]["ln"], x, cfg.norm_eps),
-            cfg.attn_config(), cache=state, shard=shard)
+            cfg.attn_config(), cache=state, shard=shard, decode=decode)
         x = x + h
     else:
         x, new_state = apply_recurrent_block(p["temporal"], x, cfg,
@@ -257,7 +257,7 @@ def init_params(key, cfg: GriffinConfig) -> Dict[str, Any]:
 
 
 def forward(params, tokens, cfg: GriffinConfig, *, states=None, shard=None,
-            frontend_embeds=None):
+            frontend_embeds=None, decode: bool = False):
     del frontend_embeds
     x = L.embed_lookup(params["embed"]["table"], tokens, shard=shard).astype(jnp.dtype(cfg.compute_dtype))
     if shard is not None:
@@ -269,7 +269,8 @@ def forward(params, tokens, cfg: GriffinConfig, *, states=None, shard=None,
         for i, kind in enumerate(cfg.pattern):
             s_i = st[f"b{i}"] if st is not None else None
             x, ns = apply_temporal_block(p[f"b{i}"], x, kind, cfg,
-                                         state=s_i, shard=shard)
+                                         state=s_i, shard=shard,
+                                         decode=decode)
             if st is not None:
                 new_st[f"b{i}"] = ns
         return x, new_st
@@ -308,7 +309,7 @@ def forward(params, tokens, cfg: GriffinConfig, *, states=None, shard=None,
     for i, kind in enumerate(rem):
         st = states[f"rem{i}"] if states is not None else None
         x, ns = apply_temporal_block(params[f"rem{i}"], x, kind, cfg,
-                                     state=st, shard=shard)
+                                     state=st, shard=shard, decode=decode)
         if states is not None:
             new_states[f"rem{i}"] = ns
 

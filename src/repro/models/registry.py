@@ -57,11 +57,17 @@ def init_params(arch: Arch, rng: jax.Array):
 
 def forward_hidden(
     arch: Arch, params, batch: Dict[str, Any], *,
-    caches=None, shard=None,
+    caches=None, shard=None, decode: bool = False,
 ) -> Tuple[jax.Array, jax.Array, Any]:
-    """(hidden aligned with batch['targets'], aux_loss, new_caches)."""
+    """(hidden aligned with batch['targets'], aux_loss, new_caches).
+
+    ``decode=True`` (static) marks a cached T > 1 forward as a cache
+    EXTENSION (per-row append + full-cache causal attention — the
+    speculative-verification path) rather than a fresh prefill.
+    Recurrent families are sequential either way and ignore it.
+    """
     mod = _family_mod(arch)
-    kwargs = dict(shard=shard)
+    kwargs = dict(shard=shard, decode=decode)
     fe = batch.get("frontend_embeds")
     if arch.family == "transformer":
         h, aux, c = mod.forward(params, batch["tokens"], arch.cfg,
@@ -206,8 +212,16 @@ def shift_cache_lens(caches, delta):
     to a bucket length before the prefill forward, which advances the
     attention caches' ``len`` by the padded length; shifting by the pad
     restores the true prompt length so decode resumes at the right
-    position (pad rows beyond it are dead and get overwritten).  `delta`
-    may be traced; recurrent state (no ``len`` leaves) passes through.
+    position (pad rows beyond it are dead and get overwritten).
+
+    `delta` may be traced, and may be a PER-SLOT ``(B,)`` array — the
+    speculative-decoding rollback (DESIGN.md §6.4): each slot retracts
+    its own count of rejected drafted positions (``len`` leaves are
+    ``(B,)`` or layer-stacked ``(L, B)``, both broadcast).  Entries past
+    the shifted length become invisible to causally masked decode reads
+    and are overwritten by the next per-row append, for plain, quantized
+    and ring-buffer caches alike.  Recurrent state (no ``len`` leaves)
+    passes through — roll it back with `select_step_caches` instead.
     """
     if isinstance(caches, dict):
         return {key: (val - delta if key == "len"
@@ -216,6 +230,105 @@ def shift_cache_lens(caches, delta):
     if isinstance(caches, (list, tuple)):
         return type(caches)(shift_cache_lens(v, delta) for v in caches)
     return caches
+
+
+def _has_len_leaf(caches) -> bool:
+    if isinstance(caches, dict):
+        return "len" in caches or any(_has_len_leaf(v)
+                                      for v in caches.values())
+    if isinstance(caches, (list, tuple)):
+        return any(_has_len_leaf(v) for v in caches)
+    return False
+
+
+def spec_cache_strategy(arch: Arch) -> str:
+    """How this family's serve caches roll back rejected drafted tokens.
+
+    ``'len'``   — attention KV caches (transformer / enc-dec): entries
+                  are position-addressed, so rollback is per-slot length
+                  arithmetic (`rollback_slot_caches`) and verification
+                  is ONE cached multi-token forward (``decode=True``).
+    ``'scan'``  — recurrent state (griffin / xlstm): state is a running
+                  reduction that cannot be partially undone, so the
+                  verifier steps token-by-token, stacks the per-step
+                  state snapshots, and rollback SELECTS each slot's
+                  surviving snapshot (`select_step_caches`).
+    """
+    return "len" if arch.family in ("transformer", "encdec") else "scan"
+
+
+def rollback_slot_caches(caches, n_reject):
+    """Retract `n_reject` (scalar or per-slot ``(B,)``) entries from the
+    tail of every position-addressed cache in the tree.
+
+    This is the speculative-decoding rollback for ``'len'``-strategy
+    families: the verify forward appended K+1 entries per slot, the
+    acceptance rule kept ``a+1 <= K+1`` of them, and the rest become
+    dead tail entries (masked now, overwritten by the next append).
+
+    Raises for trees with no ``len`` leaves (recurrent state) — length
+    arithmetic would silently corrupt them; use `select_step_caches`.
+    """
+    if not _has_len_leaf(caches):
+        raise ValueError(
+            "rollback_slot_caches needs position-addressed caches with "
+            "'len' leaves; recurrent state rolls back via "
+            "select_step_caches (spec_cache_strategy == 'scan')")
+    return shift_cache_lens(caches, n_reject)
+
+
+def select_step_caches(stacked, step, axes):
+    """Pick each slot's cache tree out of a stacked per-step snapshot.
+
+    `stacked`: the serve-cache tree with an extra LEADING step axis —
+    ``leaf[s]`` is the cache state after consuming ``s`` tokens of the
+    speculative step (s = 0..K+1).  `step` (B,) selects, per slot, the
+    snapshot that survives acceptance (``accepted + 1`` consumed
+    tokens); `axes` is the `cache_batch_axes` tree of the UNSTACKED
+    cache.  Leaves without a batch axis take the last step.
+    """
+    b = step.shape[0]
+    rows = jnp.arange(b)
+
+    def pick(leaf, ax):
+        if ax < 0:
+            return leaf[-1]
+        moved = jnp.moveaxis(leaf, ax + 1, 1)        # (S+1, B, ...)
+        return jnp.moveaxis(moved[step, rows], 0, ax)
+
+    return jax.tree.map(pick, stacked, axes)
+
+
+def rollback_snapshot_caches(snaps, step, n_reject, axes):
+    """Per-slot rollback from per-step snapshots (the 'scan' strategy).
+
+    `snaps`: S+1 cache trees, ``snaps[s]`` the state after consuming
+    ``s`` tokens of the speculative step.  Linear append-only subtrees
+    — dicts with a ``len`` leaf but no ``pos`` — roll back by length
+    arithmetic on the LAST snapshot alone (their big KV leaves are
+    never stacked S+1 times); everything else, recurrent leaves AND
+    ring-buffer caches, gathers each slot's surviving snapshot via
+    `select_step_caches`.
+
+    Ring buffers (``pos`` present) MUST take the snapshot path even
+    though they carry ``len``: a ring append at slot ``(len+i) % W``
+    OVERWRITES the entry that was ``W`` positions back — still inside
+    the attention window — so once the sequence wraps, rejected
+    appends destroy history that no length shift can restore.
+    """
+    def walk(subs, ax):
+        first = subs[0]
+        if isinstance(first, dict) and "len" in first \
+                and "pos" not in first:
+            return shift_cache_lens(subs[-1], n_reject)
+        if isinstance(first, dict):
+            return {k: walk([s[k] for s in subs], ax[k]) for k in first}
+        if isinstance(first, (list, tuple)):
+            return type(first)(walk([s[i] for s in subs], ax[i])
+                               for i in range(len(first)))
+        return select_step_caches(jnp.stack(subs), step, ax)
+
+    return walk(list(snaps), axes)
 
 
 def serve_cache_specs(arch: Arch, batch_size: int, max_len: int,

@@ -135,12 +135,13 @@ def init_params(key, cfg: TransformerConfig) -> Dict[str, Any]:
 # ---------------------------------------------------------------------------
 
 
-def apply_block(p, x, cfg: TransformerConfig, *, cache=None, shard=None):
+def apply_block(p, x, cfg: TransformerConfig, *, cache=None, shard=None,
+                decode=False):
     """Pre-norm block; returns (x, aux, new_cache)."""
     acfg = cfg.attn_config()
     h, new_cache = A.attention_layer(
         p["attn"], L.rmsnorm(p["ln_attn"], x, cfg.norm_eps), acfg,
-        cache=cache, shard=shard)
+        cache=cache, shard=shard, decode=decode)
     x = x + h
     xn = L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
@@ -162,11 +163,14 @@ def forward(
     frontend_embeds: Optional[jax.Array] = None,
     caches: Optional[Any] = None,
     shard=None,
+    decode: bool = False,
 ) -> Tuple[jax.Array, jax.Array, Optional[Any]]:
     """tokens (B, T_txt) [+ frontend (B, T_img, d)] -> hidden (B, T, d).
 
     Returns (hidden, aux_loss, new_caches).  `hidden` covers the full
     sequence (frontend positions included); callers slice for the loss.
+    ``decode=True`` (static) makes a cached T > 1 forward extend the
+    cache per row instead of prefilling it — speculative verification.
     """
     x = L.embed_lookup(params["embed"]["table"], tokens,
                    shard=shard).astype(_cdt(cfg))
@@ -182,7 +186,8 @@ def forward(
                 prevent_cse=False)
             x, aux = fn(p, x)
             return x, aux, None
-        return apply_block(p, x, cfg, cache=cache, shard=shard)
+        return apply_block(p, x, cfg, cache=cache, shard=shard,
+                           decode=decode)
 
     if cfg.scan_layers:
         if caches is None:

@@ -359,8 +359,10 @@ def init_params(key, cfg: XLSTMConfig) -> Dict[str, Any]:
 
 
 def forward(params, tokens, cfg: XLSTMConfig, *, states=None, shard=None,
-            frontend_embeds=None):
-    del frontend_embeds
+            frontend_embeds=None, decode: bool = False):
+    # recurrent state consumes tokens sequentially whatever T is, so a
+    # cached multi-token forward is already "decode" semantics
+    del frontend_embeds, decode
     x = L.embed_lookup(params["embed"]["table"], tokens, shard=shard).astype(jnp.dtype(cfg.compute_dtype))
     if shard is not None:
         x = shard(x, "batch", "seq", "embed")

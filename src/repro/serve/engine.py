@@ -255,6 +255,15 @@ class Engine:
         self.cur = toks.copy()
         return toks
 
+    def decode_step_multi(self):
+        """Variable-emission step contract shared with `serve.spec`:
+        (tokens (B, T), counts (B,)) — per slot the first ``counts``
+        tokens are this step's in-order emissions.  The plain engine
+        always emits exactly one token per slot; `SpecEngine` overrides
+        this with the draft→verify→accept→rollback cycle."""
+        toks = self.decode_step()
+        return toks[:, None], np.ones_like(toks)
+
     def reset_slot(self, slot: int):
         """Recycle a finished slot back to its pristine empty state."""
         self.caches = self._reset(self.caches, self._template,

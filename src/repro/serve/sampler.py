@@ -86,8 +86,13 @@ def top_p_mask(logits: jax.Array, top_p: float) -> jax.Array:
 
     Both `streaming_topk` and `pallas_topk` return values sorted
     descending, so no extra sort is needed.  The top-1 token is always
-    kept (`cum - probs < top_p` holds at position 0 for any top_p > 0).
+    kept (`cum - probs < top_p` holds at position 0 for any top_p > 0),
+    and ``top_p >= 1`` is exactly the identity — without the short
+    circuit, f32 cumsum rounding can push ``cum - probs`` of a tail
+    token to 1.0 and silently drop it.
     """
+    if top_p >= 1.0:
+        return logits
     probs = jax.nn.softmax(logits, axis=-1)
     cum = jnp.cumsum(probs, axis=-1)
     keep = (cum - probs) < jnp.float32(top_p)

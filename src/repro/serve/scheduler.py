@@ -69,9 +69,15 @@ class ContinuousScheduler:
         # benchmark counters
         self.decode_steps = 0
         self.slot_busy_steps = 0
+        self.tokens_emitted = 0          # decode-step emissions (no prefill)
         self.admit_order: List[int] = []
         self.ttft: Dict[int, float] = {}
+        self.latency: Dict[int, float] = {}   # admission -> completion
+        self._admit_t: Dict[int, float] = {}
         self._t0: Optional[float] = None
+        # speculative-decoding counters (stay 0 for plain engines)
+        self.spec_drafted = 0
+        self.spec_accepted = 0
 
     # -- submission ---------------------------------------------------------
 
@@ -84,10 +90,15 @@ class ContinuousScheduler:
         if max_new < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got {max_new}")
         budget = len(prompt) + max_new - 1          # cache entries needed
-        if budget > self.engine.sc.max_len:
+        # a speculative engine can overshoot the budget by up to K cache
+        # entries mid-verify (they are rolled back, but must fit)
+        margin = int(getattr(self.engine, "spec_k", 0))
+        if budget + margin > self.engine.sc.max_len:
             raise ValueError(
-                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds the "
-                f"engine cache capacity max_len={self.engine.sc.max_len}")
+                f"prompt ({len(prompt)}) + max_new ({max_new})"
+                + (f" + spec margin ({margin})" if margin else "")
+                + f" exceeds the engine cache capacity "
+                f"max_len={self.engine.sc.max_len}")
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(
@@ -114,7 +125,9 @@ class ContinuousScheduler:
 
     def _finish(self, idx: int):
         slot = self.slots[idx]
-        self.results[slot.req.rid] = np.asarray(slot.tokens, np.int32)
+        rid = slot.req.rid
+        self.results[rid] = np.asarray(slot.tokens, np.int32)
+        self.latency[rid] = time.perf_counter() - self._admit_t[rid]
         self.slots[idx] = None
         self.engine.reset_slot(idx)
 
@@ -137,6 +150,7 @@ class ContinuousScheduler:
             # again, so keep admitting into it
             while self.slots[idx] is None and self.queue:
                 req = self.queue.popleft()
+                self._admit_t[req.rid] = time.perf_counter()
                 first = self.engine.prefill_into_slot(
                     idx, req.prompt, frontend_embeds=req.frontend_embeds)
                 self.admit_order.append(req.rid)
@@ -145,19 +159,35 @@ class ContinuousScheduler:
                 self._token_arrived(idx, first)
 
     def step(self) -> int:
-        """One scheduler tick: admit, then advance every busy slot one
-        token.  Returns the number of slots that did useful work."""
+        """One scheduler tick: admit, then advance every busy slot by one
+        engine step — one token for plain engines, up to ``spec_k + 1``
+        for a speculative engine (`Engine.decode_step_multi` contract).
+        A slot that hits EOS or its budget mid-burst finishes there and
+        its remaining burst tokens are dropped (its caches are reset, so
+        nothing stale survives).  Returns the number of busy slots."""
         if self._t0 is None:
             self._t0 = time.perf_counter()
         self._admit()
         busy = [i for i, s in enumerate(self.slots) if s is not None]
         if not busy:
             return 0
-        toks = self.engine.decode_step()
+        if hasattr(self.engine, "decode_step_multi"):
+            toks, counts = self.engine.decode_step_multi()
+        else:                         # engine-shaped test doubles
+            toks = np.asarray(self.engine.decode_step())[:, None]
+            counts = np.ones(len(toks), np.int32)
         self.decode_steps += 1
         self.slot_busy_steps += len(busy)
+        spec_k = int(getattr(self.engine, "spec_k", 0))
         for idx in busy:
-            self._token_arrived(idx, int(toks[idx]))
+            n = int(counts[idx])
+            for j in range(n):
+                self.tokens_emitted += 1
+                if self._token_arrived(idx, int(toks[idx, j])):
+                    break
+            if spec_k:
+                self.spec_drafted += spec_k
+                self.spec_accepted += n - 1   # bonus token is not a draft
         return len(busy)
 
     def run(self) -> Dict[int, np.ndarray]:
@@ -165,3 +195,52 @@ class ContinuousScheduler:
         while self.queue or self.active:
             self.step()
         return dict(self.results)
+
+    # -- reporting ----------------------------------------------------------
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Accepted drafted tokens / drafted tokens (0.0 for plain)."""
+        return self.spec_accepted / self.spec_drafted \
+            if self.spec_drafted else 0.0
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Mean decode-step emissions across busy slots (prefill tokens
+        excluded) — the speculative speedup metric: 1.0 for a plain
+        engine, up to spec_k + 1 with perfect acceptance."""
+        return self.tokens_emitted / self.slot_busy_steps \
+            if self.slot_busy_steps else 0.0
+
+    def stats(self) -> Dict[str, Any]:
+        """JSON-serializable run report (bench trajectories across PRs:
+        `launch/serve.py --stats-json`)."""
+        def _summ(d):
+            vals = list(d.values())
+            return {"mean": float(np.mean(vals)) if vals else 0.0,
+                    "max": float(np.max(vals)) if vals else 0.0}
+
+        out: Dict[str, Any] = {
+            "requests": len(self.results),
+            "decode_steps": self.decode_steps,
+            "occupancy": round(self.occupancy, 4),
+            "tokens_emitted": self.tokens_emitted,
+            "tokens_per_step": round(self.tokens_per_step, 4),
+            "ttft_s": _summ(self.ttft),
+            "latency_s": _summ(self.latency),
+            "per_request": {
+                str(rid): {
+                    "tokens": int(len(self.results[rid])),
+                    "ttft_s": round(self.ttft.get(rid, 0.0), 6),
+                    "latency_s": round(self.latency.get(rid, 0.0), 6),
+                } for rid in sorted(self.results)},
+        }
+        spec_k = int(getattr(self.engine, "spec_k", 0))
+        if spec_k:
+            out["spec"] = {
+                "k": spec_k,
+                "drafted": self.spec_drafted,
+                "accepted": self.spec_accepted,
+                "acceptance_rate": round(self.acceptance_rate, 4),
+            }
+        return out

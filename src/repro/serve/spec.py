@@ -1,0 +1,328 @@
+"""Speculative decoding: draft-propose K tokens, verify them logits-free.
+
+One engine step serves every slot up to K+1 tokens (DESIGN.md §6):
+
+  1. **propose** — a small draft model runs K single-token decode steps
+     from each slot's current token, sampling K candidate tokens (plus
+     one catch-up step so the draft cache stays token-synchronized with
+     the target's whatever the acceptance outcome).
+  2. **verify** — the target model runs ONE cached multi-token forward
+     over ``[cur, d_1..d_K]`` (``decode=True``; recurrent families step
+     inside the same jit) and the hidden states are consumed logits-free:
+     the streaming top-k sampler draws the target's own choice at every
+     position, and in rejection mode `kernels/score_tokens` additionally
+     gathers ``log p_target(d_i | prefix)`` for every drafted token
+     under an online softmax (greedy acceptance is pure argmax
+     comparison and skips the scoring pass) — the ``(B, K+1, V)``
+     verification logits tensor never exists.
+  3. **accept** — greedy mode (temperature == 0) keeps the longest
+     prefix of drafts that exactly match the target's argmax; rejection
+     mode keeps draft i with probability ``min(1, p_t(d_i)/p_d(d_i))``
+     computed from the two scored log-probs — capped logits on both
+     sides, each at its model's SAMPLING temperature, so the ratio
+     compares the distributions actually drawn from.  Either way the
+     step emits the accepted prefix plus one
+     token the target itself chose — 1..K+1 tokens, always ≥ 1, and in
+     greedy mode every emitted token is the target's argmax, so output
+     is token-identical to non-speculative greedy decode.
+  4. **roll back** — rejected positions leave both caches: per-slot
+     length arithmetic for attention KV caches
+     (`registry.rollback_slot_caches`), per-slot snapshot selection for
+     recurrent state (`registry.select_step_caches`).
+
+Rejection mode's replacement token is drawn from the target's top-k
+distribution at the rejection position (an approximation of the exact
+residual distribution, which cannot be formed without the full logits
+row), and the acceptance ratio uses the draft's full-softmax log-prob
+even when the draft samples through a top-k/top-p truncation; greedy
+mode is exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import Arch
+from repro.kernels.score_tokens import pallas_score_tokens, streaming_score
+from repro.models.registry import (forward_hidden, init_params,
+                                   rollback_slot_caches,
+                                   rollback_snapshot_caches,
+                                   spec_cache_strategy)
+from repro.serve.engine import Engine, ServeConfig, resolve_logit_softcap
+from repro.serve.sampler import sample_tokens
+
+
+@dataclasses.dataclass
+class SpecConfig:
+    """Speculative-decoding knobs (target-model knobs stay in ServeConfig).
+
+    k: drafted tokens per engine step (a step emits 1..k+1 tokens).
+    score_impl: 'pallas' (the score_tokens kernel, interpret mode
+        off-TPU) or 'jax' (the streaming_score oracle).
+    score_block_v: vocab chunk of the 'jax' scorer.
+    draft_temperature: draft proposal temperature; None follows the
+        target ServeConfig (greedy target => greedy draft, which is
+        what makes self-draft acceptance exact).
+    """
+    k: int = 4
+    score_impl: str = "pallas"
+    score_block_v: int = 8192
+    draft_temperature: Optional[float] = None
+
+
+def small_draft(arch: Arch, seed: int = 7, **overrides):
+    """(draft_arch, draft_params): a 1-layer, narrow draft of the same
+    family sharing `arch`'s vocabulary — the canonical demo/test/bench
+    draft shape (real deployments load a separately trained draft).
+    Only meaningful for the transformer family's config fields.
+    """
+    fields = dict(name=arch.cfg.name + "-draft", n_layers=1, d_model=32,
+                  num_heads=2, num_kv_heads=1, head_dim=16, d_ff=48)
+    fields.update(overrides)
+    draft_arch = dataclasses.replace(
+        arch, cfg=dataclasses.replace(arch.cfg, **fields))
+    return draft_arch, init_params(draft_arch, jax.random.PRNGKey(seed))
+
+
+def build_spec_step(arch: Arch, draft_arch: Arch, sc: ServeConfig,
+                    spec: SpecConfig, axes, draft_axes, shard=None):
+    """The jit-ready speculative step.
+
+    spec_step(params, dparams, caches, dcaches, cur (B,1), rng) ->
+        (tokens (B, K+1) int32, counts (B,) int32, caches, dcaches,
+         n_accepted (B,) int32)
+
+    Per slot, ``tokens[:counts]`` are the emitted tokens of this step
+    (accepted drafts + the target's bonus/replacement token); positions
+    beyond are zero-padded.  Free slots compute garbage that callers
+    ignore (every per-row op is batch-diagonal, as in the plain engine).
+    """
+    k_spec = spec.k
+    if k_spec < 1:
+        raise ValueError(f"spec.k must be >= 1, got {k_spec}")
+    if draft_arch.vocab_size != arch.vocab_size:
+        raise ValueError(
+            f"draft vocab {draft_arch.vocab_size} != target vocab "
+            f"{arch.vocab_size}: draft and target must share a tokenizer")
+    valid = arch.vocab_size
+    target_cap = resolve_logit_softcap(arch, sc)
+    draft_cap = resolve_logit_softcap(draft_arch, sc)
+    greedy = sc.temperature == 0.0
+    draft_temp = (sc.temperature if spec.draft_temperature is None
+                  else spec.draft_temperature)
+    t_strat = spec_cache_strategy(arch)
+    d_strat = spec_cache_strategy(draft_arch)
+
+    def _score(h2, w, ids, cap, temp):
+        # scored at the model's SAMPLING temperature, so the rejection
+        # ratio compares the distributions actually drawn from (temp <= 0
+        # scores unscaled — the degenerate greedy-proposal corner)
+        if spec.score_impl == "pallas":
+            logp, _ = pallas_score_tokens(h2, w, ids, valid_vocab=valid,
+                                          logit_softcap=cap,
+                                          temperature=temp)
+        elif spec.score_impl == "jax":
+            logp, _ = streaming_score(h2, w, ids,
+                                      block_v=spec.score_block_v,
+                                      valid_vocab=valid, logit_softcap=cap,
+                                      temperature=temp)
+        else:
+            raise ValueError(f"unknown score impl {spec.score_impl!r}")
+        return logp
+
+    def _sample(h2, w, rng, temperature, cap):
+        return sample_tokens(h2, w, rng, temperature=temperature,
+                             top_k=sc.top_k, top_p=sc.top_p,
+                             block_v=sc.sample_block_v, valid_vocab=valid,
+                             logit_softcap=cap, impl=sc.sampler_impl)
+
+    def spec_step(params, dparams, caches, dcaches, cur, rng):
+        b = cur.shape[0]
+        rngs = jax.random.split(rng, k_spec + 2)
+
+        # ---- 1. draft proposal: K sampled tokens + one catch-up step so
+        # the draft cache consumes d_K too (kept only if all K accepted)
+        d_tokens, d_hidden = [], []
+        d_snaps = [dcaches] if d_strat == "scan" else None
+        tok = cur                                        # (B, 1)
+        for i in range(k_spec + 1):
+            h, _, dcaches = forward_hidden(draft_arch, dparams,
+                                           {"tokens": tok}, caches=dcaches,
+                                           shard=shard)
+            if d_snaps is not None:
+                d_snaps.append(dcaches)
+            if i == k_spec:
+                break
+            h_last = h[:, -1, :]
+            nxt = _sample(h_last, dparams["lm_head"], rngs[i], draft_temp,
+                          draft_cap)                     # (B,)
+            d_hidden.append(h_last)
+            d_tokens.append(nxt)
+            tok = nxt[:, None]
+        draft_tokens = jnp.stack(d_tokens, axis=1)       # (B, K)
+        if not greedy:
+            # one batched (B*K)-row vocab scan instead of K scans of B
+            dh = jnp.stack(d_hidden, axis=1)             # (B, K, d)
+            d_lp = _score(dh.reshape(b * k_spec, -1), dparams["lm_head"],
+                          draft_tokens.reshape(b * k_spec, 1),
+                          draft_cap, draft_temp).reshape(b, k_spec)
+
+        # ---- 2. target verification over [cur, d_1..d_K]
+        seq = jnp.concatenate([cur, draft_tokens], axis=1)   # (B, K+1)
+        if t_strat == "len":
+            h, _, caches = forward_hidden(arch, params, {"tokens": seq},
+                                          caches=caches, shard=shard,
+                                          decode=True)
+            t_snaps = None
+        else:                                            # recurrent: scan
+            hs, t_snaps = [], [caches]
+            for j in range(k_spec + 1):
+                hj, _, caches = forward_hidden(
+                    arch, params, {"tokens": seq[:, j:j + 1]},
+                    caches=caches, shard=shard)
+                t_snaps.append(caches)
+                hs.append(hj[:, -1, :])
+            h = jnp.stack(hs, axis=1)                    # (B, K+1, d)
+        d_model = h.shape[-1]
+
+        # the target's own choice at every position (argmax when greedy)
+        choice = _sample(h.reshape(b * (k_spec + 1), d_model),
+                         params["lm_head"], rngs[-1], sc.temperature,
+                         target_cap).reshape(b, k_spec + 1)
+
+        # ---- 3. acceptance
+        if greedy:
+            # exact-match needs only the argmax; no scoring pass
+            acc = draft_tokens == choice[:, :k_spec]
+        else:
+            # log p_target(d_i | prefix) — the score_tokens kernel:
+            # position i's hidden state scores drafted token i+1
+            t_logps = _score(h[:, :k_spec, :].reshape(b * k_spec, d_model),
+                             params["lm_head"],
+                             draft_tokens.reshape(b * k_spec, 1),
+                             target_cap, sc.temperature).reshape(b, k_spec)
+            u = jax.random.uniform(rngs[-2], (b, k_spec),
+                                   minval=1e-20, maxval=1.0)
+            acc = jnp.log(u) <= (t_logps - d_lp)         # min(1, pt/pd)
+        prefix = jnp.cumprod(acc.astype(jnp.int32), axis=1)
+        n_acc = jnp.sum(prefix, axis=1)                  # (B,) in [0, K]
+
+        pos = jnp.arange(k_spec + 1)[None, :]
+        dpad = jnp.concatenate(
+            [draft_tokens, jnp.zeros((b, 1), draft_tokens.dtype)], axis=1)
+        bonus = jnp.take_along_axis(choice, n_acc[:, None], axis=1)
+        out = jnp.where(pos < n_acc[:, None], dpad, 0)
+        out = jnp.where(pos == n_acc[:, None], bonus, out)
+        counts = n_acc + 1
+
+        # ---- 4. roll back the K - n_acc rejected positions (both models
+        # consumed K+1 tokens this step and keep n_acc + 1 of them)
+        if t_strat == "len":
+            caches = rollback_slot_caches(caches, k_spec - n_acc)
+        else:
+            caches = rollback_snapshot_caches(t_snaps, n_acc + 1,
+                                              k_spec - n_acc, axes)
+        if d_strat == "len":
+            dcaches = rollback_slot_caches(dcaches, k_spec - n_acc)
+        else:
+            dcaches = rollback_snapshot_caches(d_snaps, n_acc + 1,
+                                               k_spec - n_acc, draft_axes)
+        return out.astype(jnp.int32), counts.astype(jnp.int32), \
+            caches, dcaches, n_acc.astype(jnp.int32)
+
+    return spec_step
+
+
+class SpecEngine(Engine):
+    """Slot engine with a draft-model sidecar and speculative steps.
+
+    The target side is a plain `Engine`; a second internal `Engine`
+    owns the draft model's params and batched cache tree (same slot
+    count / capacity), so prefill, slot recycling, and cache surgery
+    reuse the registry machinery for both models.  `decode_step_multi`
+    replaces the one-token step with the draft→verify→accept→rollback
+    cycle; the base single-token `decode_step` keeps working (and is
+    what `ContinuousScheduler` falls back to for plain engines).
+    """
+
+    def __init__(self, arch: Arch, params, sc: ServeConfig,
+                 draft_arch: Arch, draft_params,
+                 spec: Optional[SpecConfig] = None, jit: bool = True):
+        self.spec = spec or SpecConfig()
+        super().__init__(arch, params, sc, jit=jit)
+        dsc = dataclasses.replace(sc, autotune=False)
+        self.draft = Engine(draft_arch, draft_params, dsc, jit=jit)
+        self.draft_arch = draft_arch
+        step = build_spec_step(arch, draft_arch, sc, self.spec,
+                               self._axes, self.draft._axes)
+        dn = ({"donate_argnums": (2, 3)}
+              if jit and jax.default_backend() != "cpu" else {})
+        self._spec_step = jax.jit(step, **dn) if jit else step
+        if sc.autotune:
+            self._tune_spec_plans()
+
+    @property
+    def spec_k(self) -> int:
+        return self.spec.k
+
+    def _tune_spec_plans(self):
+        """Tune the verify-path kernels for their exact shapes BEFORE the
+        first trace: top-k over B*(K+1) rows, and — in rejection mode
+        only, greedy acceptance never scores — scoring over B*K rows."""
+        from repro.kernels.sample_topk import autotune_topk_plan
+        from repro.kernels.score_tokens import autotune_score_plan
+        b, kk = self.sc.batch_size, self.spec.k
+        v, d = self.params["lm_head"].shape
+        dtype = jnp.dtype(getattr(self.arch.cfg, "compute_dtype",
+                                  "float32"))
+        cap = resolve_logit_softcap(self.arch, self.sc)
+        topk = 1 if self.sc.temperature == 0.0 else self.sc.top_k
+        autotune_topk_plan(b * (kk + 1), v, d, topk, dtype,
+                           trial_budget=self.sc.tune_trial_budget,
+                           logit_softcap=cap)
+        if self.sc.temperature != 0.0:
+            autotune_score_plan(b * kk, v, d, 1, dtype,
+                                trial_budget=self.sc.tune_trial_budget,
+                                logit_softcap=cap)
+
+    # -- lifecycle (both cache trees) ---------------------------------------
+
+    def reset(self, seed: int = 0):
+        super().reset(seed)
+        if hasattr(self, "draft"):                 # absent during __init__
+            self.draft.reset(seed)
+
+    def prefill_into_slot(self, slot: int, prompt, frontend_embeds=None
+                          ) -> int:
+        tok = super().prefill_into_slot(slot, prompt,
+                                        frontend_embeds=frontend_embeds)
+        # the draft's own first-token sample is discarded — the target's
+        # prefill token is the emitted one; this just fills the slot's
+        # draft cache with the prompt
+        self.draft.prefill_into_slot(slot, prompt,
+                                     frontend_embeds=frontend_embeds)
+        return tok
+
+    def reset_slot(self, slot: int):
+        super().reset_slot(slot)
+        self.draft.reset_slot(slot)
+
+    # -- the speculative step -----------------------------------------------
+
+    def decode_step_multi(self) -> Tuple[np.ndarray, np.ndarray]:
+        """One draft→verify→accept→rollback cycle for every slot.
+
+        Returns (tokens (B, K+1), counts (B,)): per slot the first
+        ``counts`` tokens are this step's emissions, in order."""
+        out, counts, self.caches, self.draft.caches, _ = self._spec_step(
+            self.params, self.draft.params, self.caches, self.draft.caches,
+            jnp.asarray(self.cur[:, None]), self._split())
+        out = np.asarray(jax.device_get(out), np.int32)
+        counts = np.asarray(jax.device_get(counts), np.int32)
+        self.cur = out[np.arange(out.shape[0]), counts - 1].copy()
+        return out, counts

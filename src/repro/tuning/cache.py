@@ -69,34 +69,50 @@ class TuningCache:
 
     # -- persistence --------------------------------------------------
 
-    def _load_locked(self) -> None:
-        if self._loaded:
-            return
-        self._loaded = True
+    def _merge_from_disk_locked(self) -> None:
+        """Fold the on-disk entries in; in-process entries always win
+        (file entries never clobber fresher puts)."""
         if not self.path:
             return
         try:
             with open(self.path, "r", encoding="utf-8") as f:
                 raw = json.load(f)
-            if isinstance(raw, dict) and raw.get("version") == _VERSION:
-                entries = raw.get("entries", {})
-                if isinstance(entries, dict):
-                    # file entries never clobber fresher in-process puts
-                    for k, v in entries.items():
-                        self._entries.setdefault(k, v)
         except (OSError, ValueError):
-            pass  # missing/corrupt file == cold cache
+            return  # missing/corrupt file == cold cache
+        if isinstance(raw, dict) and raw.get("version") == _VERSION:
+            entries = raw.get("entries", {})
+            if isinstance(entries, dict):
+                for k, v in entries.items():
+                    self._entries.setdefault(k, v)
+
+    def _load_locked(self) -> None:
+        if self._loaded:
+            return
+        self._loaded = True
+        self._merge_from_disk_locked()
 
     def save(self) -> None:
-        """Persist to ``self.path`` (no-op for in-memory caches)."""
+        """Persist to ``self.path`` (no-op for in-memory caches).
+
+        Merge-on-save: the on-disk JSON is re-read under the lock and
+        folded in (in-process entries win) before the atomic replace, so
+        two PROCESSES autotuning different kernels against the same
+        cache file don't drop each other's entries — the last writer
+        re-reads the earlier writer's keys instead of clobbering them
+        with its stale initial load.  (The read-merge-replace is not
+        itself atomic: two saves racing within microseconds can still
+        lose the slower one's unseen keys, but those re-tune to the
+        same values on the next cold lookup.)
+        """
         if not self.path:
             return
+        target = os.path.abspath(self.path)
         with self._lock:
-            self._load_locked()
+            self._loaded = True        # saving re-reads the file anyway
+            self._merge_from_disk_locked()
             # snapshot: json.dump below runs outside the lock and a
             # concurrent put() must not mutate the dict mid-serialization
             payload = {"version": _VERSION, "entries": dict(self._entries)}
-        target = os.path.abspath(self.path)
         os.makedirs(os.path.dirname(target), exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(target),
                                    suffix=".tmp")

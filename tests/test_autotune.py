@@ -62,6 +62,37 @@ def test_cache_corrupt_or_missing_file_is_cold(tmp_path):
     assert TuningCache(str(bad)).get("k") == BlockPlan(8, 128, 0)
 
 
+def test_cache_save_merges_concurrent_writers(tmp_path):
+    """Two caches (stand-ins for two PROCESSES) tuning different kernels
+    against the same file: the second save re-reads the first writer's
+    entries instead of clobbering them with its stale initial load."""
+    path = str(tmp_path / "plans.json")
+    a, b = TuningCache(path), TuningCache(path)
+    key_a = plan_key(N, V, D, "float32", "cpu", op="topk1")
+    key_b = plan_key(N, V, D, "float32", "cpu", op="score1")
+    # both load the (empty) file first — the clobbering scenario
+    assert a.get(key_a) is None and b.get(key_b) is None
+    a.put(key_a, BlockPlan(8, 128, 1))
+    a.save()
+    b.put(key_b, BlockPlan(16, 256, 2))
+    b.save()                       # must keep a's entry
+    fresh = TuningCache(path)
+    assert fresh.get(key_a) == BlockPlan(8, 128, 1)
+    assert fresh.get(key_b) == BlockPlan(16, 256, 2)
+
+
+def test_cache_save_merge_never_clobbers_fresh_put(tmp_path):
+    """In-process entries win over the on-disk copy of the same key."""
+    path = str(tmp_path / "plans.json")
+    a, b = TuningCache(path), TuningCache(path)
+    key = plan_key(N, V, D, "float32", "cpu")
+    a.put(key, BlockPlan(8, 128, 1))
+    a.save()
+    b.put(key, BlockPlan(32, 512, 3))   # b re-tuned the same key
+    b.save()
+    assert TuningCache(path).get(key) == BlockPlan(32, 512, 3)
+
+
 def test_get_cache_memory_singleton():
     a, b = get_cache(""), get_cache("")
     assert a is b

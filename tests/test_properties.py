@@ -14,6 +14,7 @@ from repro.core import LossConfig, canonical_loss, streaming_loss
 from repro.core.windows import choose_blocks, tile_bytes
 from repro.distributed.compression import quantize_ef, dequantize
 from repro.optim.clipping import clip_by_global_norm
+from repro.serve import top_p_mask
 
 _SETTINGS = dict(max_examples=25, deadline=None)
 
@@ -102,6 +103,63 @@ def test_error_feedback_quantization_bounded(seed, scale):
                                rtol=1e-5, atol=1e-5 * scale)
     # residual bounded by half a quantization step
     assert float(jnp.max(jnp.abs(r1))) <= float(s) * 0.5 + 1e-6
+
+
+def _sorted_logits(b, k, seed, spread):
+    """Descending-sorted finite logits — the sampler's top-k output."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, k)) * spread
+    return jnp.sort(x, axis=-1)[:, ::-1]
+
+
+@given(b=st.integers(1, 5), k=st.integers(1, 40),
+       seed=st.integers(0, 10_000), spread=st.floats(0.1, 20.0))
+@settings(**_SETTINGS)
+def test_top_p_one_keeps_everything(b, k, seed, spread):
+    """top_p == 1.0 is the identity: the cumulative mass first reaches
+    1.0 at the LAST kept position, so no logit is masked."""
+    logits = _sorted_logits(b, k, seed, spread)
+    out = top_p_mask(logits, 1.0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(logits))
+
+
+@given(b=st.integers(1, 5), k=st.integers(1, 40),
+       seed=st.integers(0, 10_000), spread=st.floats(0.1, 20.0),
+       tiny=st.floats(1e-9, 1e-6))
+@settings(**_SETTINGS)
+def test_top_p_tiny_keeps_exactly_the_argmax(b, k, seed, spread, tiny):
+    """A top_p below any single-token mass keeps position 0 only (the
+    top-1 token is always kept — sampling can never mask everything)."""
+    logits = _sorted_logits(b, k, seed, spread)
+    out = np.asarray(top_p_mask(logits, tiny))
+    assert np.all(np.isfinite(out[:, 0]))
+    np.testing.assert_array_equal(out[:, 0], np.asarray(logits)[:, 0])
+    if k > 1:
+        assert np.all(np.isneginf(out[:, 1:]))
+
+
+@given(b=st.integers(1, 5), k=st.integers(2, 40),
+       seed=st.integers(0, 10_000), spread=st.floats(0.1, 20.0),
+       top_p=st.floats(0.05, 0.999))
+@settings(**_SETTINGS)
+def test_top_p_mask_is_a_prefix_of_the_sorted_order(b, k, seed, spread,
+                                                    top_p):
+    """Kept positions form a contiguous prefix of the descending order,
+    the kept mass reaches top_p, and dropping the last kept token would
+    leave it short (minimality); kept logits pass through unchanged."""
+    logits = _sorted_logits(b, k, seed, spread)
+    out = np.asarray(top_p_mask(logits, top_p))
+    probs = np.asarray(jax.nn.softmax(logits, axis=-1))
+    for r in range(b):
+        kept = np.isfinite(out[r])
+        n_kept = int(kept.sum())
+        assert n_kept >= 1
+        assert kept[:n_kept].all() and not kept[n_kept:].any()  # prefix
+        np.testing.assert_array_equal(out[r][kept],
+                                      np.asarray(logits)[r][kept])
+        mass = probs[r][:n_kept].sum()
+        assert mass >= top_p - 1e-5                 # reaches the target
+        if n_kept > 1:
+            assert probs[r][:n_kept - 1].sum() < top_p + 1e-5  # minimal
 
 
 @given(seed=st.integers(0, 10_000), max_norm=st.floats(0.1, 10))

