@@ -14,9 +14,11 @@ Prints ``name,us_per_call,derived`` CSV.
                                                batching, logits-free check)
   §6 spec decode   -> bench_spec.bench_spec (speculative vs plain
                                              continuous, logits-free verify)
+  §7 MTP           -> bench_mtp.bench_mtp (n-head fused training +
+                                           self-speculative decoding)
 
 Run:  PYTHONPATH=src python -m benchmarks.run \
-          [--only lat,mem,train,topk,roof,tune,serve,spec]
+          [--only lat,mem,train,topk,roof,tune,serve,spec,mtp]
 """
 
 from __future__ import annotations
@@ -28,7 +30,7 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only",
-                    default="lat,mem,train,topk,roof,tune,serve,spec")
+                    default="lat,mem,train,topk,roof,tune,serve,spec,mtp")
     args = ap.parse_args()
     parts = set(args.only.split(","))
 
@@ -63,6 +65,9 @@ def main() -> None:
     if "spec" in parts:
         from benchmarks.bench_spec import bench_spec
         bench_spec(emit)
+    if "mtp" in parts:
+        from benchmarks.bench_mtp import bench_mtp
+        bench_mtp(emit)
 
 
 if __name__ == "__main__":

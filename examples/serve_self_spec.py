@@ -1,0 +1,95 @@
+"""Self-speculative decoding from the model's OWN multi-token heads.
+
+No sidecar draft model, no second cache tree: the target's MTP heads
+(attached via `arch.mtp` and trained with the per-horizon fused CE)
+propose K tokens, and ONE cached forward per step both verifies them and
+— through the heads at the accepted position — drafts the next step's
+proposals.  Greedy output is token-identical to plain decode; the demo
+briefly TRAINS the tiny model on an echo task so the heads actually
+agree with the trunk (random heads would accept ~nothing).
+
+    PYTHONPATH=src python examples/serve_self_spec.py [--spec-k 2]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import with_mtp
+from repro.models.registry import get_arch, init_params
+from repro.serve import (ServeConfig, Engine, ContinuousScheduler,
+                         SpecConfig, SelfSpecEngine)
+from repro.train.step import TrainConfig, build_train_step
+
+
+def train_heads(arch, steps=120, seed=0):
+    """Fit trunk + heads to 'repeat the running token' (fast on CPU)."""
+    tc = TrainConfig(optimizer="adamw", peak_lr=5e-3, warmup_steps=10,
+                     total_steps=steps, loss_impl="streaming",
+                     loss_block_v=128)
+    init_fn, step_fn = build_train_step(arch, tc)
+    state = init_fn(jax.random.PRNGKey(seed))
+    jstep = jax.jit(step_fn, donate_argnums=(0,))
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        c = rng.integers(1, 64, (8, 1))
+        toks = jnp.asarray(np.broadcast_to(c, (8, 16)), jnp.int32)
+        state, m = jstep(state, {"tokens": toks, "targets": toks})
+    print("trained heads:",
+          {k: round(float(v), 3) for k, v in m.items()
+           if k.startswith("acc_")})
+    return state["params"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec-k", type=int, default=2,
+                    help="drafted tokens per step (<= mtp heads)")
+    ap.add_argument("--requests", type=int, default=5)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    arch = with_mtp(get_arch("qwen3-0.6b", reduced=True),
+                    max(args.spec_k, 1), track_accuracy=True)
+    params = train_heads(arch)
+
+    sc = ServeConfig(batch_size=3, max_len=128)
+    rng = np.random.default_rng(0)
+    prompts = [np.full((int(rng.integers(4, 12)),),
+                       int(rng.integers(1, 64)), np.int32)
+               for _ in range(args.requests)]
+
+    # plain greedy reference
+    base = Engine(arch, params, sc)
+    ref_sched = ContinuousScheduler(base, max_new_tokens=args.max_new)
+    ref_ids = [ref_sched.submit(p) for p in prompts]
+    ref = ref_sched.run()
+
+    # self-speculative greedy — one engine, one cache tree
+    eng = SelfSpecEngine(arch, params, sc, SpecConfig(k=args.spec_k))
+    sched = ContinuousScheduler(eng, max_new_tokens=args.max_new)
+    ids = [sched.submit(p) for p in prompts]
+    t0 = time.perf_counter()
+    results = sched.run()
+    dt = time.perf_counter() - t0
+
+    total = sum(len(v) for v in results.values())
+    print(f"self-spec: {total} tokens for {len(results)} requests in "
+          f"{dt:.2f}s — {sched.decode_steps} engine steps "
+          f"(plain greedy took {ref_sched.decode_steps}), "
+          f"{sched.tokens_per_step:.2f} tokens/slot-step, "
+          f"acceptance {sched.acceptance_rate:.2f}, "
+          f"mode {sched.stats()['spec']['mode']}")
+    for r_ref, r_spec in zip(ref_ids, ids):
+        np.testing.assert_array_equal(ref[r_ref], results[r_spec])
+    print("greedy self-speculative output is token-identical to plain "
+          "greedy")
+    for rid in ids:
+        print(f"  request {rid}: {results[rid][:8]} ...")
+
+
+if __name__ == "__main__":
+    main()

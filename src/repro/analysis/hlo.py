@@ -104,7 +104,8 @@ _DEF_RE = re.compile(
 
 
 def logits_intermediates(hlo_text: str, batch: int, vocab: int,
-                         seq: Optional[int] = None) -> List[str]:
+                         seq: Optional[int] = None,
+                         heads: Optional[int] = None) -> List[str]:
     """Lines that DEFINE a logits-shaped tensor.
 
     A materialized decode logits tensor shows up in HLO as a result whose
@@ -113,8 +114,16 @@ def logits_intermediates(hlo_text: str, batch: int, vocab: int,
     to {vocab} alone, so a `[1, V]` (or `[V]`) tensor is still caught.
 
     With `seq` (the speculative-verification token count K+1, DESIGN.md
-    §6.5) the detector additionally flags the multi-token forms:
-    {batch, seq, vocab} and the row-flattened {batch*seq, vocab}.
+    §6.5 — or the training sequence length) the detector additionally
+    flags the multi-token forms: {batch, seq, vocab} and the
+    row-flattened {batch*seq, vocab}.
+
+    With `heads` (the multi-token-prediction horizon count, DESIGN.md §7)
+    it further flags the MTP forms a naive n-head loss materializes:
+    {batch, heads, vocab}, {batch*heads, vocab}, and — combined with
+    `seq` — {batch, seq, heads, vocab} / {batch*seq*heads, vocab}.  The
+    per-head per-position (batch*seq, vocab) rows are already covered by
+    the `seq` targets.
 
     Only result types are inspected, so weights like the `(V, d)` lm_head
     never match; callers should check both the raw and the padded
@@ -123,10 +132,17 @@ def logits_intermediates(hlo_text: str, batch: int, vocab: int,
     def nonunit(dims):
         return tuple(sorted(d for d in dims if d != 1))
 
-    targets = {nonunit((int(batch), int(vocab)))}
+    b, v = int(batch), int(vocab)
+    targets = {nonunit((b, v))}
     if seq is not None:
-        targets.add(nonunit((int(batch), int(seq), int(vocab))))
-        targets.add(nonunit((int(batch) * int(seq), int(vocab))))
+        targets.add(nonunit((b, int(seq), v)))
+        targets.add(nonunit((b * int(seq), v)))
+    if heads is not None:
+        targets.add(nonunit((b, int(heads), v)))
+        targets.add(nonunit((b * int(heads), v)))
+        if seq is not None:
+            targets.add(nonunit((b, int(seq), int(heads), v)))
+            targets.add(nonunit((b * int(seq) * int(heads), v)))
     hits: List[str] = []
     for line in hlo_text.splitlines():
         m = _DEF_RE.search(line)
@@ -141,16 +157,21 @@ def logits_intermediates(hlo_text: str, batch: int, vocab: int,
 
 
 def assert_logits_free(hlo_text: str, batch: int, vocabs,
-                       seq: Optional[int] = None) -> None:
-    """Raise if the module materializes a (batch, V) — or, with `seq`,
-    a (batch, seq, V) / (batch*seq, V) — tensor for any V in `vocabs`
-    (pass both `arch.vocab_size` and `arch.padded_vocab`)."""
+                       seq: Optional[int] = None,
+                       heads: Optional[int] = None) -> None:
+    """Raise if the module materializes a (batch, V) — or, with `seq` /
+    `heads`, any multi-token / multi-horizon — logits tensor for any V in
+    `vocabs` (pass both `arch.vocab_size` and `arch.padded_vocab`)."""
     for v in vocabs:
-        hits = logits_intermediates(hlo_text, batch, v, seq=seq)
+        hits = logits_intermediates(hlo_text, batch, v, seq=seq,
+                                    heads=heads)
         if hits:
-            shapes = f"({batch}, {v})" if seq is None else (
-                f"({batch}, {v}) / ({batch}, {seq}, {v}) / "
-                f"({batch * seq}, {v})")
+            shapes = f"({batch}, {v})"
+            if seq is not None:
+                shapes += (f" / ({batch}, {seq}, {v})"
+                           f" / ({batch * seq}, {v})")
+            if heads is not None:
+                shapes += f" / ({batch}, ..{heads} heads.., {v})"
             raise AssertionError(
                 f"{shapes} logits intermediate(s) in compiled "
                 f"module:\n  " + "\n  ".join(hits[:8]))

@@ -43,6 +43,60 @@ class TuningConfig:
 
 
 # ---------------------------------------------------------------------------
+# multi-token prediction (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MTPConfig:
+    """Multi-token-prediction heads over the shared trunk (Gloeckle et al.).
+
+    Horizon 0 is the trunk's own next-token prediction (always present);
+    head h in 1..n_heads predicts the token at offset h+1 from the same
+    position, through `head_depth` residual MLP blocks applied to the
+    trunk's final hidden state and the SHARED lm_head — so every horizon's
+    loss runs through the same fused-CE kernels with one BlockPlan.
+
+    Attributes:
+      n_heads: number of extra future-token heads (0 disables MTP).
+      head_depth: residual MLP blocks per head.
+      d_ff: head MLP hidden width; 0 -> 2 * d_model.
+      loss_weights: per-head loss weights (horizon 1..n_heads); () means
+        1.0 each.  A weight of exactly 0.0 statically drops that horizon
+        from the total loss (its gradient contribution is identically
+        zero), while its metrics are still reported.
+      track_accuracy: also report per-horizon top-1 accuracy, computed
+        with the streaming (logits-free) top-1 scan under stop_gradient.
+        Off by default: the extra scan is a full vocab sweep per horizon
+        per step — loss-order compute bought purely for a metric.
+    """
+
+    n_heads: int = 0
+    head_depth: int = 1
+    d_ff: int = 0
+    loss_weights: tuple = ()
+    track_accuracy: bool = False
+
+    def __post_init__(self):
+        if self.n_heads < 0:
+            raise ValueError("mtp.n_heads must be >= 0")
+        if self.head_depth < 1:
+            raise ValueError("mtp.head_depth must be >= 1")
+        if self.loss_weights and len(self.loss_weights) != self.n_heads:
+            raise ValueError(
+                f"mtp.loss_weights has {len(self.loss_weights)} entries "
+                f"for {self.n_heads} heads (use () for all-1.0)")
+        if any(w < 0 for w in self.loss_weights):
+            raise ValueError("mtp.loss_weights must be >= 0")
+
+    def resolved_weights(self) -> tuple:
+        return tuple(self.loss_weights) or (1.0,) * self.n_heads
+
+    def resolved_d_ff(self, d_model: int) -> int:
+        return self.d_ff or 2 * d_model
+
+
+# ---------------------------------------------------------------------------
 # shape grid (assignment: LM shapes are seq_len x global_batch)
 # ---------------------------------------------------------------------------
 
@@ -75,6 +129,7 @@ class Arch:
     cfg: Any                      # family config dataclass
     tags: tuple = ()              # ('moe',), ('ssm',), ...
     vocab_pad_multiple: int = 256  # lm_head rows padded to this multiple
+    mtp: MTPConfig = MTPConfig()   # multi-token prediction heads
 
     @property
     def vocab_size(self) -> int:
@@ -98,6 +153,11 @@ class Arch:
         if s.name == "long_500k":
             return self.sub_quadratic     # spec: full-attention archs skip
         return True
+
+
+def with_mtp(arch: Arch, n_heads: int, **kw) -> Arch:
+    """`arch` with an `MTPConfig(n_heads=n_heads, **kw)` block attached."""
+    return dataclasses.replace(arch, mtp=MTPConfig(n_heads=n_heads, **kw))
 
 
 def _ids(shape, dtype=jnp.int32):

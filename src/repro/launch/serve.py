@@ -9,9 +9,12 @@ scheduler and prints per-request tokens plus throughput/occupancy.
 Speculative decoding: pass ``--spec-draft <arch-id>`` (the draft model's
 config; ``self`` drafts with the target model itself) and ``--spec-k N``
 to decode through `serve.spec.SpecEngine` — each engine step emits up to
-N+1 tokens.  ``--stats-json [PATH]`` dumps the scheduler's run report
-(per-request TTFT/latency, tokens-per-step, acceptance rate) as JSON to
-PATH, or to stdout when no PATH is given.
+N+1 tokens.  ``--spec-self`` instead drafts from the TARGET model's own
+multi-token-prediction heads (`serve.spec.SelfSpecEngine`, DESIGN.md §7):
+no sidecar model, no second cache tree; ``--mtp-heads`` sets the head
+count (default: spec-k).  ``--stats-json [PATH]`` dumps the scheduler's
+run report (per-request TTFT/latency, tokens-per-step, acceptance rate,
+spec mode) as JSON to PATH, or to stdout when no PATH is given.
 """
 
 from __future__ import annotations
@@ -23,9 +26,10 @@ import time
 import jax
 import numpy as np
 
+from repro.configs.base import with_mtp
 from repro.models.registry import get_arch, init_params
 from repro.serve import (ServeConfig, Engine, ContinuousScheduler,
-                         SpecConfig, SpecEngine)
+                         SpecConfig, SpecEngine, SelfSpecEngine)
 
 
 def main(argv=None):
@@ -49,6 +53,12 @@ def main(argv=None):
     ap.add_argument("--spec-draft", default=None,
                     help="draft arch id for speculative decoding "
                          "('self': draft with the target model)")
+    ap.add_argument("--spec-self", action="store_true",
+                    help="self-speculate from the target's own MTP heads "
+                         "(no sidecar draft model / cache tree)")
+    ap.add_argument("--mtp-heads", type=int, default=0,
+                    help="multi-token-prediction heads to attach "
+                         "(0 with --spec-self: use --spec-k heads)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="drafted tokens per speculative step")
     ap.add_argument("--stats-json", nargs="?", const="-", default=None,
@@ -58,7 +68,11 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.spec_self and args.spec_draft:
+        ap.error("--spec-self and --spec-draft are mutually exclusive")
     arch = get_arch(args.arch, reduced=args.reduced)
+    if args.mtp_heads or args.spec_self:
+        arch = with_mtp(arch, args.mtp_heads or args.spec_k)
     params = init_params(arch, jax.random.PRNGKey(args.seed))
     enc_len = 32 if arch.family == "encdec" else None
     fe = None
@@ -71,7 +85,12 @@ def main(argv=None):
                      temperature=args.temperature, top_k=args.top_k,
                      top_p=args.top_p, sampler_impl=args.sampler_impl,
                      enc_len=enc_len, autotune=args.autotune)
-    if args.spec_draft:
+    if args.spec_self:
+        eng = SelfSpecEngine(arch, params, sc,
+                             SpecConfig(k=min(args.spec_k,
+                                              arch.mtp.n_heads)))
+        mode = f"spec(self-mtp, heads={arch.mtp.n_heads}, k={eng.spec_k})"
+    elif args.spec_draft:
         if args.spec_draft == "self":
             draft_arch, draft_params = arch, params
         else:
@@ -101,7 +120,7 @@ def main(argv=None):
           f"{sched.decode_steps} decode steps, "
           f"{sched.tokens_per_step:.2f} tok/slot-step"
           + (f", acceptance {sched.acceptance_rate:.2f}"
-             if args.spec_draft else "") + ")")
+             if args.spec_draft or args.spec_self else "") + ")")
     if args.stats_json is not None:
         report = json.dumps(sched.stats(), indent=1, sort_keys=True)
         if args.stats_json == "-":

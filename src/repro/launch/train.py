@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer
-from repro.configs.base import TuningConfig
+from repro.configs.base import TuningConfig, with_mtp
 from repro.data import DataConfig, SyntheticLM, ShardedLoader
 from repro.distributed.fault import PreemptionHandler, StragglerMonitor
 from repro.launch.mesh import make_local_mesh
@@ -45,6 +45,14 @@ def main(argv=None):
     ap.add_argument("--loss-impl", default="streaming",
                     choices=("streaming", "pallas", "canonical", "sharded"))
     ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--mtp-heads", type=int, default=0,
+                    help="multi-token-prediction heads trained over the "
+                         "trunk (per-horizon fused CE, shared BlockPlan)")
+    ap.add_argument("--mtp-depth", type=int, default=1,
+                    help="residual MLP blocks per MTP head")
+    ap.add_argument("--mtp-weights", default=None,
+                    help="comma-separated per-head loss weights "
+                         "(default: 1.0 each)")
     ap.add_argument("--autotune", action="store_true",
                     help="empirically tune the fused-CE block plan at "
                          "startup (memoized in the tuning cache)")
@@ -63,6 +71,11 @@ def main(argv=None):
         format="%(asctime)s %(name)s %(levelname)s %(message)s")
 
     arch = get_arch(args.arch, reduced=args.reduced)
+    if args.mtp_heads:
+        weights = tuple(float(w) for w in args.mtp_weights.split(",")) \
+            if args.mtp_weights else ()
+        arch = with_mtp(arch, args.mtp_heads, head_depth=args.mtp_depth,
+                        loss_weights=weights, track_accuracy=True)
     mesh = None
     rules = None
     if args.devices:

@@ -1,0 +1,91 @@
+"""Multi-token prediction heads over a shared trunk (DESIGN.md §7).
+
+Gloeckle et al. ("Better & Faster Large Language Models via Multi-token
+Prediction") train n future-token heads on one trunk; this module is the
+family-agnostic realization: each head is a small stack of residual MLP
+blocks applied position-wise to the trunk's FINAL hidden state, followed
+by a per-head RMSNorm.  Head h's output is projected by the SHARED
+lm_head, so every horizon's loss / draft sampling runs through the same
+fused kernels (fused-CE for training, streaming top-k / score_tokens for
+self-speculative decoding) and the (B, S, n, V) logits tensor of naive
+MTP never exists.
+
+Position-wise heads keep causality trivially for every family (heads see
+exactly what the trunk position saw), which is what lets the registry
+attach them uniformly to transformer, griffin, and xlstm trunks.
+
+Parameters are head×depth stacked (scan-params idiom of the trunk):
+
+    {"ln":     {"scale": (n, depth, d)},
+     "mlp":    {"wi": (n, depth, d, ff), "wg": ..., "wo": (n, depth, ff, d)},
+     "ln_out": {"scale": (n, d)}}
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MTPConfig
+from repro.core.types import IGNORE_INDEX
+from repro.models import layers as L
+
+
+def init_heads(key, d_model: int, mcfg: MTPConfig,
+               dtype=jnp.float32) -> Dict[str, Any]:
+    """Stacked params for `mcfg.n_heads` heads of `mcfg.head_depth` blocks."""
+    n, depth = mcfg.n_heads, mcfg.head_depth
+    ff = mcfg.resolved_d_ff(d_model)
+    keys = jax.random.split(key, n * depth).reshape(n, depth, -1)
+    mlps = jax.vmap(jax.vmap(
+        lambda k: L.init_mlp(k, d_model, ff, n_layers_scale=depth,
+                             dtype=dtype)))(keys)
+    return {
+        "ln": {"scale": jnp.ones((n, depth, d_model), dtype)},
+        "mlp": mlps,
+        "ln_out": {"scale": jnp.ones((n, d_model), dtype)},
+    }
+
+
+def apply_heads(params: Dict[str, Any], x: jax.Array,
+                eps: float = 1e-6) -> jax.Array:
+    """Per-head hidden states for trunk hiddens `x`.
+
+    x: (..., d) — any leading shape (full (B, T, d) training activations
+    or a single gathered (B, d) row in the self-speculative step).
+    Returns (..., n, d): position i's head h hidden predicts the token at
+    offset h+1 (the trunk itself predicts offset 1 == horizon 0).
+    """
+    n, depth = params["ln"]["scale"].shape[:2]
+    outs = []
+    for h in range(n):
+        xi = x
+        for b in range(depth):
+            ln = {"scale": params["ln"]["scale"][h, b]}
+            mp = jax.tree.map(lambda leaf: leaf[h, b], params["mlp"])
+            xi = xi + L.mlp(mp, L.rmsnorm(ln, xi, eps))
+        outs.append(L.rmsnorm({"scale": params["ln_out"]["scale"][h]},
+                              xi, eps))
+    return jnp.stack(outs, axis=-2)
+
+
+def shift_targets(targets: jax.Array, horizon: int,
+                  ignore_index: int = IGNORE_INDEX) -> jax.Array:
+    """Horizon-h targets: horizon-0 targets rolled left by `horizon` along
+    the last (time) axis, with the vacated tail filled with
+    `ignore_index` (the sequence holds no label that far ahead).
+
+    Position i's horizon-h target is targets[..., i + h] — an ignored
+    horizon-0 position stays ignored at every horizon that can see it,
+    and `horizon >= T` ignores the whole sequence.
+    """
+    if horizon < 0:
+        raise ValueError(f"horizon must be >= 0, got {horizon}")
+    if horizon == 0:
+        return targets
+    t = targets.shape[-1]
+    rolled = jnp.roll(targets, -horizon, axis=-1)
+    pos = jnp.arange(t)
+    return jnp.where(pos < t - horizon, rolled, ignore_index)

@@ -17,6 +17,11 @@ import jax.numpy as jnp
 
 from repro.configs.base import Arch, SHAPES, input_specs
 
+# Families whose trunks take the registry-level MTP heads (DESIGN.md §7).
+# Heads are position-wise post-trunk blocks, so any decoder-only LM trunk
+# qualifies; enc-dec is excluded (its serve path is encoder-conditioned).
+MTP_FAMILIES = ("transformer", "griffin", "xlstm")
+
 _CONFIG_MODULES = {
     "arctic-480b": "repro.configs.arctic_480b",
     "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b",
@@ -46,25 +51,58 @@ def _family_mod(arch: Arch):
     return importlib.import_module(f"repro.models.{arch.family}")
 
 
+def supports_mtp(arch: Arch) -> bool:
+    """True when this arch can carry multi-token prediction heads AND its
+    config block asks for them (`arch.mtp.n_heads > 0`)."""
+    return arch.family in MTP_FAMILIES and arch.mtp.n_heads > 0
+
+
 def init_params(arch: Arch, rng: jax.Array):
     mod = _family_mod(arch)
     params = mod.init_params(rng, arch.cfg)
     pad = arch.padded_vocab - arch.vocab_size
     if pad:
         params["lm_head"] = jnp.pad(params["lm_head"], ((0, pad), (0, 0)))
+    if arch.mtp.n_heads:
+        if arch.family not in MTP_FAMILIES:
+            raise ValueError(
+                f"family {arch.family!r} does not support MTP heads "
+                f"(supported: {MTP_FAMILIES})")
+        from repro.models.mtp import init_heads
+        params["mtp"] = init_heads(
+            jax.random.fold_in(rng, 0x4d54), arch.cfg.d_model, arch.mtp,
+            dtype=jnp.dtype(getattr(arch.cfg, "param_dtype", "float32")))
     return params
+
+
+def apply_mtp_heads(arch: Arch, params, h: jax.Array) -> jax.Array:
+    """Per-head hidden states (..., n, d) from trunk hiddens (..., d)."""
+    if "mtp" not in params:
+        raise ValueError(
+            "params carry no 'mtp' head subtree — init them via "
+            "init_params on an arch with mtp.n_heads > 0")
+    from repro.models.mtp import apply_heads
+    return apply_heads(params["mtp"], h,
+                       eps=getattr(arch.cfg, "norm_eps", 1e-6))
 
 
 def forward_hidden(
     arch: Arch, params, batch: Dict[str, Any], *,
     caches=None, shard=None, decode: bool = False,
-) -> Tuple[jax.Array, jax.Array, Any]:
+    return_heads: bool = False,
+):
     """(hidden aligned with batch['targets'], aux_loss, new_caches).
 
     ``decode=True`` (static) marks a cached T > 1 forward as a cache
     EXTENSION (per-row append + full-cache causal attention — the
     speculative-verification path) rather than a fresh prefill.
     Recurrent families are sequential either way and ignore it.
+
+    ``return_heads=True`` (static; needs `arch.mtp.n_heads > 0`) returns
+    the 4-tuple (hidden, head_hidden (B, T, n, d), aux_loss, new_caches):
+    the trunk hiddens plus the per-horizon MTP head hiddens — the
+    training path applies the fused CE to every horizon from this one
+    forward (DESIGN.md §7.1).
     """
     mod = _family_mod(arch)
     kwargs = dict(shard=shard, decode=decode)
@@ -78,6 +116,8 @@ def forward_hidden(
     else:  # xlstm / griffin
         h, aux, c = mod.forward(params, batch["tokens"], arch.cfg,
                                 states=caches, **kwargs)
+    if return_heads:
+        return h, apply_mtp_heads(arch, params, h), aux, c
     return h, aux, c
 
 

@@ -2,9 +2,11 @@ from repro.serve.engine import (ServeConfig, Engine, build_serve_fns,
                                 resolve_logit_softcap)
 from repro.serve.scheduler import ContinuousScheduler, Request
 from repro.serve.sampler import streaming_topk, sample_tokens, top_p_mask
-from repro.serve.spec import SpecConfig, SpecEngine, build_spec_step
+from repro.serve.spec import (SpecConfig, SpecEngine, SelfSpecEngine,
+                              build_spec_step, build_self_spec_step)
 
 __all__ = ["ServeConfig", "Engine", "ContinuousScheduler", "Request",
            "build_serve_fns", "resolve_logit_softcap",
            "streaming_topk", "sample_tokens", "top_p_mask",
-           "SpecConfig", "SpecEngine", "build_spec_step"]
+           "SpecConfig", "SpecEngine", "SelfSpecEngine",
+           "build_spec_step", "build_self_spec_step"]

@@ -71,6 +71,41 @@ def resolve_logit_softcap(arch: Arch, sc: ServeConfig) -> Optional[float]:
     return getattr(arch.cfg, "logit_softcap", None)
 
 
+def make_sampler(arch: Arch, sc: ServeConfig):
+    """Streaming-sampler closure over this arch's softcap + the serve
+    sampling knobs.  `temperature` stays a call-site argument: the
+    speculative engines draw drafts at the draft temperature and verify
+    picks at the target temperature through the SAME closure.
+    """
+    valid = arch.vocab_size
+    softcap = resolve_logit_softcap(arch, sc)
+
+    def sample(h2, w, rng, temperature):
+        return sample_tokens(h2, w, rng, temperature=temperature,
+                             top_k=sc.top_k, top_p=sc.top_p,
+                             block_v=sc.sample_block_v, valid_vocab=valid,
+                             logit_softcap=softcap, impl=sc.sampler_impl)
+
+    return sample
+
+
+def prefill_last_hidden(arch: Arch, params, caches, batch, true_len,
+                        shard=None):
+    """The traced half of a batch=1 prefill: run the forward, shift the
+    caches' ``len`` back by the bucket pad, and read the hidden state at
+    the last REAL prompt position.  Returns (h_last (1, d), caches) —
+    shared by the plain prefill and the MTP self-speculative prefill (the
+    latter also applies the heads to `h_last`)."""
+    h, _, caches = forward_hidden(arch, params, batch, caches=caches,
+                                  shard=shard)
+    pad = batch["tokens"].shape[1] - true_len
+    caches = shift_cache_lens(caches, pad)
+    last = h.shape[1] - batch["tokens"].shape[1] + true_len - 1
+    h_last = jax.lax.dynamic_index_in_dim(h, last, axis=1,
+                                          keepdims=False)        # (1, d)
+    return h_last, caches
+
+
 def build_serve_fns(arch: Arch, sc: ServeConfig, shard=None):
     """(prefill, decode_step) jit-ready functions.
 
@@ -80,30 +115,19 @@ def build_serve_fns(arch: Arch, sc: ServeConfig, shard=None):
         REAL position and the caches' ``len`` shifted back by the pad.
     decode_step(params, caches, tokens (B, 1), rng) -> (tok (B,), caches)
     """
-    valid = arch.vocab_size
-    softcap = resolve_logit_softcap(arch, sc)
-
-    def _sample(h_last, params, rng):
-        return sample_tokens(
-            h_last, params["lm_head"], rng,
-            temperature=sc.temperature, top_k=sc.top_k, top_p=sc.top_p,
-            block_v=sc.sample_block_v, valid_vocab=valid,
-            logit_softcap=softcap, impl=sc.sampler_impl)
+    sampler = make_sampler(arch, sc)
 
     def prefill(params, caches, batch, true_len, rng):
-        h, _, caches = forward_hidden(arch, params, batch, caches=caches,
-                                      shard=shard)
-        pad = batch["tokens"].shape[1] - true_len
-        caches = shift_cache_lens(caches, pad)
-        last = h.shape[1] - batch["tokens"].shape[1] + true_len - 1
-        h_last = jax.lax.dynamic_index_in_dim(h, last, axis=1,
-                                              keepdims=False)    # (1, d)
-        return _sample(h_last, params, rng), caches
+        h_last, caches = prefill_last_hidden(arch, params, caches, batch,
+                                             true_len, shard=shard)
+        return sampler(h_last, params["lm_head"], rng,
+                       sc.temperature), caches
 
     def decode_step(params, caches, tokens, rng):
         h, _, caches = forward_hidden(arch, params, {"tokens": tokens},
                                       caches=caches, shard=shard)
-        return _sample(h[:, -1, :], params, rng), caches
+        return sampler(h[:, -1, :], params["lm_head"], rng,
+                       sc.temperature), caches
 
     return prefill, decode_step
 
@@ -203,14 +227,10 @@ class Engine:
         self._rng, sub = jax.random.split(self._rng)
         return sub
 
-    def prefill_into_slot(self, slot: int, prompt, frontend_embeds=None
-                          ) -> int:
-        """Prefill one prompt at batch=1 into slot `slot`; returns the
-        FIRST sampled token (the time-to-first-token token).
-
-        For enc-dec families a missing `frontend_embeds` runs the
-        encoder on zeros — a deliberate unconditioned-decode fallback;
-        pass real frames for conditioned generation."""
+    def _prefill_inputs(self, prompt, frontend_embeds=None):
+        """(batch, slot_caches, true_len) for one batch=1 prefill —
+        prompt validation, pow2 bucketing, and the per-family slot-cache
+        template, shared by the plain and self-speculative prefills."""
         prompt = np.asarray(prompt, np.int32).reshape(1, -1)
         true_len = prompt.shape[1]
         if not 1 <= true_len <= self.sc.max_len:
@@ -234,7 +254,18 @@ class Engine:
             slot_caches = self._slot_init
             if getattr(cfg, "frontend_len", 0) and frontend_embeds is not None:
                 batch["frontend_embeds"] = jnp.asarray(frontend_embeds)
+        return batch, slot_caches, true_len
 
+    def prefill_into_slot(self, slot: int, prompt, frontend_embeds=None
+                          ) -> int:
+        """Prefill one prompt at batch=1 into slot `slot`; returns the
+        FIRST sampled token (the time-to-first-token token).
+
+        For enc-dec families a missing `frontend_embeds` runs the
+        encoder on zeros — a deliberate unconditioned-decode fallback;
+        pass real frames for conditioned generation."""
+        batch, slot_caches, true_len = self._prefill_inputs(
+            prompt, frontend_embeds)
         tok, slot_caches = self._prefill(
             self.params, slot_caches, batch, jnp.int32(true_len),
             self._split())

@@ -239,6 +239,9 @@ class ContinuousScheduler:
         if spec_k:
             out["spec"] = {
                 "k": spec_k,
+                # 'self' (target's own MTP heads, one cache tree) vs
+                # 'sidecar' (separate draft model + second cache tree)
+                "mode": getattr(self.engine, "spec_mode", "sidecar"),
                 "drafted": self.spec_drafted,
                 "accepted": self.spec_accepted,
                 "acceptance_rate": round(self.acceptance_rate, 4),

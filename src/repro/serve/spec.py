@@ -49,12 +49,12 @@ import numpy as np
 
 from repro.configs.base import Arch
 from repro.kernels.score_tokens import pallas_score_tokens, streaming_score
-from repro.models.registry import (forward_hidden, init_params,
-                                   rollback_slot_caches,
+from repro.models.registry import (apply_mtp_heads, forward_hidden,
+                                   init_params, rollback_slot_caches,
                                    rollback_snapshot_caches,
-                                   spec_cache_strategy)
-from repro.serve.engine import Engine, ServeConfig, resolve_logit_softcap
-from repro.serve.sampler import sample_tokens
+                                   spec_cache_strategy, supports_mtp)
+from repro.serve.engine import (Engine, ServeConfig, make_sampler,
+                                prefill_last_hidden, resolve_logit_softcap)
 
 
 @dataclasses.dataclass
@@ -87,6 +87,29 @@ def small_draft(arch: Arch, seed: int = 7, **overrides):
     draft_arch = dataclasses.replace(
         arch, cfg=dataclasses.replace(arch.cfg, **fields))
     return draft_arch, init_params(draft_arch, jax.random.PRNGKey(seed))
+
+
+def verify_forward(arch: Arch, params, caches, seq, shard, strat):
+    """The target's multi-token verification forward over `seq` (B, S).
+
+    ``'len'`` strategy: ONE cached ``decode=True`` forward (per-row
+    append); ``'scan'``: S sequential single-token forwards with a cache
+    snapshot after each (rollback selects a snapshot per slot).  Returns
+    (hiddens (B, S, d), new_caches, snapshots | None).
+    """
+    if strat == "len":
+        h, _, caches = forward_hidden(arch, params, {"tokens": seq},
+                                      caches=caches, shard=shard,
+                                      decode=True)
+        return h, caches, None
+    hs, snaps = [], [caches]
+    for j in range(seq.shape[1]):
+        hj, _, caches = forward_hidden(
+            arch, params, {"tokens": seq[:, j:j + 1]},
+            caches=caches, shard=shard)
+        snaps.append(caches)
+        hs.append(hj[:, -1, :])
+    return jnp.stack(hs, axis=1), caches, snaps
 
 
 def build_spec_step(arch: Arch, draft_arch: Arch, sc: ServeConfig,
@@ -135,11 +158,8 @@ def build_spec_step(arch: Arch, draft_arch: Arch, sc: ServeConfig,
             raise ValueError(f"unknown score impl {spec.score_impl!r}")
         return logp
 
-    def _sample(h2, w, rng, temperature, cap):
-        return sample_tokens(h2, w, rng, temperature=temperature,
-                             top_k=sc.top_k, top_p=sc.top_p,
-                             block_v=sc.sample_block_v, valid_vocab=valid,
-                             logit_softcap=cap, impl=sc.sampler_impl)
+    sampler_t = make_sampler(arch, sc)
+    sampler_d = make_sampler(draft_arch, sc)
 
     def spec_step(params, dparams, caches, dcaches, cur, rng):
         b = cur.shape[0]
@@ -159,8 +179,8 @@ def build_spec_step(arch: Arch, draft_arch: Arch, sc: ServeConfig,
             if i == k_spec:
                 break
             h_last = h[:, -1, :]
-            nxt = _sample(h_last, dparams["lm_head"], rngs[i], draft_temp,
-                          draft_cap)                     # (B,)
+            nxt = sampler_d(h_last, dparams["lm_head"], rngs[i],
+                            draft_temp)                  # (B,)
             d_hidden.append(h_last)
             d_tokens.append(nxt)
             tok = nxt[:, None]
@@ -174,26 +194,14 @@ def build_spec_step(arch: Arch, draft_arch: Arch, sc: ServeConfig,
 
         # ---- 2. target verification over [cur, d_1..d_K]
         seq = jnp.concatenate([cur, draft_tokens], axis=1)   # (B, K+1)
-        if t_strat == "len":
-            h, _, caches = forward_hidden(arch, params, {"tokens": seq},
-                                          caches=caches, shard=shard,
-                                          decode=True)
-            t_snaps = None
-        else:                                            # recurrent: scan
-            hs, t_snaps = [], [caches]
-            for j in range(k_spec + 1):
-                hj, _, caches = forward_hidden(
-                    arch, params, {"tokens": seq[:, j:j + 1]},
-                    caches=caches, shard=shard)
-                t_snaps.append(caches)
-                hs.append(hj[:, -1, :])
-            h = jnp.stack(hs, axis=1)                    # (B, K+1, d)
+        h, caches, t_snaps = verify_forward(arch, params, caches, seq,
+                                            shard, t_strat)
         d_model = h.shape[-1]
 
         # the target's own choice at every position (argmax when greedy)
-        choice = _sample(h.reshape(b * (k_spec + 1), d_model),
-                         params["lm_head"], rngs[-1], sc.temperature,
-                         target_cap).reshape(b, k_spec + 1)
+        choice = sampler_t(h.reshape(b * (k_spec + 1), d_model),
+                           params["lm_head"], rngs[-1],
+                           sc.temperature).reshape(b, k_spec + 1)
 
         # ---- 3. acceptance
         if greedy:
@@ -249,6 +257,8 @@ class SpecEngine(Engine):
     cycle; the base single-token `decode_step` keeps working (and is
     what `ContinuousScheduler` falls back to for plain engines).
     """
+
+    spec_mode = "sidecar"     # scheduler stats: draft model vs self-MTP
 
     def __init__(self, arch: Arch, params, sc: ServeConfig,
                  draft_arch: Arch, draft_params,
@@ -322,6 +332,280 @@ class SpecEngine(Engine):
         out, counts, self.caches, self.draft.caches, _ = self._spec_step(
             self.params, self.draft.params, self.caches, self.draft.caches,
             jnp.asarray(self.cur[:, None]), self._split())
+        out = np.asarray(jax.device_get(out), np.int32)
+        counts = np.asarray(jax.device_get(counts), np.int32)
+        self.cur = out[np.arange(out.shape[0]), counts - 1].copy()
+        return out, counts
+
+
+# ---------------------------------------------------------------------------
+# self-speculation from the target's own MTP heads (DESIGN.md §7.2)
+# ---------------------------------------------------------------------------
+
+
+def _score_lp(h2, w, ids, *, valid, cap, temp, spec: SpecConfig):
+    """log p(ids | h2) under the shared lm_head via the score kernels."""
+    if spec.score_impl == "pallas":
+        logp, _ = pallas_score_tokens(h2, w, ids, valid_vocab=valid,
+                                      logit_softcap=cap, temperature=temp)
+    elif spec.score_impl == "jax":
+        logp, _ = streaming_score(h2, w, ids, block_v=spec.score_block_v,
+                                  valid_vocab=valid, logit_softcap=cap,
+                                  temperature=temp)
+    else:
+        raise ValueError(f"unknown score impl {spec.score_impl!r}")
+    return logp
+
+
+def build_self_prefill(arch: Arch, sc: ServeConfig, spec: SpecConfig,
+                       shard=None):
+    """batch=1 prefill that also seeds the slot's MTP draft state.
+
+    prefill(params, slot_caches, batch, true_len, rng) ->
+        (tok (1,), draft (K,), draft_lp (K,), caches)
+
+    `tok` is the usual first sampled token; `draft` holds the K head
+    proposals for the tokens AFTER it (head h at the last real prompt
+    position predicts offset h+1), and `draft_lp` their head log-probs
+    (zeros in greedy mode — never consulted).
+    """
+    k_spec = spec.k
+    valid = arch.vocab_size
+    cap = resolve_logit_softcap(arch, sc)
+    greedy = sc.temperature == 0.0
+    draft_temp = (sc.temperature if spec.draft_temperature is None
+                  else spec.draft_temperature)
+    sampler = make_sampler(arch, sc)
+
+    def prefill(params, caches, batch, true_len, rng):
+        h_last, caches = prefill_last_hidden(arch, params, caches, batch,
+                                             true_len, shard=shard)
+        r_tok, r_draft = jax.random.split(rng)
+        w = params["lm_head"]
+        tok = sampler(h_last, w, r_tok, sc.temperature)          # (1,)
+        heads = apply_mtp_heads(arch, params, h_last)            # (1, n, d)
+        hh = heads[0, :k_spec]                                   # (K, d)
+        draft = sampler(hh, w, r_draft, draft_temp)              # (K,)
+        if greedy:
+            d_lp = jnp.zeros((k_spec,), jnp.float32)
+        else:
+            d_lp = _score_lp(hh, w, draft[:, None], valid=valid, cap=cap,
+                             temp=draft_temp, spec=spec)[:, 0]
+        return tok, draft, d_lp, caches
+
+    return prefill
+
+
+def build_self_spec_step(arch: Arch, sc: ServeConfig, spec: SpecConfig,
+                         axes, shard=None):
+    """The jit-ready SELF-speculative step: the target model drafts for
+    itself through its MTP heads — no sidecar model, no second cache
+    tree, no draft catch-up forward (DESIGN.md §7.2).
+
+    self_spec_step(params, caches, cur (B,1), draft (B,K), draft_lp (B,K),
+                   rng) ->
+        (tokens (B, K+1), counts (B,), caches,
+         new_draft (B, K), new_draft_lp (B, K), n_accepted (B,))
+
+    One forward per step: the verification forward over
+    ``[cur, d_1..d_K]`` both scores this step's drafts AND produces the
+    hidden state whose MTP heads propose the NEXT step's drafts (gathered
+    at each slot's accepted position, so head h there predicts offset
+    h+1 — exactly the tokens after the bonus token).  Greedy emissions
+    are token-identical to plain decode: every accepted draft matched the
+    target's own argmax and the bonus IS the target's argmax.
+
+    Rejection mode (temperature > 0) accepts draft i with probability
+    ``min(1, p_target(d_i)/p_head(d_i))`` where the head log-prob was
+    recorded when the draft was proposed (the previous step); like
+    Medusa-style drafting, heads propose each horizon independently of
+    the intervening drafts, so sampled-mode output is approximate while
+    greedy mode is exact.
+    """
+    k_spec = spec.k
+    if k_spec < 1:
+        raise ValueError(f"spec.k must be >= 1, got {k_spec}")
+    if not supports_mtp(arch):
+        raise ValueError(
+            f"self-speculation needs MTP heads: arch {arch.arch_id!r} "
+            f"(family {arch.family!r}) has mtp.n_heads="
+            f"{arch.mtp.n_heads}")
+    if k_spec > arch.mtp.n_heads:
+        raise ValueError(
+            f"spec.k={k_spec} exceeds the arch's mtp.n_heads="
+            f"{arch.mtp.n_heads} (each drafted token needs a head)")
+    valid = arch.vocab_size
+    cap = resolve_logit_softcap(arch, sc)
+    greedy = sc.temperature == 0.0
+    draft_temp = (sc.temperature if spec.draft_temperature is None
+                  else spec.draft_temperature)
+    strat = spec_cache_strategy(arch)
+
+    def _score(h2, w, ids, temp):
+        return _score_lp(h2, w, ids, valid=valid, cap=cap, temp=temp,
+                         spec=spec)
+
+    sampler = make_sampler(arch, sc)
+
+    def self_spec_step(params, caches, cur, draft, draft_lp, rng):
+        b = cur.shape[0]
+        w = params["lm_head"]
+        r_choice, r_acc, r_draft = jax.random.split(rng, 3)
+
+        # ---- 1. ONE target forward verifies the pending drafts
+        seq = jnp.concatenate([cur, draft], axis=1)          # (B, K+1)
+        h, caches, snaps = verify_forward(arch, params, caches, seq,
+                                          shard, strat)
+        d_model = h.shape[-1]
+
+        # the target's own choice at every position
+        choice = sampler(h.reshape(b * (k_spec + 1), d_model), w,
+                         r_choice, sc.temperature).reshape(b, k_spec + 1)
+
+        # ---- 2. acceptance
+        if greedy:
+            acc = draft == choice[:, :k_spec]
+        else:
+            t_lp = _score(h[:, :k_spec, :].reshape(b * k_spec, d_model),
+                          w, draft.reshape(b * k_spec, 1),
+                          sc.temperature).reshape(b, k_spec)
+            u = jax.random.uniform(r_acc, (b, k_spec),
+                                   minval=1e-20, maxval=1.0)
+            acc = jnp.log(u) <= (t_lp - draft_lp)    # min(1, pt/ph)
+        prefix = jnp.cumprod(acc.astype(jnp.int32), axis=1)
+        n_acc = jnp.sum(prefix, axis=1)              # (B,) in [0, K]
+
+        pos = jnp.arange(k_spec + 1)[None, :]
+        dpad = jnp.concatenate(
+            [draft, jnp.zeros((b, 1), draft.dtype)], axis=1)
+        bonus = jnp.take_along_axis(choice, n_acc[:, None], axis=1)
+        out = jnp.where(pos < n_acc[:, None], dpad, 0)
+        out = jnp.where(pos == n_acc[:, None], bonus, out)
+        counts = n_acc + 1
+
+        # ---- 3. next step's drafts: MTP heads at the accepted position
+        # (hidden after consuming [cur, d_1..d_a] — its trunk choice was
+        # the bonus token, so head h there predicts offset h+1 AFTER it)
+        h_a = jnp.take_along_axis(
+            h, n_acc[:, None, None], axis=1)[:, 0]           # (B, d)
+        heads = apply_mtp_heads(arch, params, h_a)           # (B, n, d)
+        hh = heads[:, :k_spec].reshape(b * k_spec, d_model)
+        new_draft = sampler(hh, w, r_draft,
+                            draft_temp).reshape(b, k_spec)
+        if greedy:
+            new_lp = jnp.zeros((b, k_spec), jnp.float32)
+        else:
+            new_lp = _score(hh, w, new_draft.reshape(b * k_spec, 1),
+                            draft_temp).reshape(b, k_spec)
+
+        # ---- 4. roll back the K - n_acc rejected positions
+        if strat == "len":
+            caches = rollback_slot_caches(caches, k_spec - n_acc)
+        else:
+            caches = rollback_snapshot_caches(snaps, n_acc + 1,
+                                              k_spec - n_acc, axes)
+        return (out.astype(jnp.int32), counts.astype(jnp.int32), caches,
+                new_draft.astype(jnp.int32), new_lp,
+                n_acc.astype(jnp.int32))
+
+    return self_spec_step
+
+
+class SelfSpecEngine(Engine):
+    """Slot engine that speculates with the TARGET model's own MTP heads.
+
+    Versus the sidecar `SpecEngine`: no draft model, no second batched
+    cache tree, no per-step draft catch-up forwards — the only extra live
+    state is the (B, K) pending-draft token/log-prob arrays, and the only
+    extra compute is the K head MLPs at ONE gathered position per slot
+    per step.  Prefill seeds each slot's drafts from the heads at the
+    last prompt position; every decode step then runs the single
+    verify-and-redraft forward of `build_self_spec_step`.
+    """
+
+    spec_mode = "self"
+
+    def __init__(self, arch: Arch, params, sc: ServeConfig,
+                 spec: Optional[SpecConfig] = None, jit: bool = True):
+        # the default SpecConfig drafts one token per available head; an
+        # EXPLICIT spec with k > n_heads is an error (raised by
+        # build_self_spec_step below)
+        self.spec = spec if spec is not None \
+            else SpecConfig(k=max(arch.mtp.n_heads, 1))
+        super().__init__(arch, params, sc, jit=jit)
+        step = build_self_spec_step(arch, sc, self.spec, self._axes)
+        prefill = build_self_prefill(arch, sc, self.spec)
+        wrap = jax.jit if jit else (lambda f, **kw: f)
+        dn = ({"donate_argnums": (1,)}
+              if jit and jax.default_backend() != "cpu" else {})
+        self._spec_step = wrap(step, **dn)
+        self._prefill_mtp = wrap(prefill)
+        if sc.autotune:
+            self._tune_self_spec_plans()
+
+    @property
+    def spec_k(self) -> int:
+        return self.spec.k
+
+    def _tune_self_spec_plans(self):
+        """Tune the verify/redraft kernels for their exact shapes before
+        the first trace: top-k over B*(K+1) choice rows and B*K head-
+        draft rows; scoring over B*K rows in rejection mode only."""
+        from repro.kernels.sample_topk import autotune_topk_plan
+        from repro.kernels.score_tokens import autotune_score_plan
+        b, kk = self.sc.batch_size, self.spec.k
+        v, d = self.params["lm_head"].shape
+        dtype = jnp.dtype(getattr(self.arch.cfg, "compute_dtype",
+                                  "float32"))
+        cap = resolve_logit_softcap(self.arch, self.sc)
+        topk = 1 if self.sc.temperature == 0.0 else self.sc.top_k
+        for n in sorted({b * (kk + 1), b * kk}):
+            autotune_topk_plan(n, v, d, topk, dtype,
+                               trial_budget=self.sc.tune_trial_budget,
+                               logit_softcap=cap)
+        if self.sc.temperature != 0.0:
+            autotune_score_plan(b * kk, v, d, 1, dtype,
+                                trial_budget=self.sc.tune_trial_budget,
+                                logit_softcap=cap)
+
+    # -- lifecycle (adds the per-slot pending-draft state) -------------------
+
+    def reset(self, seed: int = 0):
+        # self.spec is assigned BEFORE super().__init__ triggers the
+        # construction-time reset, so the draft state always exists
+        super().reset(seed)
+        k = self.spec.k
+        self._draft = jnp.zeros((self.sc.batch_size, k), jnp.int32)
+        self._draft_lp = jnp.zeros((self.sc.batch_size, k), jnp.float32)
+
+    def reset_slot(self, slot: int):
+        super().reset_slot(slot)
+        self._draft = self._draft.at[slot].set(0)
+        self._draft_lp = self._draft_lp.at[slot].set(0.0)
+
+    def prefill_into_slot(self, slot: int, prompt, frontend_embeds=None
+                          ) -> int:
+        batch, slot_caches, true_len = self._prefill_inputs(
+            prompt, frontend_embeds)
+        tok, draft, d_lp, slot_caches = self._prefill_mtp(
+            self.params, slot_caches, batch, jnp.int32(true_len),
+            self._split())
+        self.caches = self._insert(self.caches, slot_caches,
+                                   jnp.int32(slot))
+        self._draft = self._draft.at[slot].set(draft)
+        self._draft_lp = self._draft_lp.at[slot].set(d_lp)
+        tok = int(jax.device_get(tok)[0])
+        self.cur[slot] = tok
+        return tok
+
+    # -- the self-speculative step -------------------------------------------
+
+    def decode_step_multi(self) -> Tuple[np.ndarray, np.ndarray]:
+        """One verify→accept→redraft→rollback cycle for every slot."""
+        (out, counts, self.caches, self._draft, self._draft_lp, _) = \
+            self._spec_step(self.params, self.caches,
+                            jnp.asarray(self.cur[:, None]), self._draft,
+                            self._draft_lp, self._split())
         out = np.asarray(jax.device_get(out), np.int32)
         counts = np.asarray(jax.device_get(counts), np.int32)
         self.cur = out[np.arange(out.shape[0]), counts - 1].copy()

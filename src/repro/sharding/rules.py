@@ -139,6 +139,10 @@ PARAM_PATH_RULES: Sequence[Tuple[str, LogicalAxes]] = (
     (r"mlp.*bi$", ("ffn",)),
     (r"mlp.*bo$", ("embed",)),
     (r"conv.*w$", (None, "rnn")),
+    # MTP head norms: (n_heads, depth, d) / (n_heads, d) stacks stay
+    # replicated (the head MLPs match the mlp.* rules above and TP their
+    # ffn dim; a model-sharded norm scale buys nothing)
+    (r"mtp.*ln", (None,)),
     # block-diagonal RG-LRU gates: blocks align with the sharded d_rnn
     (r"rglru.*w[ax]$", ("rnn", None, None)),
     (r"(rglru|lstm|rnn).*", None),  # handled by rank-based fallback below

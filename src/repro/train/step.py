@@ -96,12 +96,39 @@ def _shard_counts(mesh, rows_axes: Tuple[str, ...],
     return rows, mesh.shape[vocab_axis]
 
 
+def _streaming_accuracy(rows, w, targets, lcfg: LossConfig) -> jax.Array:
+    """Top-1 accuracy over non-ignored rows WITHOUT materializing logits
+    (streaming vocab-chunked argmax, stop_gradient — a metric, not a
+    loss term)."""
+    from repro.serve.sampler import streaming_topk
+    rows = jax.lax.stop_gradient(rows)
+    w = jax.lax.stop_gradient(w)
+    _, ids = streaming_topk(rows, w, 1, block_v=lcfg.block_v,
+                            valid_vocab=lcfg.valid_vocab,
+                            logit_softcap=lcfg.logit_softcap)
+    keep = targets != lcfg.ignore_index
+    hit = jnp.sum((ids[:, 0] == targets) & keep)
+    return hit / jnp.maximum(jnp.sum(keep), 1)
+
+
 def build_loss_fn(arch: Arch, tc: TrainConfig,
                   rules: Optional[AxisRules] = None) -> Callable:
-    """(params, batch) -> (loss, metrics)."""
+    """(params, batch) -> (loss, metrics).
+
+    With `arch.mtp.n_heads > 0` the loss is multi-horizon (DESIGN.md §7.1):
+    horizon 0 is the trunk CE on batch['targets']; head h adds its weight
+    times the fused CE of the head-h hiddens against the targets shifted
+    left by h (IGNORE_INDEX tails).  All horizons share ONE BlockPlan —
+    identical (rows, vocab, d, dtype) keys, so the autotuner tunes once —
+    and report per-horizon ce_h*/acc_h* metrics.  Zero-weight horizons are
+    statically dropped from the total (their gradients are exactly zero)
+    but still measured.
+    """
     lcfg = _loss_cfg(arch, tc)
     mesh = rules.mesh if rules is not None else None
     shard = rules.shard if rules is not None else None
+    n_mtp = arch.mtp.n_heads
+    mtp_w = arch.mtp.resolved_weights()
 
     use_sharded = tc.loss_impl in ("sharded", "sharded_sp") and mesh is not None
     rows_axes = tuple(a for a in ("pod", "data")
@@ -126,26 +153,58 @@ def build_loss_fn(arch: Arch, tc: TrainConfig,
         return sharded_cache[key]
 
     def loss_fn(params, batch):
-        h, aux, _ = forward_hidden(arch, params, batch, shard=shard)
+        if n_mtp:
+            h, head_h, aux, _ = forward_hidden(arch, params, batch,
+                                               shard=shard,
+                                               return_heads=True)
+        else:
+            h, aux, _ = forward_hidden(arch, params, batch, shard=shard)
         d = h.shape[-1]
         rows = h.reshape(-1, d)
-        targets = batch["targets"].reshape(-1)
         w = params["lm_head"]
+
         if use_sharded:
-            ce = sharded_loss(rows.shape[0], w.shape[0], d,
-                              rows.dtype)(rows, w, targets)
+            sfn = sharded_loss(rows.shape[0], w.shape[0], d, rows.dtype)
+
+            def ce_of(r, y):
+                return sfn(r, w, y)
         else:
             impl = (tc.loss_impl
                     if tc.loss_impl not in ("sharded", "sharded_sp")
                     else "streaming")
             plan = None
             if impl in ("streaming", "pallas", "auto"):
+                # resolved ONCE; every horizon streams the same panel shape
                 plan = resolve_block_plan(tc, lcfg, rows.shape[0],
                                           w.shape[0], d, rows.dtype)
-            ce = fused_cross_entropy(rows, w, targets,
-                                     impl=impl, cfg=lcfg, plan=plan)
+
+            def ce_of(r, y):
+                return fused_cross_entropy(r, w, y, impl=impl, cfg=lcfg,
+                                           plan=plan)
+
+        targets0 = batch["targets"].reshape(-1)
+        ce0 = ce_of(rows, targets0)
+        ce = ce0
+        metrics: Dict[str, jax.Array] = {}
+        if n_mtp:
+            from repro.models.mtp import shift_targets
+            metrics["ce_h0"] = ce0
+            if arch.mtp.track_accuracy:
+                metrics["acc_h0"] = _streaming_accuracy(rows, w, targets0,
+                                                        lcfg)
+            for hz in range(1, n_mtp + 1):
+                tgt = shift_targets(batch["targets"], hz,
+                                    lcfg.ignore_index).reshape(-1)
+                rows_h = head_h[..., hz - 1, :].reshape(-1, d)
+                ce_h = ce_of(rows_h, tgt)
+                if mtp_w[hz - 1]:
+                    ce = ce + mtp_w[hz - 1] * ce_h
+                metrics[f"ce_h{hz}"] = ce_h
+                if arch.mtp.track_accuracy:
+                    metrics[f"acc_h{hz}"] = _streaming_accuracy(
+                        rows_h, w, tgt, lcfg)
         loss = ce + aux
-        return loss, {"ce": ce, "aux": aux}
+        return loss, dict(metrics, ce=ce, aux=aux)
 
     return loss_fn
 
@@ -228,23 +287,32 @@ def build_train_step(arch: Arch, tc: TrainConfig,
         acc_dt = jnp.dtype(tc.accum_dtype)
 
         def body(carry, mb):
-            acc, loss_sum, aux_sum = carry
+            acc, loss_sum, msum = carry
             (loss, metrics), grads = grad_fn(params, mb)
             grads = constrain_like_params(grads)
             acc = jax.tree.map(
                 lambda a, g: a + g.astype(acc_dt), acc, grads)
-            return (acc, loss_sum + loss, aux_sum + metrics["aux"]), None
+            msum = jax.tree.map(lambda a, m: a + m, msum, metrics)
+            return (acc, loss_sum + loss, msum), None
 
         zero = constrain_like_params(jax.tree.map(
             lambda p: jnp.zeros(p.shape, acc_dt), params))
-        (acc, loss_sum, aux_sum), _ = jax.lax.scan(
-            body, (zero, jnp.zeros(()), jnp.zeros(())), micro_batch)
+        # accumulate the FULL metrics dict (per-horizon MTP entries
+        # included), structured from an abstract eval of one microbatch
+        first_mb = jax.tree.map(lambda x: x[0], micro_batch)
+        m_struct = jax.eval_shape(lambda mb: grad_fn(params, mb)[0][1],
+                                  first_mb)
+        m_zero = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                              m_struct)
+        (acc, loss_sum, msum), _ = jax.lax.scan(
+            body, (zero, jnp.zeros(()), m_zero), micro_batch)
         ga = jnp.float32(tc.grad_accum)
         # keep the accumulation dtype: f32(acc)/f32 would silently promote
         # a bf16 accumulator to f32 (full param-sized temps)
         grads = jax.tree.map(lambda g: (g / ga).astype(g.dtype), acc)
         loss = loss_sum / ga
-        return loss, {"ce": loss - aux_sum / ga, "aux": aux_sum / ga}, grads
+        metrics = jax.tree.map(lambda m: m / ga, msum)
+        return loss, metrics, grads
 
     def step_fn(state, batch):
         loss, metrics, grads = compute_grads(state["params"], batch)

@@ -1,9 +1,38 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
 must see the single real CPU device; only launch/dryrun.py (and the
-dedicated subprocess tests) force 512/8 host devices."""
+dedicated subprocess tests) force 512/8 host devices.
+
+Determinism: the autouse fixture below re-pins the stdlib and NumPy
+global RNGs before every test, and hypothesis runs a derandomized
+profile — so kernel-vs-oracle comparisons (fused-CE grads, top-k ties,
+score kernels) reproduce bit-for-bit across runs and under single-test
+reruns, without `-p no:randomly`-style plugins.
+"""
+
+import random
 
 import numpy as np
 import pytest
+
+try:                                    # optional dep (pyproject [test])
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("repro", derandomize=True,
+                                   print_blob=True)
+    _hyp_settings.load_profile("repro")
+except ImportError:                      # property tests importorskip
+    pass
+
+
+@pytest.fixture(autouse=True)
+def fixed_seeds():
+    """Re-pin the global RNGs before EVERY test (jax PRNGKeys are already
+    explicit everywhere; this covers `random` / `np.random` users) — so a
+    test's random data is identical whether it runs in the full suite or
+    alone, and failures reproduce under `pytest path::test` reruns."""
+    random.seed(0x5eed)
+    np.random.seed(0x5eed)
+    yield
 
 
 @pytest.fixture(scope="session")

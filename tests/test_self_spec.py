@@ -1,0 +1,144 @@
+"""Self-speculative decoding from the target's own MTP heads.
+
+The load-bearing guarantee mirrors the PR-3 sidecar-spec suite: greedy
+self-spec decode is TOKEN-IDENTICAL to plain continuous decode for every
+model family that advertises MTP support — attention ('len' rollback)
+and recurrent ('scan' snapshot rollback) alike — with untrained heads
+(acceptance may be anything; output must not change)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MTPConfig, with_mtp
+from repro.models.registry import MTP_FAMILIES, get_arch, init_params
+from repro.serve import (ServeConfig, Engine, ContinuousScheduler,
+                         SpecConfig, SelfSpecEngine)
+from repro.serve.spec import build_self_spec_step
+
+# one representative arch per MTP-advertising family
+FAMILY_ARCHS = {"transformer": "qwen3-0.6b", "xlstm": "xlstm-125m",
+                "griffin": "recurrentgemma-9b"}
+
+
+def test_family_archs_cover_every_mtp_family():
+    assert set(FAMILY_ARCHS) == set(MTP_FAMILIES)
+
+
+def _greedy_pair(arch, params, k=2, max_new=6, n_req=3, batch=2):
+    sc = ServeConfig(batch_size=batch, max_len=64)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, arch.vocab_size, (n,)).astype(np.int32)
+               for n in (3, 9, 5)][:n_req]
+    base = Engine(arch, params, sc)
+    s0 = ContinuousScheduler(base, max_new_tokens=max_new)
+    rids0 = [s0.submit(p) for p in prompts]
+    ref_res = s0.run()
+    eng = SelfSpecEngine(arch, params, sc, SpecConfig(k=k))
+    s1 = ContinuousScheduler(eng, max_new_tokens=max_new)
+    rids = [s1.submit(p) for p in prompts]
+    out = s1.run()
+    for r0, r1 in zip(rids0, rids):
+        np.testing.assert_array_equal(ref_res[r0], out[r1])
+    return s1
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_greedy_token_identity_per_family(family):
+    arch = with_mtp(get_arch(FAMILY_ARCHS[family], reduced=True), 2)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    n_req = 2 if family != "transformer" else 3
+    sched = _greedy_pair(arch, params, k=2, n_req=n_req)
+    assert sched.stats()["spec"]["mode"] == "self"
+    assert sched.spec_drafted > 0
+
+
+def test_k_below_head_count_and_default_k():
+    """spec.k may use a subset of the heads; the default SpecConfig is
+    clamped to one draft per available head."""
+    arch = with_mtp(get_arch("qwen3-0.6b", reduced=True), 3)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    sched = _greedy_pair(arch, params, k=1, n_req=2)
+    assert sched.stats()["spec"]["k"] == 1
+    eng = SelfSpecEngine(arch, params, ServeConfig(batch_size=1,
+                                                   max_len=32))
+    assert eng.spec_k == 3
+
+
+def test_explicit_k_above_head_count_raises():
+    arch = with_mtp(get_arch("qwen3-0.6b", reduced=True), 2)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        SelfSpecEngine(arch, params, ServeConfig(batch_size=1, max_len=32),
+                       SpecConfig(k=3))
+
+
+def test_archs_without_heads_rejected():
+    arch = get_arch("qwen3-0.6b", reduced=True)      # mtp.n_heads == 0
+    params = init_params(arch, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        build_self_spec_step(arch, ServeConfig(), SpecConfig(k=1), None)
+    with pytest.raises(ValueError):
+        SelfSpecEngine(arch, params, ServeConfig(batch_size=1, max_len=32))
+
+
+def test_reset_slot_clears_pending_drafts():
+    arch = with_mtp(get_arch("qwen3-0.6b", reduced=True), 2)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    eng = SelfSpecEngine(arch, params,
+                         ServeConfig(batch_size=2, max_len=32))
+    eng.prefill_into_slot(0, np.array([5, 6, 7], np.int32))
+    eng.prefill_into_slot(1, np.array([9, 2], np.int32))
+    assert np.asarray(eng._draft).shape == (2, 2)
+    eng.decode_step_multi()
+    eng.reset_slot(0)
+    np.testing.assert_array_equal(np.asarray(eng._draft[0]), 0)
+    np.testing.assert_array_equal(np.asarray(eng._draft_lp[0]), 0.0)
+    # slot 1's pending drafts survive its neighbor's recycle
+    eng.prefill_into_slot(0, np.array([3, 3, 3, 3], np.int32))
+    out, counts = eng.decode_step_multi()
+    assert out.shape == (2, 3) and counts.shape == (2,)
+    assert np.all(counts >= 1)
+
+
+def test_rejection_sampling_path_runs_and_reports():
+    """temperature > 0: min(1, p_t/p_head) acceptance on carried head
+    log-probs; every emitted token lands in the valid vocabulary."""
+    arch = with_mtp(get_arch("qwen3-0.6b", reduced=True), 2)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    sc = ServeConfig(batch_size=2, max_len=64, temperature=0.8, top_k=10)
+    eng = SelfSpecEngine(arch, params, sc, SpecConfig(k=2))
+    sched = ContinuousScheduler(eng, max_new_tokens=5)
+    rng = np.random.default_rng(0)
+    rids = [sched.submit(rng.integers(1, arch.vocab_size, (4,))
+                         .astype(np.int32)) for _ in range(3)]
+    res = sched.run()
+    for rid in rids:
+        assert len(res[rid]) == 5
+        assert np.all((res[rid] >= 0) & (res[rid] < arch.vocab_size))
+    assert 0.0 <= sched.acceptance_rate <= 1.0
+
+
+def test_softcapped_arch_stays_exact():
+    """A Gemma-style capped arch threads its cap through the verify
+    sampling — greedy self-spec stays token-identical."""
+    base = get_arch("qwen3-0.6b", reduced=True)
+    arch = dataclasses.replace(
+        base, cfg=dataclasses.replace(base.cfg, logit_softcap=10.0),
+        mtp=MTPConfig(n_heads=2))
+    params = init_params(arch, jax.random.PRNGKey(0))
+    _greedy_pair(arch, params, k=2, n_req=2)
+
+
+def test_scheduler_spec_margin_applies_to_self_engine():
+    arch = with_mtp(get_arch("qwen3-0.6b", reduced=True), 3)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    eng = SelfSpecEngine(arch, params, ServeConfig(batch_size=1,
+                                                   max_len=16),
+                         SpecConfig(k=3))
+    sched = ContinuousScheduler(eng, max_new_tokens=4)
+    with pytest.raises(ValueError):
+        sched.submit(np.arange(1, 12, dtype=np.int32))  # 11+4-1+3 > 16
