@@ -94,7 +94,7 @@ def check_decode_logits_free(engine: Engine):
     also confirm the detector DOES flag a dense decode step."""
     arch, params, sc = engine.arch, engine.params, engine.sc
     from repro.serve.engine import build_serve_fns
-    _, decode = build_serve_fns(arch, sc)
+    *_, decode = build_serve_fns(arch, sc)
     cur = jnp.zeros((sc.batch_size, 1), jnp.int32)
     rng = jax.random.PRNGKey(0)
     txt = (jax.jit(decode)

@@ -16,9 +16,11 @@ Prints ``name,us_per_call,derived`` CSV.
                                              continuous, logits-free verify)
   §7 MTP           -> bench_mtp.bench_mtp (n-head fused training +
                                            self-speculative decoding)
+  §8 paged KV      -> bench_paged.bench_paged (block-pool cache vs dense
+                                               slabs, prefix reuse)
 
 Run:  PYTHONPATH=src python -m benchmarks.run \
-          [--only lat,mem,train,topk,roof,tune,serve,spec,mtp]
+          [--only lat,mem,train,topk,roof,tune,serve,spec,mtp,paged]
 """
 
 from __future__ import annotations
@@ -30,7 +32,8 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only",
-                    default="lat,mem,train,topk,roof,tune,serve,spec,mtp")
+                    default="lat,mem,train,topk,roof,tune,serve,spec,mtp,"
+                            "paged")
     args = ap.parse_args()
     parts = set(args.only.split(","))
 
@@ -68,6 +71,9 @@ def main() -> None:
     if "mtp" in parts:
         from benchmarks.bench_mtp import bench_mtp
         bench_mtp(emit)
+    if "paged" in parts:
+        from benchmarks.bench_paged import bench_paged
+        bench_paged(emit)
 
 
 if __name__ == "__main__":

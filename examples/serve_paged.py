@@ -1,0 +1,74 @@
+"""Paged KV serving: block-pool cache + shared-prefix reuse.
+
+Every request here starts with the same "system prompt".  The first
+admit prefills it cold and the prefix trie caches its full blocks; every
+later admit walks the trie, adopts the cached chain with a refcount
+`fork`, and prefills ONLY its suffix — watch the per-prefill token
+counts drop while greedy output stays token-identical to the dense-slab
+engine (DESIGN.md §8).
+
+    PYTHONPATH=src python examples/serve_paged.py [--block-size 8]
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.models.registry import get_arch, init_params
+from repro.serve import (ContinuousScheduler, Engine, PagedEngine,
+                         ServeConfig)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=5)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    arch = get_arch("qwen3-0.6b", reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    system = rng.integers(1, arch.vocab_size, (24,)).astype(np.int32)
+    prompts = [np.concatenate([system, rng.integers(
+        1, arch.vocab_size, (4,)).astype(np.int32)])
+        for _ in range(args.requests)]
+
+    # f32 cache: a prefix hit's only numeric delta vs a cold prefill is
+    # the cache's storage rounding, so a precision-preserving cache makes
+    # the identity check below exact (DESIGN.md §8.2)
+    sc = ServeConfig(batch_size=2, max_len=64, paged=True,
+                     block_size=args.block_size, paged_impl="jax",
+                     cache_dtype="float32")
+    eng = PagedEngine(arch, params, sc)
+    sched = ContinuousScheduler(eng, max_new_tokens=args.max_new)
+    t0 = time.perf_counter()
+    rids = [sched.submit(p) for p in prompts]
+    results = sched.run()
+    dt = time.perf_counter() - t0
+
+    stats = eng.paged_stats()
+    print(f"served {len(rids)} requests sharing a "
+          f"{len(system)}-token system prompt in {dt:.2f}s")
+    print(f"per-prefill forward tokens: {eng.prefill_token_log} "
+          f"(first is the cold admit)")
+    print(f"prefix hits: {stats['prefix']['hits']}, "
+          f"{stats['prefix']['hit_tokens']} cached tokens reused; "
+          f"{stats['used_blocks']}/{stats['pool_blocks']} pool blocks live")
+
+    # greedy output is token-identical to the dense-slab engine
+    slab = Engine(arch, params, ServeConfig(batch_size=2, max_len=64,
+                                            cache_dtype="float32"))
+    ref_sched = ContinuousScheduler(slab, max_new_tokens=args.max_new)
+    ref_ids = [ref_sched.submit(p) for p in prompts]
+    ref = ref_sched.run()
+    for rid, ref_rid in zip(rids, ref_ids):
+        np.testing.assert_array_equal(results[rid], ref[ref_rid])
+    print("token-identical to the dense-slab engine across every "
+          "prefix hit")
+
+
+if __name__ == "__main__":
+    main()

@@ -148,6 +148,24 @@ def serving_table(recs, mesh="pod16x16"):
     return "\n".join(lines)
 
 
+def serve_cache_table(rows):
+    """§Serving: KV-cache HBM accounting, dense slab vs paged pool.
+
+    rows: [{'mode', 'slots', 'cache_bytes'}] — bytes are whole-tree
+    cache bytes (`serve.kvpool.cache_tree_bytes`); the derived column is
+    the concurrency each byte budget buys (`benchmarks/bench_paged`).
+    """
+    lines = [
+        "| cache | concurrent slots | cache bytes | bytes/slot |",
+        "|---|---|---|---|",
+    ]
+    for r in rows:
+        per = r["cache_bytes"] // max(r["slots"], 1)
+        lines.append(f"| {r['mode']} | {r['slots']} | "
+                     f"{r['cache_bytes']} | {per} |")
+    return "\n".join(lines)
+
+
 def main():
     recs = load()
     print("## Single-pod dry-run (16x16)\n")

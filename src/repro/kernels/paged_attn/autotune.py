@@ -1,0 +1,108 @@
+"""Empirical ``pages_per_step`` tuning for the paged-attention kernel.
+
+Reuses the shared BlockPlan trial loop (`kernels/plan_tuner`, DESIGN.md
+§3.2) and the persistent JSON tuning cache: a `BlockPlan`'s ``block_v``
+is interpreted as *KV positions fetched per sequential grid step*, so
+``pages_per_step = max(block_v // block_size, 1)`` — the paged analogue
+of the vocab-tile sweep (a bigger tile amortizes the per-step overhead
+across more DMA'd pages; too big busts VMEM).  Keys are namespaced
+``pattn<block_size>`` with ``n_rows = B * Tq`` (query rows),
+``vocab = nb * block_size`` (the scanned chain axis), ``d = nkv * hd``.
+
+Candidates mapping to the same ``pages_per_step`` are deduplicated
+before timing, so the trial budget is spent on distinct kernels.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.windows import BlockPlan
+from repro.kernels.plan_tuner import (TuneResult, autotune_cached,
+                                      run_plan_trials)
+from repro.tuning import get_cache, plan_key
+
+
+def _op(block_size: int) -> str:
+    return f"pattn{block_size}"
+
+
+def plan_pages_per_step(plan: BlockPlan, block_size: int, nb: int) -> int:
+    """BlockPlan -> pages fetched per grid step (>= 1, <= table width)."""
+    return max(1, min(plan.block_v // block_size, nb))
+
+
+def lookup_paged_plan(b: int, tq: int, nkv: int, hd: int, nb: int,
+                      block_size: int, dtype) -> int:
+    """Zero-cost resolution of ``pages_per_step`` for the hot path.
+
+    Cache hit -> the tuned winner; miss -> 1 (the conservative default:
+    one pool block per sequential step — NOT the `choose_blocks`
+    heuristic, whose vocab-tile model says nothing about DMA chasing)."""
+    key = plan_key(b * tq, nb * block_size, nkv * hd,
+                   jnp.dtype(dtype).name, jax.default_backend(),
+                   op=_op(block_size))
+    hit = get_cache().get(key)
+    if hit is None:
+        return 1
+    return plan_pages_per_step(hit, block_size, nb)
+
+
+def autotune_paged_plan(
+    b: int, tq: int, nq: int, nkv: int, hd: int, nb: int,
+    block_size: int, dtype, *,
+    softcap: Optional[float] = None,
+    trial_budget: int = 6,
+    trial_iters: int = 2,
+    refresh: bool = False,
+) -> int:
+    """Measure candidate ``pages_per_step`` values on synthetic data of
+    the exact decode shape; memoize the winning plan.  Returns the
+    resolved ``pages_per_step``."""
+    from repro.kernels.paged_attn.kernel import pallas_paged_attention
+
+    dtype = jnp.dtype(dtype)
+    n_rows, vocab, d = b * tq, nb * block_size, nkv * hd
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((b, tq, nq, hd)), dtype)
+    n_pool = b * nb + 1
+    kp = jnp.asarray(rng.standard_normal(
+        (n_pool, block_size, nkv, hd)), dtype)
+    vp = jnp.asarray(rng.standard_normal(
+        (n_pool, block_size, nkv, hd)), dtype)
+    table = jnp.asarray(
+        1 + np.arange(b * nb).reshape(b, nb) % (n_pool - 1), jnp.int32)
+    lens = jnp.full((b,), vocab, jnp.int32)
+
+    seen = {}
+
+    def measure(plan: BlockPlan) -> float:
+        ppb = plan_pages_per_step(plan, block_size, nb)
+        if ppb in seen:
+            return seen[ppb]
+        fn = jax.jit(lambda q_, kp_, vp_: pallas_paged_attention(
+            q_, kp_, vp_, table, lens, softcap=softcap,
+            pages_per_step=ppb))
+        fn(q, kp, vp).block_until_ready()              # compile
+        best = float("inf")
+        for _ in range(max(trial_iters, 1)):
+            t0 = time.perf_counter()
+            fn(q, kp, vp).block_until_ready()
+            best = min(best, (time.perf_counter() - t0) * 1e6)
+        seen[ppb] = best
+        return best
+
+    def run() -> TuneResult:
+        return run_plan_trials(measure, n_rows, vocab, d, dtype,
+                               trial_budget=trial_budget,
+                               tag=f"{_op(block_size)}: ")
+
+    plan = autotune_cached(_op(block_size), run, n_rows, vocab, d, dtype,
+                           trial_budget=trial_budget, refresh=refresh)
+    return plan_pages_per_step(plan, block_size, nb)

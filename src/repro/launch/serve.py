@@ -29,7 +29,8 @@ import numpy as np
 from repro.configs.base import with_mtp
 from repro.models.registry import get_arch, init_params
 from repro.serve import (ServeConfig, Engine, ContinuousScheduler,
-                         SpecConfig, SpecEngine, SelfSpecEngine)
+                         SpecConfig, SpecEngine, SelfSpecEngine,
+                         PagedEngine, PagedSelfSpecEngine)
 
 
 def main(argv=None):
@@ -61,6 +62,18 @@ def main(argv=None):
                          "(0 with --spec-self: use --spec-k heads)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="drafted tokens per speculative step")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged block-pool KV cache with shared-prefix "
+                         "reuse (serve/paged.PagedEngine, DESIGN.md §8)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged: tokens per KV block")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="paged: total pool blocks (0: dense-slab parity)")
+    ap.add_argument("--paged-impl", default="pallas",
+                    choices=("pallas", "jax"),
+                    help="paged decode: Pallas kernel or gather oracle")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="paged: disable the shared-prefix trie")
     ap.add_argument("--stats-json", nargs="?", const="-", default=None,
                     metavar="PATH",
                     help="dump the scheduler stats report as JSON "
@@ -70,6 +83,9 @@ def main(argv=None):
 
     if args.spec_self and args.spec_draft:
         ap.error("--spec-self and --spec-draft are mutually exclusive")
+    if args.paged and args.spec_draft:
+        ap.error("--paged supports plain and --spec-self decoding; the "
+                 "sidecar draft engine keeps its dense slabs")
     arch = get_arch(args.arch, reduced=args.reduced)
     if args.mtp_heads or args.spec_self:
         arch = with_mtp(arch, args.mtp_heads or args.spec_k)
@@ -84,12 +100,18 @@ def main(argv=None):
     sc = ServeConfig(batch_size=args.batch, max_len=args.max_len,
                      temperature=args.temperature, top_k=args.top_k,
                      top_p=args.top_p, sampler_impl=args.sampler_impl,
-                     enc_len=enc_len, autotune=args.autotune)
+                     enc_len=enc_len, autotune=args.autotune,
+                     paged=args.paged, block_size=args.block_size,
+                     pool_blocks=args.pool_blocks,
+                     paged_impl=args.paged_impl,
+                     prefix_cache=not args.no_prefix_cache)
     if args.spec_self:
-        eng = SelfSpecEngine(arch, params, sc,
-                             SpecConfig(k=min(args.spec_k,
-                                              arch.mtp.n_heads)))
+        cls = PagedSelfSpecEngine if args.paged else SelfSpecEngine
+        eng = cls(arch, params, sc,
+                  SpecConfig(k=min(args.spec_k, arch.mtp.n_heads)))
         mode = f"spec(self-mtp, heads={arch.mtp.n_heads}, k={eng.spec_k})"
+        if args.paged:
+            mode = "paged+" + mode
     elif args.spec_draft:
         if args.spec_draft == "self":
             draft_arch, draft_params = arch, params
@@ -100,6 +122,9 @@ def main(argv=None):
         eng = SpecEngine(arch, params, sc, draft_arch, draft_params,
                          SpecConfig(k=args.spec_k))
         mode = f"spec(draft={args.spec_draft}, k={args.spec_k})"
+    elif args.paged:
+        eng = PagedEngine(arch, params, sc)
+        mode = f"paged(block={args.block_size}, impl={args.paged_impl})"
     else:
         eng = Engine(arch, params, sc)
         mode = "continuous"
@@ -121,6 +146,19 @@ def main(argv=None):
           f"{sched.tokens_per_step:.2f} tok/slot-step"
           + (f", acceptance {sched.acceptance_rate:.2f}"
              if args.spec_draft or args.spec_self else "") + ")")
+    if args.paged:
+        ps = eng.paged_stats()
+        if ps["enabled"]:
+            pre = ps.get("prefix", {})
+            print(f"[serve] paged: {ps['used_blocks']}/"
+                  f"{ps['pool_blocks']} blocks live "
+                  f"({ps['live_cache_bytes']} B), "
+                  f"{ps['prefill_tokens']} prefill tokens, "
+                  f"prefix hits {pre.get('hits', 0)} "
+                  f"({pre.get('hit_tokens', 0)} tokens reused)")
+        else:
+            print(f"[serve] paged: family {arch.family!r} has no "
+                  "pageable caches (dense-slab behavior)")
     if args.stats_json is not None:
         report = json.dumps(sched.stats(), indent=1, sort_keys=True)
         if args.stats_json == "-":

@@ -44,6 +44,10 @@ class AttnConfig:
     chunk_q: int = 512
     chunk_k: int = 1024
     n_layers_scale: int = 1
+    # paged-KV decode implementation: 'jax' (gather + decode_attention,
+    # the oracle) or 'pallas' (kernels/paged_attn, never materializes
+    # the gathered cache).  Only consulted when the cache dict is paged.
+    paged_impl: str = "jax"
 
 
 def init_attention(key, cfg: AttnConfig, dtype=jnp.float32):
@@ -357,6 +361,51 @@ def decode_attention(
     return out.reshape(b, tq, nq, hd).astype(q.dtype)
 
 
+def extend_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+    cache_len: jax.Array, cfg: AttnConfig,
+) -> jax.Array:
+    """Suffix-prefill attention: new queries over [cached prefix ‖ fresh].
+
+    Same signature/masking as `decode_attention`, but the arithmetic
+    replicates ONE TILE of the blockwise prefill recurrence —
+    ``p = exp(s - m)``, ``acc = p @ v`` (p cast to the value dtype),
+    ``out = acc / max(a, 1e-30)`` — in exactly that order.  Per-row
+    reductions are shape-invariant, so a prefix-cache hit's suffix rows
+    come out BIT-IDENTICAL to the rows a cold single-tile blockwise
+    prefill of the full prompt would have produced: shared-prefix reuse
+    changes where the FLOPs come from, not a single output bit.  (For
+    prompts longer than one blockwise tile — `chunk_k` — the cold path
+    becomes a multi-tile online softmax and equality decays to
+    numerical; serving prompts are capped at `max_len`, well under it.)
+
+    `decode_attention` keeps the softmax-then-matmul order because the
+    speculative VERIFY forward must stay bit-identical to the slab
+    engine's verify, which uses it.
+    """
+    b, tq, nq, hd = q.shape
+    s_len = k_cache.shape[1]
+    nkv = k_cache.shape[2]
+    g = nq // nkv
+    q5 = q.reshape(b, tq, nkv, g, hd)
+    s = _tile_scores(q5, k_cache, cfg)                   # (B,nkv,g,Tq,S)
+    kpos = jnp.arange(s_len)
+    qpos = cache_len[:, None] - tq + jnp.arange(tq)[None, :]   # (B, Tq)
+    mask = kpos[None, None, :] <= qpos[:, :, None]       # (B, Tq, S)
+    if cfg.window is not None:
+        mask = mask & (kpos[None, None, :] > qpos[:, :, None] - cfg.window)
+    s = jnp.where(mask[:, None, None, :, :], s, _NEG_INF)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(jnp.isneginf(m), 0.0, m)
+    p = jnp.exp(s - m_safe[..., None])
+    a = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bngqk,bknh->bngqh", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = acc / jnp.maximum(a, 1e-30)[..., None]
+    out = jnp.transpose(out, (0, 3, 1, 2, 4))
+    return out.reshape(b, tq, nq, hd).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # full layer: project -> attend -> output, with cache plumbing
 # ---------------------------------------------------------------------------
@@ -368,17 +417,27 @@ def attention_layer(
     cache: Optional[dict] = None,
     shard=None,
     decode: bool = False,
+    prefill_ext: bool = False,
+    valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[dict]]:
     """Self-attention layer.
 
-    cache: None for training; {'k','v','len'} for serving.  When x has
-    T > 1 and cache is given, this is a prefill (cache is filled); when
-    T == 1 it is a decode step (append + attend).  ``decode=True``
+    cache: None for training; {'k','v','len'} (dense slab), a ring
+    buffer ({'pos'}), an int8 slab ({'k_scale'}) or a paged block-pool
+    tree ({'kp','vp','table','len'}, DESIGN.md §8) for serving.  When x
+    has T > 1 and cache is given, this is a prefill (cache is filled);
+    when T == 1 it is a decode step (append + attend).  ``decode=True``
     (static) forces decode semantics for T > 1 too: the new tokens are
     appended at each row's own cache position and attend over the FULL
     cache with per-row absolute-position causal masking — the
-    speculative-verification path, where slots of a batch sit at
-    different lengths and the cache is not empty.
+    speculative-verification path.  ``prefill_ext=True`` (static, with
+    ``decode=True``) marks the extension as a paged SUFFIX PREFILL after
+    a prefix-cache hit: the math switches to `extend_attention`, whose
+    per-row arithmetic is bit-identical to the cold blockwise prefill —
+    reusing a cached prefix must not change one output bit.
+    ``valid`` (B, T) marks real (non-bucket-pad) positions of a padded
+    prefill: slab/paged writes are position-addressed and self-heal, but
+    ring-buffer writes must tag pad entries dead (see `_ring_update`).
     Returns (out, new_cache).
     """
     b, t, _ = x.shape
@@ -396,8 +455,40 @@ def attention_layer(
     new_cache = None
     if cache is None:
         out = blockwise_attention(q, k, v, cfg)
+    elif "table" in cache:                                # paged block-pool
+        kp = _paged_update(cache["kp"], cache["table"], k, cache["len"])
+        vp = _paged_update(cache["vp"], cache["table"], v, cache["len"])
+        new_len = cache["len"] + t
+        new_cache = {"kp": kp, "vp": vp, "table": cache["table"],
+                     "len": new_len}
+        if is_decode:
+            if cfg.window is not None:
+                raise NotImplementedError(
+                    "paged decode has no local-window path (windowed "
+                    "caches are ring buffers, already O(window))")
+            if prefill_ext:
+                out = extend_attention(q, gather_paged_kv(kp, cache["table"]),
+                                       gather_paged_kv(vp, cache["table"]),
+                                       new_len, cfg)
+            elif cfg.paged_impl == "pallas":
+                from repro.kernels.paged_attn import (lookup_paged_plan,
+                                                      pallas_paged_attention)
+                ppb = lookup_paged_plan(
+                    b, t, kp.shape[2], kp.shape[3], cache["table"].shape[1],
+                    kp.shape[1], q.dtype)
+                out = pallas_paged_attention(
+                    q, kp, vp, cache["table"], new_len,
+                    softcap=cfg.attn_softcap, pages_per_step=ppb)
+            else:
+                out = decode_attention(q, gather_paged_kv(kp, cache["table"]),
+                                       gather_paged_kv(vp, cache["table"]),
+                                       new_len, cfg)
+        else:
+            # cold prefill: the chain is empty, attend within the fresh
+            # segment (same as the slab prefill path)
+            out = blockwise_attention(q, k, v, cfg)
     elif "pos" in cache:                                  # ring-buffer local
-        new_cache = _ring_update(cache, k, v)
+        new_cache = _ring_update(cache, k, v, valid=valid)
         if is_decode:
             out = _ring_decode(q, new_cache, cfg)
         else:
@@ -458,6 +549,38 @@ def _update_cache(cache_arr, new_vals, cur_len):
                    0, cache_arr.shape[1] - 1)            # (B, t)
     return cache_arr.at[jnp.arange(b)[:, None], idx].set(
         new_vals.astype(cache_arr.dtype))
+
+
+def _paged_update(pool, table, new_vals, cur_len):
+    """Scatter new_vals (B, t, nkv, hd) into the shared block pool.
+
+    Position ``p`` of row ``b`` lives in pool block ``table[b, p // bs]``
+    at slot ``p % bs``; rows write disjoint blocks by construction (the
+    host allocator hands each chain its own blocks), so the scatter is
+    conflict-free.  Rows whose chain is exhausted (ghost slots running
+    past capacity, or free slots whose table is null-filled) clamp into
+    the reserved null block 0 — never read (masked by ``len``).
+    """
+    b, t = new_vals.shape[:2]
+    n, bs = pool.shape[:2]
+    pos = cur_len[:, None] + jnp.arange(t)[None, :]          # (B, t)
+    col = jnp.clip(pos // bs, 0, table.shape[1] - 1)
+    blk = jnp.take_along_axis(table, col, axis=1)            # (B, t)
+    slot = blk * bs + pos % bs                               # flat pool slot
+    flat = pool.reshape((n * bs,) + pool.shape[2:])
+    flat = flat.at[slot].set(new_vals.astype(pool.dtype))
+    return flat.reshape(pool.shape)
+
+
+def gather_paged_kv(pool, table):
+    """(N, bs, nkv, hd) x (B, nb) -> (B, nb*bs, nkv, hd): materialize a
+    row-major view of each row's block chain (entry ``p`` is absolute
+    position ``p``).  The pure-jnp oracle path of the paged decode —
+    `kernels/paged_attn` computes the same attention without it."""
+    b, nb = table.shape
+    bs = pool.shape[1]
+    g = pool[table]                                  # (B, nb, bs, nkv, hd)
+    return g.reshape(b, nb * bs, *pool.shape[2:])
 
 
 def init_cache(batch, max_len, cfg: AttnConfig, dtype=jnp.bfloat16,
@@ -563,16 +686,27 @@ def init_local_cache(batch, window, cfg: AttnConfig, dtype=jnp.bfloat16):
     }
 
 
-def _ring_update(cache, k, v):
-    """Append T new kv entries at slots (len + i) % window."""
+def _ring_update(cache, k, v, valid=None):
+    """Append T new kv entries at slots (len + i) % window.
+
+    ``valid`` (B, T) marks the real positions of a bucket-padded prefill:
+    pad entries still occupy their ring slot (the slot index must follow
+    the absolute position so later decode writes land on them) but their
+    stored ``pos`` is -1 — `_ring_decode` masks them exactly, so a
+    padded prefill leaves the attention-visible state identical to an
+    exact-length one.  Callers must not let pad positions WRAP the ring
+    (engine-side bucket cap: bucket <= window), since a wrapped write
+    overwrites an in-window real entry that cannot be restored."""
     b, t = k.shape[:2]
     window = cache["k"].shape[1]
     pos_new = cache["len"][:, None] + jnp.arange(t)[None, :]  # absolute
     slots = pos_new % window                                   # (B, T)
     bidx = jnp.arange(b)[:, None]
+    store_pos = pos_new if valid is None else \
+        jnp.where(valid, pos_new, -1)
     k_c = cache["k"].at[bidx, slots].set(k.astype(cache["k"].dtype))
     v_c = cache["v"].at[bidx, slots].set(v.astype(cache["v"].dtype))
-    p_c = cache["pos"].at[bidx, slots].set(pos_new)
+    p_c = cache["pos"].at[bidx, slots].set(store_pos)
     return {"k": k_c, "v": v_c, "pos": p_c, "len": cache["len"] + t}
 
 

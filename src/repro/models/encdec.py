@@ -41,6 +41,7 @@ class EncDecConfig:
     compute_dtype: str = "float32"
     chunk_q: int = 512
     chunk_k: int = 1024
+    paged_impl: str = "jax"    # paged-KV decode path (serving only)
 
     @property
     def resolved_head_dim(self) -> int:
@@ -52,7 +53,8 @@ class EncDecConfig:
             num_kv_heads=self.num_kv_heads, head_dim=self.resolved_head_dim,
             rope_theta=self.rope_theta, causal=causal,
             chunk_q=self.chunk_q, chunk_k=self.chunk_k,
-            n_layers_scale=self.n_enc_layers + self.n_dec_layers)
+            n_layers_scale=self.n_enc_layers + self.n_dec_layers,
+            paged_impl=self.paged_impl)
 
 
 # ---------------------------------------------------------------------------
@@ -131,12 +133,12 @@ def init_dec_block(key, cfg: EncDecConfig, dtype):
 
 
 def apply_dec_block(p, x, kv, cfg: EncDecConfig, cache=None, shard=None,
-                    decode=False):
+                    decode=False, prefill_ext=False):
     """kv: cross (k, v).  cache: self-attn KV cache (serving only)."""
     h, new_cache = A.attention_layer(
         p["attn"], L.rmsnorm(p["ln_self"], x, cfg.norm_eps),
         cfg.attn_config(causal=True), cache=cache, shard=shard,
-        decode=decode)
+        decode=decode, prefill_ext=prefill_ext)
     x = x + h
     x = x + cross_attention(
         p["cross_attn"], L.rmsnorm(p["ln_cross"], x, cfg.norm_eps), kv, cfg)
@@ -194,7 +196,8 @@ def encode(params, frame_embeds, cfg: EncDecConfig, shard=None):
 
 
 def decode_hidden(params, tokens, enc_out, cfg: EncDecConfig, *,
-                  caches=None, cross_kvs=None, shard=None, decode=False):
+                  caches=None, cross_kvs=None, shard=None, decode=False,
+                  prefill_ext=False):
     """Decoder forward.  For serving pass precomputed `cross_kvs` (stacked)
     and self-attn `caches`; for training pass `enc_out` only.
     ``decode=True``: cached T > 1 extends per-row (spec verification)."""
@@ -226,7 +229,8 @@ def decode_hidden(params, tokens, enc_out, cfg: EncDecConfig, *,
         def body_serve(x, ps):
             p, kv, cache = ps
             x, new_cache = apply_dec_block(p, x, kv, cfg, cache=cache,
-                                           shard=shard, decode=decode)
+                                           shard=shard, decode=decode,
+                                           prefill_ext=prefill_ext)
             return x, new_cache
 
         if cfg.scan_layers:
@@ -242,7 +246,8 @@ def decode_hidden(params, tokens, enc_out, cfg: EncDecConfig, *,
 
 
 def forward(params, tokens, cfg: EncDecConfig, *, frontend_embeds=None,
-            caches=None, shard=None, decode: bool = False):
+            caches=None, shard=None, decode: bool = False,
+            prefill_ext: bool = False):
     """Training/prefill entry matching the LM-family signature.
 
     frontend_embeds: (B, T_enc, d) frame embeddings (the stub frontend).
@@ -252,7 +257,8 @@ def forward(params, tokens, cfg: EncDecConfig, *, frontend_embeds=None,
         # serving: encoder output already folded into caches['cross']
         x, self_caches = decode_hidden(
             params, tokens, None, cfg, caches=caches["self"],
-            cross_kvs=caches["cross"], shard=shard, decode=decode)
+            cross_kvs=caches["cross"], shard=shard, decode=decode,
+            prefill_ext=prefill_ext)
         return x, jnp.zeros((), jnp.float32), {"self": self_caches,
                                                "cross": caches["cross"]}
     enc_out = encode(params, frontend_embeds, cfg, shard=shard)

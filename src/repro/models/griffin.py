@@ -108,8 +108,13 @@ def _gate_matmul(x32, w):
     return out.reshape(b, t, d)
 
 
-def rglru(params, x, h0=None):
-    """x: (B, T, D) -> (y (B, T, D), h_T (B, D))."""
+def rglru(params, x, h0=None, valid=None):
+    """x: (B, T, D) -> (y (B, T, D), h_T (B, D)).
+
+    ``valid`` (B, T) masks bucket-pad tail positions of a padded prefill:
+    an invalid step contributes ``a = 1, u = 0`` — an EXACT identity in
+    the associative combine — so both the outputs at valid positions and
+    the carried ``h_T`` are bit-identical to an unpadded run."""
     b, t, d = x.shape
     x32 = x.astype(jnp.float32)
     r = jax.nn.sigmoid(_gate_matmul(x32, params["wa"])
@@ -117,10 +122,14 @@ def rglru(params, x, h0=None):
     i = jax.nn.sigmoid(_gate_matmul(x32, params["wx"])
                        + params["bx"].astype(jnp.float32))
     log_a = -_C * jax.nn.softplus(params["lam"]) * r        # (B,T,D) <= 0
+    if valid is not None:
+        log_a = jnp.where(valid[..., None], log_a, 0.0)     # a = 1
     a = jnp.exp(log_a)
     # sqrt(1 - a^2) computed stably via expm1
     gate = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
     u = gate * (i * x32)
+    if valid is not None:
+        u = jnp.where(valid[..., None], u, 0.0)
     if h0 is not None:
         # fold the carried state into the first step: u_0 += a_0 * h0
         u = u.at[:, 0].add(a[:, 0] * h0)
@@ -161,7 +170,8 @@ def init_recurrent_block(key, cfg: GriffinConfig, dtype=jnp.float32):
     }
 
 
-def apply_recurrent_block(p, x, cfg: GriffinConfig, state=None, shard=None):
+def apply_recurrent_block(p, x, cfg: GriffinConfig, state=None, shard=None,
+                          true_len=None):
     xin = L.rmsnorm(p["ln"], x, cfg.norm_eps)
     u = jnp.einsum("btd,de->bte", xin, p["w_rnn"])
     gate = jnp.einsum("btd,de->bte", xin, p["w_gate"])
@@ -170,8 +180,13 @@ def apply_recurrent_block(p, x, cfg: GriffinConfig, state=None, shard=None):
         gate = shard(gate, "batch", "seq", "rnn")
     conv_state = state["conv"] if state is not None else None
     uc, conv_state = L.causal_conv(p["conv"], u, conv_state)
+    valid = None
+    if true_len is not None and state is not None:
+        # bucketed prefill: pad-tail steps must not touch carried state
+        valid = jnp.arange(x.shape[1])[None, :] < true_len
+        conv_state = L.conv_state_at(state["conv"], u, true_len)
     h_prev = state["h"] if state is not None else None
-    y, h_last = rglru(p["rglru"], uc, h0=h_prev)
+    y, h_last = rglru(p["rglru"], uc, h0=h_prev, valid=valid)
     y = y * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
     out = jnp.einsum("bte,ed->btd", y, p["w_out"])
     new_state = ({"conv": conv_state, "h": h_last}
@@ -195,16 +210,21 @@ def init_temporal_block(key, kind: str, cfg: GriffinConfig, dtype):
 
 
 def apply_temporal_block(p, x, kind: str, cfg: GriffinConfig, state=None,
-                         shard=None, decode=False):
+                         shard=None, decode=False, true_len=None):
     if kind == "attn":
+        valid = None
+        if true_len is not None and state is not None:
+            valid = jnp.arange(x.shape[1])[None, :] < true_len
         h, new_state = A.attention_layer(
             p["temporal"]["attn"],
             L.rmsnorm(p["temporal"]["ln"], x, cfg.norm_eps),
-            cfg.attn_config(), cache=state, shard=shard, decode=decode)
+            cfg.attn_config(), cache=state, shard=shard, decode=decode,
+            valid=valid)
         x = x + h
     else:
         x, new_state = apply_recurrent_block(p["temporal"], x, cfg,
-                                             state=state, shard=shard)
+                                             state=state, shard=shard,
+                                             true_len=true_len)
     y = L.mlp(p["mlp"], L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps))
     if shard is not None:
         y = shard(y, "batch", "seq", "embed")
@@ -257,8 +277,13 @@ def init_params(key, cfg: GriffinConfig) -> Dict[str, Any]:
 
 
 def forward(params, tokens, cfg: GriffinConfig, *, states=None, shard=None,
-            frontend_embeds=None, decode: bool = False):
+            frontend_embeds=None, decode: bool = False, true_len=None):
+    """``true_len`` (traced scalar, serving only): tokens beyond it are
+    bucket pads — every stateful primitive masks them so the carried
+    state after this forward equals an exact-length prefill's."""
     del frontend_embeds
+    if states is None:
+        true_len = None                      # training: no carried state
     x = L.embed_lookup(params["embed"]["table"], tokens, shard=shard).astype(jnp.dtype(cfg.compute_dtype))
     if shard is not None:
         x = shard(x, "batch", "seq", "embed")
@@ -270,7 +295,7 @@ def forward(params, tokens, cfg: GriffinConfig, *, states=None, shard=None,
             s_i = st[f"b{i}"] if st is not None else None
             x, ns = apply_temporal_block(p[f"b{i}"], x, kind, cfg,
                                          state=s_i, shard=shard,
-                                         decode=decode)
+                                         decode=decode, true_len=true_len)
             if st is not None:
                 new_st[f"b{i}"] = ns
         return x, new_st
@@ -309,7 +334,8 @@ def forward(params, tokens, cfg: GriffinConfig, *, states=None, shard=None,
     for i, kind in enumerate(rem):
         st = states[f"rem{i}"] if states is not None else None
         x, ns = apply_temporal_block(params[f"rem{i}"], x, kind, cfg,
-                                     state=st, shard=shard, decode=decode)
+                                     state=st, shard=shard, decode=decode,
+                                     true_len=true_len)
         if states is not None:
             new_states[f"rem{i}"] = ns
 

@@ -200,3 +200,18 @@ def causal_conv(params, x, state: Optional[jax.Array] = None):
     y = y + params["b"]
     new_state = xx[:, -(width - 1):] if width > 1 else state
     return y.astype(x.dtype), new_state
+
+
+def conv_state_at(prev_state, x, true_len):
+    """Conv carry as if only the first `true_len` steps of x were consumed.
+
+    The bucketed-prefill corrector for recurrent families (DESIGN.md
+    §5.1): `causal_conv` over a tail-padded segment returns the last
+    (width-1) inputs INCLUDING the pads; the true carry is the (width-1)
+    inputs ending at position ``true_len - 1`` of ``[prev_state; x]``
+    (which falls back into `prev_state` when ``true_len < width - 1``).
+    ``true_len`` may be traced.
+    """
+    xx = jnp.concatenate([prev_state, x.astype(prev_state.dtype)], axis=1)
+    w1 = prev_state.shape[1]
+    return jax.lax.dynamic_slice_in_dim(xx, true_len, w1, axis=1)

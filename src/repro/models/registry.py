@@ -89,14 +89,22 @@ def apply_mtp_heads(arch: Arch, params, h: jax.Array) -> jax.Array:
 def forward_hidden(
     arch: Arch, params, batch: Dict[str, Any], *,
     caches=None, shard=None, decode: bool = False,
-    return_heads: bool = False,
+    prefill_ext: bool = False,
+    return_heads: bool = False, true_len=None,
 ):
     """(hidden aligned with batch['targets'], aux_loss, new_caches).
 
     ``decode=True`` (static) marks a cached T > 1 forward as a cache
     EXTENSION (per-row append + full-cache causal attention — the
-    speculative-verification path) rather than a fresh prefill.
-    Recurrent families are sequential either way and ignore it.
+    speculative-verification path and the paged engine's suffix-only
+    prefill) rather than a fresh prefill.  Recurrent families are
+    sequential either way and ignore it.
+
+    ``true_len`` (traced scalar, serving only): positions at or beyond
+    it are bucket pads.  Attention families need no masking (pad cache
+    entries are position-addressed: invisible after the `len` shift,
+    overwritten by later appends), but recurrent state consumes every
+    step — griffin/xlstm forwards gate the pad steps into exact no-ops.
 
     ``return_heads=True`` (static; needs `arch.mtp.n_heads > 0`) returns
     the 4-tuple (hidden, head_hidden (B, T, n, d), aux_loss, new_caches):
@@ -109,13 +117,15 @@ def forward_hidden(
     fe = batch.get("frontend_embeds")
     if arch.family == "transformer":
         h, aux, c = mod.forward(params, batch["tokens"], arch.cfg,
-                                frontend_embeds=fe, caches=caches, **kwargs)
+                                frontend_embeds=fe, caches=caches,
+                                prefill_ext=prefill_ext, **kwargs)
     elif arch.family == "encdec":
         h, aux, c = mod.forward(params, batch["tokens"], arch.cfg,
-                                frontend_embeds=fe, caches=caches, **kwargs)
+                                frontend_embeds=fe, caches=caches,
+                                prefill_ext=prefill_ext, **kwargs)
     else:  # xlstm / griffin
         h, aux, c = mod.forward(params, batch["tokens"], arch.cfg,
-                                states=caches, **kwargs)
+                                states=caches, true_len=true_len, **kwargs)
     if return_heads:
         return h, apply_mtp_heads(arch, params, h), aux, c
     return h, aux, c
@@ -150,33 +160,42 @@ def init_serve_caches(arch: Arch, params, batch_size: int, max_len: int,
 
 
 def _slot_cache_specs(arch: Arch, params, batch_size: int, max_len: int,
-                      enc_len: Optional[int], dtype, quantize: bool):
+                      enc_len: Optional[int], dtype, quantize: bool,
+                      paged=None):
     """ShapeDtypeStruct tree of the serve cache at `batch_size` — the one
     abstract cache builder behind `empty_serve_caches`/`cache_batch_axes`
     (so the discovered batch axes can never diverge from the real tree).
 
-    For enc-dec the encoder input is a spec, so no encoder runs."""
+    For enc-dec the encoder input is a spec, so no encoder runs.
+    `paged` (a `serve.kvpool.PagedConfig`) rewrites pageable slab KV
+    subtrees into their block-pool form (DESIGN.md §8)."""
     from repro.configs.base import ENCDEC_SERVE_ENC_LEN
 
     if arch.family == "encdec":
         fe = jax.ShapeDtypeStruct(
             (batch_size, enc_len or ENCDEC_SERVE_ENC_LEN,
              arch.cfg.d_model), jnp.dtype(arch.cfg.compute_dtype))
-        return jax.eval_shape(
+        specs = jax.eval_shape(
             lambda p, f: init_serve_caches(arch, p, batch_size, max_len,
                                            frontend_embeds=f, dtype=dtype),
             params, fe)
-    return jax.eval_shape(
-        lambda p: init_serve_caches(arch, p, batch_size, max_len,
-                                    dtype=dtype,
-                                    quantize=quantize
-                                    and arch.family == "transformer"),
-        params)
+    else:
+        specs = jax.eval_shape(
+            lambda p: init_serve_caches(arch, p, batch_size, max_len,
+                                        dtype=dtype,
+                                        quantize=quantize
+                                        and arch.family == "transformer"),
+            params)
+    if paged is not None:
+        from repro.serve.kvpool import paged_tree
+        specs = jax.eval_shape(lambda t: paged_tree(t, paged), specs)
+    return specs
 
 
 def empty_serve_caches(arch: Arch, params, batch_size: int, max_len: int,
                        *, enc_len: Optional[int] = None,
-                       dtype=jnp.bfloat16, quantize: bool = False):
+                       dtype=jnp.bfloat16, quantize: bool = False,
+                       paged=None):
     """Batched cache container whose slots await per-slot prefill inserts.
 
     For every family but enc-dec this IS `init_serve_caches` (cheap, and
@@ -184,7 +203,26 @@ def empty_serve_caches(arch: Arch, params, batch_size: int, max_len: int,
     enc-dec, `init_serve_caches` would run the encoder — pointless for
     empty slots — so the container is zeros materialized from its specs;
     per-slot prefill runs the encoder and overwrites the slot slice.
+
+    `paged` (a `serve.kvpool.PagedConfig`): pageable slab KV subtrees
+    become block pools + per-slot tables (zero tables = every slot at
+    the reserved null block).  For families that actually page
+    (transformer / enc-dec — whose empty containers are all-zeros) the
+    tree is materialized from SPECS: going through a concrete slab
+    donor would transiently allocate the full dense-slab HBM the pool
+    exists to replace.  Families with nothing pageable keep the plain
+    container (preserving non-zero init like the ring ``pos = -1``).
     """
+    if paged is not None:
+        if arch.family in ("transformer", "encdec"):
+            specs = _slot_cache_specs(arch, params, batch_size, max_len,
+                                      enc_len, dtype, quantize,
+                                      paged=paged)
+            return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                specs)
+        return empty_serve_caches(arch, params, batch_size, max_len,
+                                  enc_len=enc_len, dtype=dtype,
+                                  quantize=quantize)
     if arch.family != "encdec":
         return init_serve_caches(arch, params, batch_size, max_len,
                                  dtype=dtype,
@@ -197,16 +235,20 @@ def empty_serve_caches(arch: Arch, params, batch_size: int, max_len: int,
 
 def cache_batch_axes(arch: Arch, params, max_len: int,
                      *, enc_len: Optional[int] = None,
-                     dtype=jnp.bfloat16, quantize: bool = False):
+                     dtype=jnp.bfloat16, quantize: bool = False,
+                     paged=None):
     """Per-leaf batch-axis pytree for the serve cache (-1: no batch axis).
 
     Found structurally: build the cache specs at batch 1 and 2 and take
     the (unique) axis whose size differs.  Returns a pytree of ints with
     the cache's exact structure, usable as a `jax.tree.map` companion.
+    Paged pool leaves (``kp``/``vp``) are batch-size invariant — they are
+    SHARED across slots — so the discovery marks them -1 and the per-slot
+    take/insert surgery leaves them alone by construction.
     """
     def build(b):
         return _slot_cache_specs(arch, params, b, max_len, enc_len,
-                                 dtype, quantize)
+                                 dtype, quantize, paged=paged)
 
     def axis(a, b):
         diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
@@ -232,6 +274,24 @@ def insert_slot_caches(caches, slot_caches, slot, axes):
     """
     return jax.tree.map(
         lambda big, small, ax: big if ax < 0 else
+        jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), slot, axis=ax),
+        caches, slot_caches, axes)
+
+
+def merge_slot_caches(caches, slot_caches, slot, axes):
+    """`insert_slot_caches` that also ADOPTS unbatched leaves from the
+    slot tree.
+
+    For slab trees every leaf has a batch axis and this is exactly
+    `insert_slot_caches`.  For paged trees (DESIGN.md §8) the block
+    pools carry no batch axis (``ax < 0``): a batch=1 prefill writes the
+    slot's tokens straight into the SHARED pools, so the returned slot
+    tree's pool leaves are the authoritative ones and must replace the
+    batched tree's — `insert_slot_caches` would silently discard them.
+    """
+    return jax.tree.map(
+        lambda big, small, ax: small.astype(big.dtype) if ax < 0 else
         jax.lax.dynamic_update_slice_in_dim(
             big, small.astype(big.dtype), slot, axis=ax),
         caches, slot_caches, axes)

@@ -54,6 +54,7 @@ class TransformerConfig:
     compute_dtype: str = "float32"
     chunk_q: int = 512
     chunk_k: int = 1024
+    paged_impl: str = "jax"    # paged-KV decode path (serving only)
 
     @property
     def resolved_head_dim(self) -> int:
@@ -65,7 +66,8 @@ class TransformerConfig:
             num_kv_heads=self.num_kv_heads, head_dim=self.resolved_head_dim,
             qkv_bias=self.qkv_bias, qk_norm=self.qk_norm,
             rope_theta=self.rope_theta, chunk_q=self.chunk_q,
-            chunk_k=self.chunk_k, n_layers_scale=self.n_layers)
+            chunk_k=self.chunk_k, n_layers_scale=self.n_layers,
+            paged_impl=self.paged_impl)
 
     def moe_config(self) -> M.MoEConfig:
         return M.MoEConfig(
@@ -136,12 +138,12 @@ def init_params(key, cfg: TransformerConfig) -> Dict[str, Any]:
 
 
 def apply_block(p, x, cfg: TransformerConfig, *, cache=None, shard=None,
-                decode=False):
+                decode=False, prefill_ext=False):
     """Pre-norm block; returns (x, aux, new_cache)."""
     acfg = cfg.attn_config()
     h, new_cache = A.attention_layer(
         p["attn"], L.rmsnorm(p["ln_attn"], x, cfg.norm_eps), acfg,
-        cache=cache, shard=shard, decode=decode)
+        cache=cache, shard=shard, decode=decode, prefill_ext=prefill_ext)
     x = x + h
     xn = L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
@@ -164,13 +166,15 @@ def forward(
     caches: Optional[Any] = None,
     shard=None,
     decode: bool = False,
+    prefill_ext: bool = False,
 ) -> Tuple[jax.Array, jax.Array, Optional[Any]]:
     """tokens (B, T_txt) [+ frontend (B, T_img, d)] -> hidden (B, T, d).
 
     Returns (hidden, aux_loss, new_caches).  `hidden` covers the full
     sequence (frontend positions included); callers slice for the loss.
     ``decode=True`` (static) makes a cached T > 1 forward extend the
-    cache per row instead of prefilling it — speculative verification.
+    cache per row instead of prefilling it — speculative verification,
+    or (with ``prefill_ext=True``) the paged suffix-only prefill.
     """
     x = L.embed_lookup(params["embed"]["table"], tokens,
                    shard=shard).astype(_cdt(cfg))
@@ -187,7 +191,7 @@ def forward(
             x, aux = fn(p, x)
             return x, aux, None
         return apply_block(p, x, cfg, cache=cache, shard=shard,
-                           decode=decode)
+                           decode=decode, prefill_ext=prefill_ext)
 
     if cfg.scan_layers:
         if caches is None:
@@ -226,7 +230,13 @@ def forward(
 
 def init_caches(cfg: TransformerConfig, batch: int, max_len: int,
                 dtype=jnp.bfloat16, quantize: bool = False):
-    """Stacked per-layer KV caches for the scan path."""
+    """Per-layer KV caches: stacked for the scan path, a list for the
+    unscanned path (whose forward indexes ``caches[i]`` — a stacked dict
+    there was a KeyError at the first cached forward)."""
+    if not cfg.scan_layers:
+        return [A.init_cache(batch, max_len, cfg.attn_config(), dtype,
+                             quantize=quantize)
+                for _ in range(cfg.n_layers)]
     one = A.init_cache(batch, max_len, cfg.attn_config(), dtype,
                        quantize=quantize)
     return jax.tree.map(

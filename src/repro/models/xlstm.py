@@ -190,11 +190,15 @@ def mlstm_chunkwise(q, k, v, igate, fgate, chunk: int, state=None):
 # ---------------------------------------------------------------------------
 
 
-def slstm_sequential(xi, xf, xz, xo, r_params, state=None):
+def slstm_sequential(xi, xf, xz, xo, r_params, state=None, valid=None):
     """sLSTM with per-head recurrent matrices.
 
     xi/xf/xz/xo: (B, T, H, D) input pre-activations; r_params: dict with
     'ri','rf','rz','ro' each (H, D, D).  state: (h, c, n, m) each (B,H,D).
+    ``valid`` (B, T) masks bucket-pad tail steps of a padded prefill:
+    an invalid step carries every state component through UNCHANGED
+    (exact select, not gate arithmetic — ``h`` feeds the recurrent
+    matmuls, so it must be preserved bit-exactly).
     """
     b, t, h, d = xi.shape
     if state is None:
@@ -206,7 +210,7 @@ def slstm_sequential(xi, xf, xz, xo, r_params, state=None):
 
     def step(carry, xs):
         h_, c_, n_, m_ = carry
-        xit, xft, xzt, xot = xs
+        xit, xft, xzt, xot, v_t = xs
         rec = lambda r: jnp.einsum("bhd,hde->bhe", h_,
                                    r.astype(jnp.float32))
         it = xit.astype(jnp.float32) + rec(ri)
@@ -218,14 +222,22 @@ def slstm_sequential(xi, xf, xz, xo, r_params, state=None):
         m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
         i_ = jnp.exp(it - m_safe)
         f_ = jnp.exp(lf + m_ - m_safe)
-        c_ = f_ * c_ + i_ * zt
-        n_ = f_ * n_ + i_
-        h_new = ot * c_ / jnp.maximum(n_, 1e-6)
-        return (h_new, c_, n_, m_new), h_new
+        c_new = f_ * c_ + i_ * zt
+        n_new = f_ * n_ + i_
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        if v_t is not None:
+            keep = v_t[:, None, None]
+            h_new = jnp.where(keep, h_new, h_)
+            c_new = jnp.where(keep, c_new, c_)
+            n_new = jnp.where(keep, n_new, n_)
+            m_new = jnp.where(keep, m_new, m_)
+        return (h_new, c_new, n_new, m_new), h_new
 
     # xs stay in the input dtype (bf16 in training): the scan's stacked
     # inputs dominate sLSTM memory traffic; upcast happens per step
     xs = tuple(jnp.moveaxis(a, 1, 0) for a in (xi, xf, xz, xo))
+    xs = xs + (None if valid is None else
+               jnp.moveaxis(jnp.broadcast_to(valid, (b, t)), 1, 0),)
     state, hs = jax.lax.scan(step, state, xs)
     return jnp.moveaxis(hs, 0, 1), state
 
@@ -253,8 +265,14 @@ def init_mlstm_block(key, cfg: XLSTMConfig, dtype=jnp.float32):
     }
 
 
-def apply_mlstm_block(p, x, cfg: XLSTMConfig, state=None):
-    """state: None (train) or dict {'conv', 'cell'} for decode."""
+def apply_mlstm_block(p, x, cfg: XLSTMConfig, state=None, true_len=None):
+    """state: None (train) or dict {'conv', 'cell'} for decode.
+
+    ``true_len`` (serving): bucket-pad tail steps are masked by forcing
+    their gates to no-ops — ``i = exp(-inf) = 0`` drops their input,
+    ``log f = log_sigmoid(+inf) = 0`` carries (C, n, m) through exactly
+    (the carry holds no hidden state, so gate masking alone is exact;
+    the pad rows' OUTPUTS are garbage and unused)."""
     b, t, d = x.shape
     nh, hd = cfg.num_heads, cfg.head_dim_m
     xin = L.rmsnorm(p["ln"], x, cfg.norm_eps)
@@ -268,6 +286,11 @@ def apply_mlstm_block(p, x, cfg: XLSTMConfig, state=None):
     v = jnp.einsum("bte,ef->btf", u, p["wv"]).reshape(b, t, nh, hd)
     gates = jnp.einsum("bte,eg->btg", uc, p["w_gates"]).astype(jnp.float32)
     igate, fgate = gates[..., :nh], gates[..., nh:] + 3.0   # forget bias
+    if true_len is not None and state is not None:
+        valid = (jnp.arange(t)[None, :] < true_len)[..., None]
+        igate = jnp.where(valid, igate, -jnp.inf)
+        fgate = jnp.where(valid, fgate, jnp.inf)
+        conv_state = L.conv_state_at(state["conv"], u, true_len)
     cell_state = state["cell"] if state is not None else None
     if state is not None and t <= 4:
         h, cell_state = mlstm_sequential(q, k, v, igate, fgate, cell_state)
@@ -303,7 +326,7 @@ def init_slstm_block(key, cfg: XLSTMConfig, dtype=jnp.float32):
     }
 
 
-def apply_slstm_block(p, x, cfg: XLSTMConfig, state=None):
+def apply_slstm_block(p, x, cfg: XLSTMConfig, state=None, true_len=None):
     b, t, d = x.shape
     nh = cfg.num_heads
     hd = d // nh
@@ -314,11 +337,15 @@ def apply_slstm_block(p, x, cfg: XLSTMConfig, state=None):
     pre = jnp.einsum("btd,dg->btg", xc, p["w_ifzo"])
     xi, xf, xz, xo = [a.reshape(b, t, nh, hd)
                       for a in jnp.split(pre, 4, axis=-1)]
+    valid = None
+    if true_len is not None and state is not None:
+        valid = jnp.arange(t)[None, :] < true_len
+        conv_state = L.conv_state_at(state["conv"], xin, true_len)
     cell_state = state["cell"] if state is not None else None
     h, cell_state = slstm_sequential(
         xi, xf + 3.0, xz, xo,
         {"ri": p["ri"], "rf": p["rf"], "rz": p["rz"], "ro": p["ro"]},
-        cell_state)
+        cell_state, valid=valid)
     h = L.rmsnorm(p["gn"], h.astype(x.dtype), cfg.norm_eps)
     x = x + h.reshape(b, t, d)
     xm = L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
@@ -359,10 +386,15 @@ def init_params(key, cfg: XLSTMConfig) -> Dict[str, Any]:
 
 
 def forward(params, tokens, cfg: XLSTMConfig, *, states=None, shard=None,
-            frontend_embeds=None, decode: bool = False):
+            frontend_embeds=None, decode: bool = False, true_len=None):
+    """``true_len`` (traced scalar, serving only): tokens beyond it are
+    bucket pads; every stateful primitive masks them so the carried
+    state after this forward equals an exact-length prefill's."""
     # recurrent state consumes tokens sequentially whatever T is, so a
     # cached multi-token forward is already "decode" semantics
     del frontend_embeds, decode
+    if states is None:
+        true_len = None                      # training: no carried state
     x = L.embed_lookup(params["embed"]["table"], tokens, shard=shard).astype(jnp.dtype(cfg.compute_dtype))
     if shard is not None:
         x = shard(x, "batch", "seq", "embed")
@@ -377,8 +409,10 @@ def forward(params, tokens, cfg: XLSTMConfig, *, states=None, shard=None,
                     apply_slstm_block(p_["slstm"], x_, cfg)[0], cfg)[0],
                 prevent_cse=False)
             return fn(p, x), None
-        x, s_st = apply_slstm_block(p["slstm"], x, cfg, s_st)
-        x, m_st = apply_mlstm_block(p["mlstm"], x, cfg, m_st)
+        x, s_st = apply_slstm_block(p["slstm"], x, cfg, s_st,
+                                    true_len=true_len)
+        x, m_st = apply_mlstm_block(p["mlstm"], x, cfg, m_st,
+                                    true_len=true_len)
         return x, {"slstm": s_st, "mlstm": m_st}
 
     if cfg.scan_layers:

@@ -4,9 +4,14 @@ from repro.serve.scheduler import ContinuousScheduler, Request
 from repro.serve.sampler import streaming_topk, sample_tokens, top_p_mask
 from repro.serve.spec import (SpecConfig, SpecEngine, SelfSpecEngine,
                               build_spec_step, build_self_spec_step)
+from repro.serve.kvpool import (PagedConfig, BlockPool, PrefixCache,
+                                PoolExhausted)
+from repro.serve.paged import PagedEngine, PagedSelfSpecEngine
 
 __all__ = ["ServeConfig", "Engine", "ContinuousScheduler", "Request",
            "build_serve_fns", "resolve_logit_softcap",
            "streaming_topk", "sample_tokens", "top_p_mask",
            "SpecConfig", "SpecEngine", "SelfSpecEngine",
-           "build_spec_step", "build_self_spec_step"]
+           "build_spec_step", "build_self_spec_step",
+           "PagedConfig", "BlockPool", "PrefixCache", "PoolExhausted",
+           "PagedEngine", "PagedSelfSpecEngine"]

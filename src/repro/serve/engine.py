@@ -54,10 +54,16 @@ class ServeConfig:
     quantize_cache: bool = False   # int8 KV (transformer family)
     logit_softcap: Optional[float] = None   # None -> arch.cfg.logit_softcap
     sampler_impl: str = "pallas"   # 'pallas' kernel | 'jax' oracle
-    bucket_prefill: bool = True    # pow2 prompt buckets (attention families)
+    bucket_prefill: bool = True    # pow2 prompt buckets (all families)
     enc_len: Optional[int] = None  # enc-dec encoder frames per request
     autotune: bool = False         # tune decode top-k block plans at init
     tune_trial_budget: int = 6
+    # paged KV cache (serve/paged.PagedEngine, DESIGN.md §8)
+    paged: bool = False            # block-pool KV instead of dense slabs
+    block_size: int = 16           # tokens per pool block
+    pool_blocks: int = 0           # total pool blocks (0: slab parity)
+    paged_impl: str = "pallas"     # 'pallas' kernel | 'jax' gather oracle
+    prefix_cache: bool = True      # shared-prefix block reuse (trie)
 
 
 def resolve_logit_softcap(arch: Arch, sc: ServeConfig) -> Optional[float]:
@@ -90,14 +96,22 @@ def make_sampler(arch: Arch, sc: ServeConfig):
 
 
 def prefill_last_hidden(arch: Arch, params, caches, batch, true_len,
-                        shard=None):
+                        shard=None, decode: bool = False):
     """The traced half of a batch=1 prefill: run the forward, shift the
     caches' ``len`` back by the bucket pad, and read the hidden state at
     the last REAL prompt position.  Returns (h_last (1, d), caches) —
     shared by the plain prefill and the MTP self-speculative prefill (the
-    latter also applies the heads to `h_last`)."""
+    latter also applies the heads to `h_last`).
+
+    `true_len` also gates the recurrent families' pad-step masking (their
+    state consumes every position, so bucket pads must be exact no-ops).
+    ``decode=True`` makes this a cache EXTENSION — the paged engine's
+    suffix-only prefill after a prefix-cache hit, where the tokens attend
+    over the already-cached shared prefix via `extend_attention` (whose
+    rows are bit-identical to a cold blockwise prefill's)."""
     h, _, caches = forward_hidden(arch, params, batch, caches=caches,
-                                  shard=shard)
+                                  shard=shard, decode=decode,
+                                  prefill_ext=decode, true_len=true_len)
     pad = batch["tokens"].shape[1] - true_len
     caches = shift_cache_lens(caches, pad)
     last = h.shape[1] - batch["tokens"].shape[1] + true_len - 1
@@ -107,12 +121,15 @@ def prefill_last_hidden(arch: Arch, params, caches, batch, true_len,
 
 
 def build_serve_fns(arch: Arch, sc: ServeConfig, shard=None):
-    """(prefill, decode_step) jit-ready functions.
+    """(prefill, prefill_ext, decode_step) jit-ready functions.
 
     prefill(params, slot_caches, batch, true_len, rng) -> (tok (1,), caches)
         batch['tokens'] is (1, T_bucket) right-padded; `true_len` (traced)
         is the real prompt length — the hidden state is read at the last
         REAL position and the caches' ``len`` shifted back by the pad.
+    prefill_ext: same signature, but the tokens EXTEND a non-empty cache
+        (``decode=True`` forward) — the suffix-only prefill of a paged
+        prefix-cache hit.  Compiled lazily; slab engines never call it.
     decode_step(params, caches, tokens (B, 1), rng) -> (tok (B,), caches)
     """
     sampler = make_sampler(arch, sc)
@@ -123,13 +140,20 @@ def build_serve_fns(arch: Arch, sc: ServeConfig, shard=None):
         return sampler(h_last, params["lm_head"], rng,
                        sc.temperature), caches
 
+    def prefill_ext(params, caches, batch, true_len, rng):
+        h_last, caches = prefill_last_hidden(arch, params, caches, batch,
+                                             true_len, shard=shard,
+                                             decode=True)
+        return sampler(h_last, params["lm_head"], rng,
+                       sc.temperature), caches
+
     def decode_step(params, caches, tokens, rng):
         h, _, caches = forward_hidden(arch, params, {"tokens": tokens},
                                       caches=caches, shard=shard)
         return sampler(h[:, -1, :], params["lm_head"], rng,
                        sc.temperature), caches
 
-    return prefill, decode_step
+    return prefill, prefill_ext, decode_step
 
 
 def _bucket_len(true_len: int, max_len: int) -> int:
@@ -149,20 +173,24 @@ class Engine:
         self.arch = arch
         self.params = params
         self.sc = sc
+        self._jit = jit
         self._cdt = jnp.dtype(sc.cache_dtype)
         self._quant = sc.quantize_cache and arch.family == "transformer"
-        self._bucketed = (sc.bucket_prefill
-                          and arch.family in ("transformer", "encdec"))
+        self._bucketed = sc.bucket_prefill
+        # bucket pads in a griffin ring buffer must never WRAP the ring
+        # (a wrapped pad write destroys an in-window real entry); prompts
+        # longer than the cap prefill at their exact length
+        self._bucket_cap = sc.max_len
+        if arch.family == "griffin":
+            self._bucket_cap = min(sc.max_len, arch.cfg.window)
         self._enc_len = sc.enc_len or ENCDEC_SERVE_ENC_LEN
-        axes = cache_batch_axes(arch, params, sc.max_len,
-                                enc_len=self._enc_len, dtype=self._cdt,
-                                quantize=self._quant)
-        self._axes = axes
+        self._axes = self._cache_axes()
+        axes = self._axes
 
         if sc.autotune:
             self._tune_plans()
 
-        prefill, decode = build_serve_fns(arch, sc)
+        prefill, prefill_ext, decode = build_serve_fns(arch, sc)
         wrap = jax.jit if jit else (lambda f, **kw: f)
         # donate the batched cache operand so decode/insert/reset update it
         # in place instead of copying the full tree each tick (donation is
@@ -172,6 +200,7 @@ class Engine:
         dn = (lambda n: {"donate_argnums": (n,)}) \
             if jit and jax.default_backend() != "cpu" else (lambda n: {})
         self._prefill = wrap(prefill)
+        self._prefill_ext = wrap(prefill_ext)
         self._decode = wrap(decode, **dn(1))
         self._insert = wrap(
             lambda caches, slot_caches, slot:
@@ -192,6 +221,18 @@ class Engine:
                 quantize=self._quant)
         self.reset()
 
+    # hooks the paged engine overrides (serve/paged.py) -----------------------
+
+    def _cache_axes(self):
+        return cache_batch_axes(self.arch, self.params, self.sc.max_len,
+                                enc_len=self._enc_len, dtype=self._cdt,
+                                quantize=self._quant)
+
+    def _empty_caches(self):
+        return empty_serve_caches(
+            self.arch, self.params, self.sc.batch_size, self.sc.max_len,
+            enc_len=self._enc_len, dtype=self._cdt, quantize=self._quant)
+
     # -- lifecycle ----------------------------------------------------------
 
     @property
@@ -200,9 +241,7 @@ class Engine:
 
     def reset(self, seed: int = 0):
         """Fresh batched cache container + per-slot pristine template."""
-        self.caches = empty_serve_caches(
-            self.arch, self.params, self.sc.batch_size, self.sc.max_len,
-            enc_len=self._enc_len, dtype=self._cdt, quantize=self._quant)
+        self.caches = self._empty_caches()
         self._template = take_slot_caches(self.caches, 0, self._axes)
         self.cur = np.zeros((self.sc.batch_size,), np.int32)
         self._rng = jax.random.PRNGKey(seed)
@@ -227,17 +266,37 @@ class Engine:
         self._rng, sub = jax.random.split(self._rng)
         return sub
 
-    def _prefill_inputs(self, prompt, frontend_embeds=None):
+    def _bucket_for(self, true_len: int, cap: Optional[int] = None) -> int:
+        """Padded prefill length for a `true_len`-token segment: the pow2
+        bucket when bucketing is on and the bucket fits under `cap`
+        (default: the family bucket cap), else the exact length."""
+        if not self._bucketed:
+            return true_len
+        cap = self._bucket_cap if cap is None else min(cap,
+                                                       self._bucket_cap)
+        t_b = _bucket_len(true_len, self.sc.max_len)
+        return t_b if t_b <= cap else true_len
+
+    def _prefill_inputs(self, prompt, frontend_embeds=None,
+                        pad_cap: Optional[int] = None,
+                        pad_to: Optional[int] = None):
         """(batch, slot_caches, true_len) for one batch=1 prefill —
         prompt validation, pow2 bucketing, and the per-family slot-cache
-        template, shared by the plain and self-speculative prefills."""
+        template, shared by the plain and self-speculative prefills.
+        `pad_cap` additionally bounds the padded length; `pad_to` forces
+        an exact padded length (the paged engine's suffix prefill pads
+        the suffix so shared + padded == the cold prefill's bucket)."""
         prompt = np.asarray(prompt, np.int32).reshape(1, -1)
         true_len = prompt.shape[1]
         if not 1 <= true_len <= self.sc.max_len:
             raise ValueError(f"prompt length {true_len} outside "
                              f"[1, {self.sc.max_len}]")
-        t_b = (_bucket_len(true_len, self.sc.max_len) if self._bucketed
-               else true_len)
+        if pad_to is not None:
+            if pad_to < true_len:
+                raise ValueError(f"pad_to={pad_to} < prompt {true_len}")
+            t_b = pad_to
+        else:
+            t_b = self._bucket_for(true_len, pad_cap)
         tokens = np.zeros((1, t_b), np.int32)
         tokens[0, :true_len] = prompt[0]
         batch: Dict[str, Any] = {"tokens": jnp.asarray(tokens)}
@@ -256,6 +315,23 @@ class Engine:
                 batch["frontend_embeds"] = jnp.asarray(frontend_embeds)
         return batch, slot_caches, true_len
 
+    def _slot_prefill_view(self, slot: int, prompt, frontend_embeds):
+        """(batch, slot_caches, true_len, ctx) for one slot prefill.
+
+        `ctx` is opaque state threaded to `_commit_slot`; its ``'ext'``
+        key selects the cache-extension prefill variant (always False
+        for the slab engine — the paged engine flips it on prefix-cache
+        hits, serve/paged.py)."""
+        batch, slot_caches, true_len = self._prefill_inputs(
+            prompt, frontend_embeds)
+        return batch, slot_caches, true_len, {"ext": False}
+
+    def _commit_slot(self, slot: int, slot_caches, ctx):
+        """Publish a finished prefill's slot tree into the live batch."""
+        del ctx
+        self.caches = self._insert(self.caches, slot_caches,
+                                   jnp.int32(slot))
+
     def prefill_into_slot(self, slot: int, prompt, frontend_embeds=None
                           ) -> int:
         """Prefill one prompt at batch=1 into slot `slot`; returns the
@@ -264,13 +340,13 @@ class Engine:
         For enc-dec families a missing `frontend_embeds` runs the
         encoder on zeros — a deliberate unconditioned-decode fallback;
         pass real frames for conditioned generation."""
-        batch, slot_caches, true_len = self._prefill_inputs(
-            prompt, frontend_embeds)
-        tok, slot_caches = self._prefill(
+        batch, slot_caches, true_len, ctx = self._slot_prefill_view(
+            slot, prompt, frontend_embeds)
+        fn = self._prefill_ext if ctx.get("ext") else self._prefill
+        tok, slot_caches = fn(
             self.params, slot_caches, batch, jnp.int32(true_len),
             self._split())
-        self.caches = self._insert(self.caches, slot_caches,
-                                   jnp.int32(slot))
+        self._commit_slot(slot, slot_caches, ctx)
         tok = int(jax.device_get(tok)[0])
         self.cur[slot] = tok
         return tok

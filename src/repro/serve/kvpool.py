@@ -1,0 +1,464 @@
+"""Paged KV-cache block pool + shared-prefix trie (DESIGN.md §8).
+
+The slab engine allocates a dense ``(B, max_len)`` KV slab per slot, so
+serving concurrency is bounded by WORST-CASE sequence length and two
+requests with the same system prompt re-prefill and re-store it twice.
+This module replaces the slab with the vLLM-style alternative:
+
+  * **BlockPool** — the HBM cache is one pool of fixed-size token blocks
+    (``(n_blocks, block_size, n_kv, head_dim)`` per layer); a request
+    owns a *chain* of block ids and its per-slot row of the block table
+    maps position ``p`` to ``table[p // block_size]``.  Blocks are
+    refcounted: `fork` shares a chain (prefix reuse), `free` returns a
+    block to the free list when its last reference drops, and
+    copy-on-write (`writable_block`) un-shares a block before a write —
+    the speculative-decoding rollback path appends into, then truncates,
+    tail blocks, which must never be blocks another request can see.
+  * **PrefixCache** — a trie over FULL prompt blocks (``block_size``
+    tokens per level) mapping token content to cached block ids.  A new
+    prompt walks the trie, adopts the longest matched chain with `fork`
+    (near-zero time-to-first-token for the shared prefix), and prefills
+    only the suffix.  Only full blocks are ever shared: a partial tail
+    block is still being appended to by its owner, so sharing it would
+    let one request clobber another's cache.  The trie holds its own
+    +1 reference per cached block; when the pool runs dry, least-
+    recently-used *leaf* chains are evicted first (a parent block can
+    never be evicted before its children — a child chain is only
+    reachable through its prefix).
+
+The pool is pure HOST-side bookkeeping (ints and numpy); the device side
+is the paged cache *tree* built by `paged_tree` below: every pageable
+slab leaf-group ``{'k', 'v', 'len'}`` becomes ``{'kp', 'vp', 'table',
+'len'}`` where the pools have NO batch axis (they are shared across
+slots) and the table/len rows are per-slot.  Ring-buffer caches
+(``'pos'``) are already O(window) and int8-quantized caches keep their
+scale slabs — both stay dense; recurrent state has nothing to page.
+`models/attention.py` recognizes the paged dict by its ``'table'`` key,
+so the four model families need no paging-specific code at all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# block id 0 is the reserved NULL block: free slots' table rows point at
+# it, ghost/pad writes land in it, and the allocator never hands it out.
+NULL_BLOCK = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedConfig:
+    """Shape of the paged cache (device side) + pool size (host side).
+
+    block_size: tokens per block (the paging granularity).
+    n_blocks: TOTAL pool blocks, including the reserved null block 0.
+    max_blocks_per_slot: block-table width — per-slot capacity stays
+        ``max_blocks_per_slot * block_size`` tokens, matching the slab
+        engine's ``max_len`` contract for the scheduler's budget check.
+    """
+
+    block_size: int = 16
+    n_blocks: int = 64
+    max_blocks_per_slot: int = 16
+
+    def __post_init__(self):
+        if self.block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        if self.n_blocks < 2:
+            raise ValueError("n_blocks must be >= 2 (block 0 is reserved)")
+        if self.max_blocks_per_slot < 1:
+            raise ValueError("max_blocks_per_slot must be >= 1")
+
+    @property
+    def slot_capacity(self) -> int:
+        return self.max_blocks_per_slot * self.block_size
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold `n_tokens` cache entries."""
+        return -(-n_tokens // self.block_size)
+
+
+def paged_config(block_size: int, max_len: int, batch_size: int,
+                 n_blocks: int = 0) -> PagedConfig:
+    """The serve-side constructor: per-slot capacity `max_len`, pool
+    defaulting to slab parity (`batch_size` worst-case slots) + null."""
+    nb = -(-max_len // block_size)
+    total = n_blocks or batch_size * nb + 1
+    return PagedConfig(block_size=block_size, n_blocks=total,
+                       max_blocks_per_slot=nb)
+
+
+class PoolExhausted(RuntimeError):
+    """No free blocks left (after prefix-cache eviction)."""
+
+
+class BlockPool:
+    """Host-side refcounted allocator over `n_blocks` fixed-size blocks."""
+
+    def __init__(self, cfg: PagedConfig):
+        self.cfg = cfg
+        self._refs = np.zeros((cfg.n_blocks,), np.int64)
+        self._refs[NULL_BLOCK] = 1                     # pinned forever
+        self._free: List[int] = list(range(cfg.n_blocks - 1, 0, -1))
+
+    # -- accounting ----------------------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        """Live blocks, the reserved null block excluded."""
+        return self.cfg.n_blocks - 1 - len(self._free)
+
+    def refcount(self, block: int) -> int:
+        return int(self._refs[block])
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def alloc(self, n: int) -> List[int]:
+        """`n` fresh blocks (refcount 1 each); raises `PoolExhausted`."""
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"need {n} blocks, {len(self._free)} free "
+                f"(pool: {self.cfg.n_blocks}, block {self.cfg.block_size})")
+        out = [self._free.pop() for _ in range(n)]
+        self._refs[out] += 1
+        return out
+
+    def fork(self, chain: Sequence[int]) -> List[int]:
+        """Share `chain`: +1 reference per block.  Returns the same ids —
+        the caller's own chain (writes must go through `writable_block`)."""
+        ids = [b for b in chain]
+        for b in ids:
+            if b == NULL_BLOCK or self._refs[b] < 1:
+                raise ValueError(f"fork of unallocated block {b}")
+        self._refs[ids] += 1
+        return ids
+
+    def free(self, chain: Sequence[int]) -> List[int]:
+        """Drop one reference per block; blocks whose count hits zero
+        return to the free list.  Returns the ids actually recycled."""
+        recycled = []
+        for b in chain:
+            if b == NULL_BLOCK:
+                continue
+            if self._refs[b] < 1:
+                raise ValueError(f"double free of block {b}")
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                self._free.append(b)
+                recycled.append(b)
+        return recycled
+
+    def writable_block(self, chain: List[int], idx: int
+                       ) -> Tuple[int, Optional[int]]:
+        """Copy-on-write: make ``chain[idx]`` exclusively owned.
+
+        Returns ``(block_id, copied_from)``: the (possibly new) id now at
+        ``chain[idx]`` — mutated in place — and the donor id when a copy
+        is needed (the CALLER copies the device bytes; the pool only
+        moves the reference).  A refcount-1 block is already writable.
+        """
+        old = chain[idx]
+        if self._refs[old] < 1:
+            raise ValueError(f"writable_block on unallocated block {old}")
+        if self._refs[old] == 1:
+            return old, None
+        new = self.alloc(1)[0]
+        self._refs[old] -= 1            # shared: never hits 0 here
+        chain[idx] = new
+        return new, old
+
+
+class PrefixCache:
+    """Trie of full prompt blocks -> cached block ids (shared prefixes).
+
+    One trie level per `block_size` tokens; a node's key is the block's
+    token content, its value the pool block id holding that block's K/V.
+    The trie owns one pool reference per node (taken at `insert`, dropped
+    at eviction), so cached chains survive slot recycling.
+    """
+
+    class _Node:
+        __slots__ = ("key", "block", "children", "parent", "tick")
+
+        def __init__(self, key, block, parent):
+            self.key = key
+            self.block = block
+            self.children: Dict[Tuple[int, ...], "PrefixCache._Node"] = {}
+            self.parent = parent
+            self.tick = 0
+
+    def __init__(self, pool: BlockPool):
+        self.pool = pool
+        self.block_size = pool.cfg.block_size
+        self._root = self._Node(None, NULL_BLOCK, None)
+        self._tick = 0
+        # counters for scheduler stats / benches
+        self.hits = 0
+        self.hit_blocks = 0
+        self.evicted_blocks = 0
+
+    def _keys(self, prompt: np.ndarray, n_blocks: int, scope):
+        """One key per full block; the first level additionally carries
+        `scope` — a fingerprint of any non-token conditioning (the
+        enc-dec frontend embeddings: decoder KV at layers >= 1 depends
+        on cross-attention over the ENCODER input, so chains are only
+        reusable under the same encoder input)."""
+        bs = self.block_size
+        keys = [tuple(int(t) for t in prompt[i * bs:(i + 1) * bs])
+                for i in range(n_blocks)]
+        if keys and scope is not None:
+            keys[0] = (scope,) + keys[0]
+        return keys
+
+    def _touch(self, node: "PrefixCache._Node"):
+        self._tick += 1
+        while node is not None:
+            node.tick = self._tick
+            node = node.parent
+
+    # -- lookup / insert -----------------------------------------------------
+
+    def match(self, prompt: np.ndarray, scope=None) -> List[int]:
+        """Longest cached block chain covering a PROPER prefix of
+        `prompt` (at least one token is always left for the suffix
+        prefill — the sampler needs a hidden state to draw the first
+        token from).  Does NOT take references; callers `fork`.
+        """
+        full = (len(prompt) - 1) // self.block_size
+        node, chain = self._root, []
+        for key in self._keys(prompt, full, scope):
+            child = node.children.get(key)
+            if child is None:
+                break
+            chain.append(child.block)
+            node = child
+        if chain:
+            self.hits += 1
+            self.hit_blocks += len(chain)
+            self._touch(node)
+        return chain
+
+    def insert(self, prompt: np.ndarray, chain: Sequence[int],
+               scope=None):
+        """Register `prompt`'s FULL blocks (backed by `chain`) for reuse.
+
+        Already-cached levels are kept (their blocks are the ones the
+        prompt matched and forked); each newly added node takes one pool
+        reference so the chain outlives the requesting slot."""
+        full = min(len(prompt) // self.block_size, len(chain))
+        node = self._root
+        for i, key in enumerate(self._keys(prompt, full, scope)):
+            child = node.children.get(key)
+            if child is None:
+                child = self._Node(key, chain[i], node)
+                self.pool.fork([chain[i]])
+                node.children[key] = child
+            node = child
+        self._touch(node)
+
+    # -- eviction ------------------------------------------------------------
+
+    def _leaves(self):
+        out = []
+
+        def walk(node):
+            if not node.children:
+                out.append(node)
+            for c in node.children.values():
+                walk(c)
+
+        for c in self._root.children.values():
+            walk(c)
+        return out
+
+    def evict(self, n_needed: int) -> int:
+        """Drop least-recently-used leaf nodes until `n_needed` blocks
+        are free (or the trie is empty).  Returns blocks recycled."""
+        recycled = 0
+        while self.pool.free_blocks < n_needed:
+            leaves = self._leaves()
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda n: n.tick)
+            recycled += len(self.pool.free([victim.block]))
+            self.evicted_blocks += 1
+            del victim.parent.children[victim.key]
+        return recycled
+
+    def clear(self):
+        """Drop the whole trie (one reference per node, each node once)."""
+        def walk(node):
+            self.pool.free([node.block])
+            for c in node.children.values():
+                walk(c)
+
+        for c in self._root.children.values():
+            walk(c)
+        self._root.children.clear()
+
+
+# ---------------------------------------------------------------------------
+# paged cache trees (device side)
+# ---------------------------------------------------------------------------
+
+
+def is_pageable(sub: Any) -> bool:
+    """True for a plain slab KV-cache dict ``{'k','v','len'}``.
+
+    Ring buffers (``'pos'``) are already window-bounded and quantized
+    caches (``'k_scale'``) carry per-token scale slabs — both stay dense.
+    """
+    return (isinstance(sub, dict) and "k" in sub and "v" in sub
+            and "len" in sub and "pos" not in sub and "k_scale" not in sub)
+
+
+def is_paged(sub: Any) -> bool:
+    return isinstance(sub, dict) and "table" in sub
+
+
+def paged_tree(tree: Any, pc: PagedConfig):
+    """Rewrite every pageable slab subtree of a serve-cache tree into its
+    paged form.
+
+    A slab leaf-group ``k/v: (L?, B, S, nkv, hd), len: (L?, B)`` becomes
+
+        kp/vp: (L?, n_blocks, block_size, nkv, hd)   -- NO batch axis
+        table: (L?, B, max_blocks_per_slot) int32     -- null-filled
+        len:   (L?, B)                                -- unchanged
+
+    Works on concrete arrays and (under `jax.eval_shape`) on
+    ShapeDtypeStructs; trees with no pageable subtree pass through
+    unchanged (recurrent families page nothing).
+    """
+    def convert(sub):
+        k = sub["k"]
+        lead = k.shape[:-4]                 # () or (n_layers,)
+        nkv, hd = k.shape[-2:]
+        b = k.shape[-4]
+        pool_shape = lead + (pc.n_blocks, pc.block_size, nkv, hd)
+        tab_shape = lead + (b, pc.max_blocks_per_slot)
+        return {
+            "kp": jnp.zeros(pool_shape, k.dtype),
+            "vp": jnp.zeros(pool_shape, sub["v"].dtype),
+            "table": jnp.full(tab_shape, NULL_BLOCK, jnp.int32),
+            "len": jnp.zeros(sub["len"].shape, jnp.int32),
+        }
+
+    def walk(sub):
+        if is_pageable(sub):
+            return convert(sub)
+        if isinstance(sub, dict):
+            return {key: walk(val) for key, val in sub.items()}
+        if isinstance(sub, (list, tuple)):
+            return type(sub)(walk(v) for v in sub)
+        return sub
+
+    return walk(tree)
+
+
+def _count(tree: Any, pred) -> int:
+    n = 0
+
+    def walk(sub):
+        nonlocal n
+        if pred(sub):
+            n += 1
+        elif isinstance(sub, dict):
+            for v in sub.values():
+                walk(v)
+        elif isinstance(sub, (list, tuple)):
+            for v in sub:
+                walk(v)
+
+    walk(tree)
+    return n
+
+
+def count_pageable(tree: Any) -> int:
+    """Number of slab subtrees `paged_tree` would convert."""
+    return _count(tree, is_pageable)
+
+
+def count_paged(tree: Any) -> int:
+    """Number of already-paged subtrees in a cache tree."""
+    return _count(tree, is_paged)
+
+
+def fill_tables(tree: Any, tables: np.ndarray):
+    """Refresh every ``'table'`` leaf from the host master table (B, nb).
+
+    Pure host-side tree surgery (the table is tiny); layer-stacked leaves
+    broadcast the same per-slot chains — every layer of a request shares
+    one block chain, each layer indexing its own pool with the same ids.
+    The replacement takes its WIDTH from `tables`, not the leaf, so a
+    `slice_tables`-trimmed slot view is restored to full width.
+    """
+    tab = jnp.asarray(tables, jnp.int32)
+
+    def walk(sub):
+        if isinstance(sub, dict):
+            return {key: (jnp.broadcast_to(tab, val.shape[:-2] + tab.shape)
+                          if key == "table" else walk(val))
+                    for key, val in sub.items()}
+        if isinstance(sub, (list, tuple)):
+            return type(sub)(walk(v) for v in sub)
+        return sub
+
+    return walk(tree)
+
+
+def slice_tables(tree: Any, n_cols: int):
+    """Trim every ``'table'`` leaf to its first `n_cols` chain columns.
+
+    The prefix-hit suffix prefill gathers the chain at EXACTLY the cold
+    prefill's padded length (`extend_attention` reductions are bitwise
+    length-sensitive: trailing masked keys contribute exact zeros but
+    change the reduction tree) — so the view's table is sliced to
+    ``bucket(prompt_len) / block_size`` columns before the forward.
+    """
+    def walk(sub):
+        if isinstance(sub, dict):
+            return {key: (val[..., :n_cols] if key == "table"
+                          else walk(val))
+                    for key, val in sub.items()}
+        if isinstance(sub, (list, tuple)):
+            return type(sub)(walk(v) for v in sub)
+        return sub
+
+    return walk(tree)
+
+
+def copy_block(tree: Any, dst: int, src: int):
+    """Device-side copy-on-write payload move: pool entry `src` -> `dst`
+    in every kp/vp leaf (all layers).  Host refcounts moved separately
+    (`BlockPool.writable_block`)."""
+    def walk(sub):
+        if isinstance(sub, dict):
+            out = {}
+            for key, val in sub.items():
+                if key in ("kp", "vp"):
+                    out[key] = val.at[..., dst, :, :, :].set(
+                        val[..., src, :, :, :])
+                else:
+                    out[key] = walk(val)
+            return out
+        if isinstance(sub, (list, tuple)):
+            return type(sub)(walk(v) for v in sub)
+        return sub
+
+    return walk(tree)
+
+
+def cache_tree_bytes(tree: Any) -> int:
+    """Total bytes of every leaf of a cache tree (slab or paged)."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(tree))

@@ -5,7 +5,12 @@ Rules (path + rank based):
   * KV-head dims shard over "model" (GSPMD pads/replicates when
     kv_heads < |model|, the standard GQA-TP treatment);
   * recurrent-state width (d_rnn / d_inner) shards over "model";
-  * layer-stack leading dims and time/window dims stay unsharded.
+  * layer-stack leading dims and time/window dims stay unsharded;
+  * paged block pools (``kp``/``vp``, DESIGN.md §8) have NO batch dim —
+    they are shared across slots — and replicate over the data axis
+    (block ids are global; sharding the pool dim would scatter one
+    request's chain across hosts), sharding only their kv-head dim;
+    block tables shard their batch (slot) dim like any per-slot leaf.
 """
 
 from __future__ import annotations
@@ -42,6 +47,12 @@ def cache_specs(arch: Arch, cache_tree: Any, rules: AxisRules):
         rank = leaf.ndim
         lead = 1 if scanned else 0           # layer-stack axis
         axes = [None] * rank
+        if name in ("kp", "vp"):
+            # (L?, n_blocks, block_size, nkv, hd): no batch axis; kv
+            # heads on the model axis, pool/block dims replicated
+            if rank >= lead + 4:
+                axes[lead + 2] = m_ax
+            return P(*axes)
         # batch axis position
         bpos = lead if rank > lead else None
         if bpos is not None:
@@ -52,7 +63,7 @@ def cache_specs(arch: Arch, cache_tree: Any, rules: AxisRules):
             axes[lead + 1] = m_ax            # rg-lru state width
         elif name == "conv" and rank == lead + 3:
             axes[lead + 2] = m_ax            # conv tail width
-        elif name not in ("k", "v", "pos", "len", "conv", "h"):
+        elif name not in ("k", "v", "pos", "len", "conv", "h", "table"):
             # xlstm cell tuples: (pairs, B, nh, ...) -> shard the head dim
             if rank >= lead + 2:
                 axes[lead + 1] = m_ax

@@ -53,15 +53,25 @@ class ContinuousScheduler:
 
     on_token(rid, token, done) fires for every generated token (the
     prefill's first token included) as soon as the host sees it.
+
+    ``max_admits_per_step`` caps how many queued requests one scheduler
+    tick may prefill: each admit is a full batch=1 forward, so an
+    unbounded admit loop under a burst of arrivals stalls every RUNNING
+    slot until the burst has drained.  ``None`` (the default) keeps the
+    admit-until-full behavior.
     """
 
     def __init__(self, engine, max_new_tokens: int = 32,
                  eos_id: Optional[int] = None,
-                 on_token: Optional[Callable[[int, int, bool], None]] = None):
+                 on_token: Optional[Callable[[int, int, bool], None]] = None,
+                 max_admits_per_step: Optional[int] = None):
+        if max_admits_per_step is not None and max_admits_per_step < 1:
+            raise ValueError("max_admits_per_step must be >= 1 or None")
         self.engine = engine
         self.default_max_new = max_new_tokens
         self.default_eos = eos_id
         self.on_token = on_token
+        self.max_admits_per_step = max_admits_per_step
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: List[Optional[_Slot]] = [None] * engine.batch_size
         self.results: Dict[int, np.ndarray] = {}
@@ -69,12 +79,13 @@ class ContinuousScheduler:
         # benchmark counters
         self.decode_steps = 0
         self.slot_busy_steps = 0
+        self.peak_active = 0
         self.tokens_emitted = 0          # decode-step emissions (no prefill)
         self.admit_order: List[int] = []
-        self.ttft: Dict[int, float] = {}
-        self.latency: Dict[int, float] = {}   # admission -> completion
-        self._admit_t: Dict[int, float] = {}
-        self._t0: Optional[float] = None
+        self.ttft: Dict[int, float] = {}      # submit -> first token
+        self.latency: Dict[int, float] = {}   # submit -> completion
+        self.queue_wait: Dict[int, float] = {}  # submit -> admission
+        self._submit_t: Dict[int, float] = {}
         # speculative-decoding counters (stay 0 for plain engines)
         self.spec_drafted = 0
         self.spec_accepted = 0
@@ -83,7 +94,12 @@ class ContinuousScheduler:
 
     def submit(self, prompt, *, max_new_tokens: Optional[int] = None,
                eos_id=_UNSET, frontend_embeds=None) -> int:
-        """Queue one request; returns its request id."""
+        """Queue one request; returns its request id.
+
+        The submit time is stamped HERE: `ttft` and `latency` measure
+        from the caller handing the request over, queue wait included —
+        a request admitted late reports the wait it actually suffered,
+        not the time since its prefill."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         max_new = (self.default_max_new if max_new_tokens is None
                    else max_new_tokens)
@@ -101,6 +117,7 @@ class ContinuousScheduler:
                 f"max_len={self.engine.sc.max_len}")
         rid = self._next_rid
         self._next_rid += 1
+        self._submit_t[rid] = time.perf_counter()
         self.queue.append(Request(
             rid, prompt, max_new,
             self.default_eos if eos_id is _UNSET else eos_id,
@@ -127,7 +144,7 @@ class ContinuousScheduler:
         slot = self.slots[idx]
         rid = slot.req.rid
         self.results[rid] = np.asarray(slot.tokens, np.int32)
-        self.latency[rid] = time.perf_counter() - self._admit_t[rid]
+        self.latency[rid] = time.perf_counter() - self._submit_t[rid]
         self.slots[idx] = None
         self.engine.reset_slot(idx)
 
@@ -144,17 +161,40 @@ class ContinuousScheduler:
         return done
 
     def _admit(self):
-        """Prefill queued requests into free slots (FIFO)."""
+        """Prefill queued requests into free slots (FIFO), at most
+        `max_admits_per_step` per tick.
+
+        A paged engine whose block pool runs dry raises `PoolExhausted`
+        from the prefill: the request goes BACK to the queue head and
+        admission stops for this tick — running slots keep decoding and
+        their completions free blocks.  If nothing is running either,
+        the request can never fit and the error propagates."""
+        from repro.serve.kvpool import PoolExhausted
+
+        admitted = 0
         for idx in range(len(self.slots)):
             # a request that finishes at its prefill token frees the slot
             # again, so keep admitting into it
             while self.slots[idx] is None and self.queue:
+                if (self.max_admits_per_step is not None
+                        and admitted >= self.max_admits_per_step):
+                    return
                 req = self.queue.popleft()
-                self._admit_t[req.rid] = time.perf_counter()
-                first = self.engine.prefill_into_slot(
-                    idx, req.prompt, frontend_embeds=req.frontend_embeds)
+                self.queue_wait[req.rid] = (time.perf_counter()
+                                            - self._submit_t[req.rid])
+                try:
+                    first = self.engine.prefill_into_slot(
+                        idx, req.prompt,
+                        frontend_embeds=req.frontend_embeds)
+                except PoolExhausted:
+                    if self.active == 0:
+                        raise
+                    self.queue.appendleft(req)
+                    return
+                admitted += 1
                 self.admit_order.append(req.rid)
-                self.ttft[req.rid] = time.perf_counter() - self._t0
+                self.ttft[req.rid] = (time.perf_counter()
+                                      - self._submit_t[req.rid])
                 self.slots[idx] = _Slot(req, [])
                 self._token_arrived(idx, first)
 
@@ -165,9 +205,8 @@ class ContinuousScheduler:
         A slot that hits EOS or its budget mid-burst finishes there and
         its remaining burst tokens are dropped (its caches are reset, so
         nothing stale survives).  Returns the number of busy slots."""
-        if self._t0 is None:
-            self._t0 = time.perf_counter()
         self._admit()
+        self.peak_active = max(self.peak_active, self.active)
         busy = [i for i, s in enumerate(self.slots) if s is not None]
         if not busy:
             return 0
@@ -224,17 +263,24 @@ class ContinuousScheduler:
             "requests": len(self.results),
             "decode_steps": self.decode_steps,
             "occupancy": round(self.occupancy, 4),
+            "peak_active": self.peak_active,
             "tokens_emitted": self.tokens_emitted,
             "tokens_per_step": round(self.tokens_per_step, 4),
             "ttft_s": _summ(self.ttft),
             "latency_s": _summ(self.latency),
+            "queue_wait_s": _summ(self.queue_wait),
             "per_request": {
                 str(rid): {
                     "tokens": int(len(self.results[rid])),
                     "ttft_s": round(self.ttft.get(rid, 0.0), 6),
                     "latency_s": round(self.latency.get(rid, 0.0), 6),
+                    "queue_wait_s": round(self.queue_wait.get(rid, 0.0),
+                                          6),
                 } for rid in sorted(self.results)},
         }
+        paged = getattr(self.engine, "paged_stats", None)
+        if paged is not None:
+            out["paged"] = paged()
         spec_k = int(getattr(self.engine, "spec_k", 0))
         if spec_k:
             out["spec"] = {

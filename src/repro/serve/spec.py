@@ -358,7 +358,7 @@ def _score_lp(h2, w, ids, *, valid, cap, temp, spec: SpecConfig):
 
 
 def build_self_prefill(arch: Arch, sc: ServeConfig, spec: SpecConfig,
-                       shard=None):
+                       shard=None, extend: bool = False):
     """batch=1 prefill that also seeds the slot's MTP draft state.
 
     prefill(params, slot_caches, batch, true_len, rng) ->
@@ -367,7 +367,8 @@ def build_self_prefill(arch: Arch, sc: ServeConfig, spec: SpecConfig,
     `tok` is the usual first sampled token; `draft` holds the K head
     proposals for the tokens AFTER it (head h at the last real prompt
     position predicts offset h+1), and `draft_lp` their head log-probs
-    (zeros in greedy mode — never consulted).
+    (zeros in greedy mode — never consulted).  ``extend=True`` builds
+    the cache-EXTENSION variant (paged prefix-hit suffix prefill).
     """
     k_spec = spec.k
     valid = arch.vocab_size
@@ -379,7 +380,8 @@ def build_self_prefill(arch: Arch, sc: ServeConfig, spec: SpecConfig,
 
     def prefill(params, caches, batch, true_len, rng):
         h_last, caches = prefill_last_hidden(arch, params, caches, batch,
-                                             true_len, shard=shard)
+                                             true_len, shard=shard,
+                                             decode=extend)
         r_tok, r_draft = jax.random.split(rng)
         w = params["lm_head"]
         tok = sampler(h_last, w, r_tok, sc.temperature)          # (1,)
@@ -535,11 +537,13 @@ class SelfSpecEngine(Engine):
         super().__init__(arch, params, sc, jit=jit)
         step = build_self_spec_step(arch, sc, self.spec, self._axes)
         prefill = build_self_prefill(arch, sc, self.spec)
+        prefill_ext = build_self_prefill(arch, sc, self.spec, extend=True)
         wrap = jax.jit if jit else (lambda f, **kw: f)
         dn = ({"donate_argnums": (1,)}
               if jit and jax.default_backend() != "cpu" else {})
         self._spec_step = wrap(step, **dn)
         self._prefill_mtp = wrap(prefill)
+        self._prefill_mtp_ext = wrap(prefill_ext)
         if sc.autotune:
             self._tune_self_spec_plans()
 
@@ -585,13 +589,14 @@ class SelfSpecEngine(Engine):
 
     def prefill_into_slot(self, slot: int, prompt, frontend_embeds=None
                           ) -> int:
-        batch, slot_caches, true_len = self._prefill_inputs(
-            prompt, frontend_embeds)
-        tok, draft, d_lp, slot_caches = self._prefill_mtp(
+        batch, slot_caches, true_len, ctx = self._slot_prefill_view(
+            slot, prompt, frontend_embeds)
+        fn = (self._prefill_mtp_ext if ctx.get("ext")
+              else self._prefill_mtp)
+        tok, draft, d_lp, slot_caches = fn(
             self.params, slot_caches, batch, jnp.int32(true_len),
             self._split())
-        self.caches = self._insert(self.caches, slot_caches,
-                                   jnp.int32(slot))
+        self._commit_slot(slot, slot_caches, ctx)
         self._draft = self._draft.at[slot].set(draft)
         self._draft_lp = self._draft_lp.at[slot].set(d_lp)
         tok = int(jax.device_get(tok)[0])

@@ -1,0 +1,212 @@
+"""Block-pool allocator + prefix trie + paged-tree builders (host side).
+
+Exact bookkeeping assertions: refcounts, free-list recycling, fork /
+copy-on-write, proper-prefix-only trie matching, LRU leaf eviction, and
+the slab -> paged tree rewrite (DESIGN.md §8)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import kvpool
+from repro.serve.kvpool import (NULL_BLOCK, BlockPool, PagedConfig,
+                                PoolExhausted, PrefixCache, paged_config)
+
+
+def make_pool(n_blocks=8, block_size=4, nb_slot=4):
+    return BlockPool(PagedConfig(block_size=block_size, n_blocks=n_blocks,
+                                 max_blocks_per_slot=nb_slot))
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+
+def test_alloc_free_roundtrip_never_hands_out_null():
+    pool = make_pool(n_blocks=5)
+    got = pool.alloc(4)
+    assert NULL_BLOCK not in got and len(set(got)) == 4
+    assert pool.free_blocks == 0 and pool.used_blocks == 4
+    with pytest.raises(PoolExhausted):
+        pool.alloc(1)
+    recycled = pool.free(got)
+    assert sorted(recycled) == sorted(got)
+    assert pool.free_blocks == 4 and pool.used_blocks == 0
+    # null block is pinned: freeing a chain containing it is a no-op there
+    assert pool.free([NULL_BLOCK]) == []
+
+
+def test_fork_refcounts_and_free_order():
+    pool = make_pool()
+    chain = pool.alloc(2)
+    shared = pool.fork(chain)
+    assert shared == chain
+    assert all(pool.refcount(b) == 2 for b in chain)
+    assert pool.free(chain) == []          # one ref left -> not recycled
+    assert sorted(pool.free(shared)) == sorted(chain)
+    with pytest.raises(ValueError):
+        pool.free(chain)                   # double free
+
+
+def test_fork_of_unallocated_block_raises():
+    pool = make_pool()
+    with pytest.raises(ValueError):
+        pool.fork([3])                     # never allocated
+    with pytest.raises(ValueError):
+        pool.fork([NULL_BLOCK])
+
+
+def test_writable_block_copy_on_write():
+    pool = make_pool()
+    chain = pool.alloc(2)
+    # exclusively owned: no copy
+    bid, donor = pool.writable_block(chain, 0)
+    assert bid == chain[0] and donor is None
+    # shared: a fresh block replaces it in the chain, donor reported
+    other = pool.fork(list(chain))
+    old = chain[1]
+    bid, donor = pool.writable_block(chain, 1)
+    assert donor == old and bid != old
+    assert chain[1] == bid
+    assert pool.refcount(old) == 1 and pool.refcount(bid) == 1
+    assert other[1] == old                 # the other owner is untouched
+
+
+def test_paged_config_defaults_to_slab_parity():
+    pc = paged_config(block_size=16, max_len=64, batch_size=3)
+    assert pc.max_blocks_per_slot == 4
+    assert pc.n_blocks == 3 * 4 + 1        # worst-case slots + null
+    assert pc.slot_capacity == 64
+    assert pc.blocks_for(1) == 1 and pc.blocks_for(17) == 2
+
+
+# ---------------------------------------------------------------------------
+# prefix trie
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_match_is_proper_prefix_only():
+    pool = make_pool(n_blocks=16)
+    trie = PrefixCache(pool)
+    prompt = np.arange(12, dtype=np.int32)          # 3 full blocks of 4
+    chain = pool.alloc(3)
+    trie.insert(prompt, chain)
+    assert all(pool.refcount(b) == 2 for b in chain)   # trie's own ref
+    # identical prompt: at most (len-1)//bs = 2 blocks may match — one
+    # token must remain for the suffix prefill
+    assert trie.match(prompt) == chain[:2]
+    # longer prompt sharing the prefix matches all 3 cached blocks
+    assert trie.match(np.arange(20, dtype=np.int32)) == chain
+    # diverging content matches nothing past the divergence
+    other = np.arange(12, dtype=np.int32)
+    other[5] = 99
+    assert trie.match(other) == chain[:1]
+    assert trie.match(np.arange(3, dtype=np.int32)) == []
+    assert trie.hits == 3 and trie.hit_blocks == 2 + 3 + 1
+
+
+def test_prefix_insert_keeps_existing_nodes():
+    pool = make_pool(n_blocks=16)
+    trie = PrefixCache(pool)
+    prompt = np.arange(8, dtype=np.int32)
+    c1 = pool.alloc(2)
+    trie.insert(prompt, c1)
+    c2 = pool.alloc(2)
+    trie.insert(prompt, c2)                # duplicate content
+    assert trie.match(np.arange(12, dtype=np.int32)) == c1
+    assert pool.refcount(c2[0]) == 1       # no trie ref taken for dups
+
+
+def test_lru_leaf_eviction_frees_blocks_deepest_first():
+    pool = make_pool(n_blocks=7, block_size=4)
+    trie = PrefixCache(pool)
+    a = np.arange(12, dtype=np.int32)                 # blocks A0 A1 A2
+    chain = pool.alloc(3)
+    trie.insert(a, chain)
+    pool.free(chain)                                  # trie holds the refs
+    assert pool.free_blocks == 3
+    b = np.concatenate([a[:4], 50 + np.arange(8)]).astype(np.int32)
+    cb = [trie.match(b)[0]] + pool.alloc(2)           # shares A0
+    pool.fork(cb[:1])
+    trie.insert(b, cb)
+    pool.free(cb)
+    assert pool.free_blocks == 1
+    # need 3 blocks -> evict LRU leaves; branch A (older tick) goes first
+    freed = trie.evict(3)
+    assert freed >= 2 and pool.free_blocks >= 3
+    # the shared root block A0 survives only while a child needs it
+    assert trie.match(a) != chain[:2] or trie.match(a) == chain[:1]
+
+
+def test_clear_releases_every_trie_reference():
+    pool = make_pool(n_blocks=8)
+    trie = PrefixCache(pool)
+    prompt = np.arange(12, dtype=np.int32)
+    chain = pool.alloc(3)
+    trie.insert(prompt, chain)
+    trie.insert(np.concatenate([prompt[:4], 90 + np.arange(8)])
+                .astype(np.int32), [chain[0]] + pool.alloc(2))
+    pool.free(chain)
+    trie.clear()
+    assert pool.used_blocks == 2           # only the alloc(2) above
+    assert trie.match(prompt) == []
+
+
+# ---------------------------------------------------------------------------
+# paged trees
+# ---------------------------------------------------------------------------
+
+
+def _slab(l, b, s, nkv, hd, dtype=jnp.bfloat16):
+    lead = (l,) if l else ()
+    return {"k": jnp.zeros(lead + (b, s, nkv, hd), dtype),
+            "v": jnp.zeros(lead + (b, s, nkv, hd), dtype),
+            "len": jnp.zeros(lead + (b,), jnp.int32)}
+
+
+@pytest.mark.parametrize("lead", [0, 3])
+def test_paged_tree_rewrites_slab_kv(lead):
+    pc = PagedConfig(block_size=4, n_blocks=9, max_blocks_per_slot=4)
+    tree = {"self": _slab(lead, 2, 16, 2, 8),
+            "ring": {"k": jnp.zeros((2, 8, 2, 8)), "v": jnp.zeros((2, 8, 2, 8)),
+                     "pos": jnp.zeros((2, 8), jnp.int32),
+                     "len": jnp.zeros((2,), jnp.int32)},
+            "state": (jnp.zeros((2, 5)),)}
+    assert kvpool.count_pageable(tree) == 1
+    out = kvpool.paged_tree(tree, pc)
+    assert kvpool.count_paged(out) == 1
+    sub = out["self"]
+    prefix = (3,) if lead else ()
+    assert sub["kp"].shape == prefix + (9, 4, 2, 8)
+    assert sub["kp"].dtype == jnp.bfloat16
+    assert sub["table"].shape == prefix + (2, 4)
+    assert sub["table"].dtype == jnp.int32
+    assert sub["len"].shape == prefix + (2,)
+    # ring + recurrent leaves pass through untouched (same arrays)
+    assert out["ring"]["pos"] is tree["ring"]["pos"]
+    assert out["ring"]["k"] is tree["ring"]["k"]
+    assert out["state"][0] is tree["state"][0]
+    # works under eval_shape too (the cache_batch_axes path)
+    specs = jax.eval_shape(lambda t: kvpool.paged_tree(t, pc), tree)
+    assert specs["self"]["vp"].shape == prefix + (9, 4, 2, 8)
+
+
+def test_fill_tables_and_copy_block():
+    pc = PagedConfig(block_size=2, n_blocks=4, max_blocks_per_slot=3)
+    tree = kvpool.paged_tree({"a": _slab(2, 2, 6, 1, 4)}, pc)
+    tab = np.array([[1, 2, 0], [3, 0, 0]], np.int32)
+    filled = kvpool.fill_tables(tree, tab)
+    assert filled["a"]["table"].shape == (2, 2, 3)
+    np.testing.assert_array_equal(np.asarray(filled["a"]["table"][1]), tab)
+    marked = filled["a"]["kp"].at[:, 3].set(7.0)
+    filled["a"]["kp"] = marked
+    copied = kvpool.copy_block(filled, dst=1, src=3)
+    np.testing.assert_array_equal(np.asarray(copied["a"]["kp"][:, 1]),
+                                  np.asarray(marked[:, 3]))
+
+
+def test_cache_tree_bytes():
+    tree = _slab(0, 1, 8, 1, 4, dtype=jnp.float32)
+    assert kvpool.cache_tree_bytes(tree) == 2 * 8 * 4 * 4 + 1 * 4

@@ -41,6 +41,15 @@ def test_serve_cli(capsys):
     assert out.shape == (2, 3)
 
 
+def test_serve_cli_paged(capsys):
+    from repro.launch.serve import main
+    out = main(["--arch", "qwen3-0.6b", "--reduced", "--batch", "2",
+                "--prompt-len", "6", "--max-new", "3", "--paged",
+                "--block-size", "8", "--paged-impl", "jax"])
+    assert out.shape == (2, 3)
+    assert "paged:" in capsys.readouterr().out
+
+
 def test_dryrun_cell_enumeration():
     from repro.launch.dryrun import iter_cells
     cells = list(iter_cells())

@@ -1,0 +1,269 @@
+"""Paged serving engine: token identity vs the dense-slab engine,
+prefix-cache reuse, copy-on-write, pool backpressure, eviction.
+
+Greedy decode on the reduced models is deterministic, so token-level
+equality between the paged and slab engines is an EXACT end-to-end check
+of the whole paged path (pool writes, block-table decode, suffix-only
+prefill after prefix hits, self-spec rollback as table truncation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import with_mtp
+from repro.models.registry import get_arch, init_params
+from repro.serve import (ContinuousScheduler, Engine, PagedEngine,
+                         PagedSelfSpecEngine, PoolExhausted,
+                         SelfSpecEngine, ServeConfig, SpecConfig)
+
+
+def _arch_params(arch_id="qwen3-0.6b", mtp=0):
+    arch = get_arch(arch_id, reduced=True)
+    if mtp:
+        arch = with_mtp(arch, mtp)
+    return arch, init_params(arch, jax.random.PRNGKey(0))
+
+
+def _serve(engine, prompts, max_new=4, fe=None, **sched_kw):
+    sched = ContinuousScheduler(engine, max_new_tokens=max_new, **sched_kw)
+    rids = [sched.submit(p, frontend_embeds=fe) for p in prompts]
+    res = sched.run()
+    return [res[r] for r in rids], sched
+
+
+def _prompts(vocab, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, (n,)).astype(np.int32) for n in lens]
+
+
+@pytest.mark.parametrize("impl", ["jax", "pallas"])
+def test_paged_identical_to_slab_mixed_lengths(impl):
+    arch, params = _arch_params()
+    prompts = _prompts(arch.vocab_size, (3, 11, 7, 5, 9))   # > slots
+    ref, _ = _serve(Engine(arch, params,
+                           ServeConfig(batch_size=3, max_len=64)), prompts)
+    eng = PagedEngine(arch, params, ServeConfig(
+        batch_size=3, max_len=64, paged=True, block_size=8,
+        paged_impl=impl))
+    out, sched = _serve(eng, prompts)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+    assert sched.stats()["paged"]["enabled"]
+    # every request finished -> only prefix-cached blocks stay live
+    assert eng.pool.used_blocks <= eng.prefix.hit_blocks + 8
+
+
+@pytest.mark.parametrize("arch_id,kw", [
+    ("recurrentgemma-9b", {}),
+    ("xlstm-125m", {}),
+    ("seamless-m4t-medium", {"enc_len": 8}),
+])
+def test_paged_other_families_identical(arch_id, kw):
+    """encdec pages its self-attention KV; the recurrent families have
+    nothing pageable and must degrade to exact slab behavior."""
+    arch, params = _arch_params(arch_id)
+    fe = None
+    if arch.family == "encdec":
+        fe = jax.random.normal(jax.random.PRNGKey(1),
+                               (1, 8, arch.cfg.d_model)).astype(
+            jnp.dtype(arch.cfg.compute_dtype))
+    prompts = _prompts(arch.vocab_size, (5, 7, 4))
+    ref, _ = _serve(Engine(arch, params,
+                           ServeConfig(batch_size=2, max_len=48, **kw)),
+                    prompts, fe=fe)
+    eng = PagedEngine(arch, params, ServeConfig(
+        batch_size=2, max_len=48, paged=True, block_size=8,
+        paged_impl="jax", **kw))
+    out, _ = _serve(eng, prompts, fe=fe)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+    assert eng.paged_stats()["enabled"] == (arch.family == "encdec")
+
+
+def test_prefix_hit_prefills_fewer_tokens_and_stays_exact():
+    """Prefix-hit identity is asserted at cache_dtype == compute dtype:
+    the ONLY numeric difference a hit can introduce is the cache's
+    storage rounding (a cold prefill attends fresh full-precision K/V,
+    a hit reads the cached copy — the same rounding every decode step
+    already sees).  With a precision-preserving cache the suffix rows
+    are bit-identical to a cold prefill's by construction
+    (`extend_attention` + the shared+suffix == cold-bucket padding)."""
+    arch, params = _arch_params()
+    eng = PagedEngine(arch, params, ServeConfig(
+        batch_size=2, max_len=64, paged=True, block_size=4,
+        paged_impl="jax", cache_dtype="float32"))
+    p = np.arange(1, 14, dtype=np.int32)                 # 13 tokens
+    out, _ = _serve(eng, [p, p])
+    np.testing.assert_array_equal(out[0], out[1])
+    # the second admit reused 3 full blocks (12 tokens)
+    cold, hit = eng.prefill_token_log
+    assert hit < cold
+    assert eng.prefix.hits == 1 and eng.prefix.hit_blocks == 3
+    # and matches the slab engine exactly
+    slab = Engine(arch, params, ServeConfig(batch_size=2, max_len=64,
+                                            cache_dtype="float32"))
+    ref, _ = _serve(slab, [p])
+    np.testing.assert_array_equal(out[1], ref[0])
+
+
+def test_prefix_hit_extends_a_longer_prompt():
+    """A prompt sharing only a PREFIX (not the whole content) adopts the
+    cached chain and decodes exactly like its slab twin (see the cache-
+    dtype note on the test above)."""
+    arch, params = _arch_params()
+    rng = np.random.default_rng(5)
+    base = rng.integers(1, arch.vocab_size, (16,)).astype(np.int32)
+    longer = np.concatenate([base, rng.integers(
+        1, arch.vocab_size, (7,)).astype(np.int32)])
+    eng = PagedEngine(arch, params, ServeConfig(
+        batch_size=2, max_len=64, paged=True, block_size=4,
+        paged_impl="jax", cache_dtype="float32"))
+    out, _ = _serve(eng, [base, longer])
+    assert eng.prefix.hits == 1
+    slab = Engine(arch, params, ServeConfig(batch_size=2, max_len=64,
+                                            cache_dtype="float32"))
+    ref, _ = _serve(slab, [base, longer])
+    np.testing.assert_array_equal(out[0], ref[0])
+    np.testing.assert_array_equal(out[1], ref[1])
+
+
+def test_encdec_prefix_scope_keyed_on_encoder_input():
+    """Regression: decoder self-attn KV depends on cross-attention over
+    the ENCODER input, so identical decoder prompts under different
+    frame embeddings must NOT share cached blocks — the trie scopes
+    chains by a digest of the frontend embeddings."""
+    arch, params = _arch_params("seamless-m4t-medium")
+    cdt = jnp.dtype(arch.cfg.compute_dtype)
+    fe_a = jax.random.normal(jax.random.PRNGKey(1),
+                             (1, 8, arch.cfg.d_model)).astype(cdt)
+    fe_b = jax.random.normal(jax.random.PRNGKey(2),
+                             (1, 8, arch.cfg.d_model)).astype(cdt)
+    prompt = np.arange(1, 18, dtype=np.int32)      # 2 full blocks of 8
+    eng = PagedEngine(arch, params, ServeConfig(
+        batch_size=2, max_len=48, paged=True, block_size=8,
+        paged_impl="jax", enc_len=8))
+    sched = ContinuousScheduler(eng, max_new_tokens=5)
+    r_a = sched.submit(prompt, frontend_embeds=fe_a)
+    r_b = sched.submit(prompt, frontend_embeds=fe_b)   # different frames
+    r_a2 = sched.submit(prompt, frontend_embeds=fe_a)  # same frames as A
+    res = sched.run()
+    # different encoder input: no reuse; same encoder input: reuse
+    assert eng.prefix.hits == 1
+    np.testing.assert_array_equal(res[r_a], res[r_a2])
+    # each output matches the slab engine under ITS OWN frames
+    slab = Engine(arch, params, ServeConfig(batch_size=2, max_len=48,
+                                            enc_len=8))
+    s2 = ContinuousScheduler(slab, max_new_tokens=5)
+    ref_a = s2.submit(prompt, frontend_embeds=fe_a)
+    ref_b = s2.submit(prompt, frontend_embeds=fe_b)
+    ref = s2.run()
+    np.testing.assert_array_equal(res[r_a], ref[ref_a])
+    np.testing.assert_array_equal(res[r_b], ref[ref_b])
+
+
+def test_paged_self_spec_identical_to_slab_self_spec():
+    arch, params = _arch_params(mtp=3)
+    prompts = _prompts(arch.vocab_size, (13, 5))
+    sc = dict(batch_size=2, max_len=64)
+    ref, _ = _serve(SelfSpecEngine(arch, params, ServeConfig(**sc),
+                                   SpecConfig(k=3)), prompts, max_new=6)
+    eng = PagedSelfSpecEngine(arch, params,
+                              ServeConfig(paged=True, block_size=4,
+                                          paged_impl="jax", **sc),
+                              SpecConfig(k=3))
+    out, sched = _serve(eng, prompts, max_new=6)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+    assert sched.stats()["spec"]["mode"] == "self"
+
+
+def test_pool_backpressure_requeues_until_blocks_free():
+    """A pool too small for every request at once still serves them all:
+    exhausted admits go back to the queue and drain as slots finish."""
+    arch, params = _arch_params()
+    prompts = _prompts(arch.vocab_size, (9, 9, 9), seed=2)
+    ref, _ = _serve(Engine(arch, params,
+                           ServeConfig(batch_size=2, max_len=32)), prompts)
+    # 4 usable blocks of 4 = 16 tokens: exactly one request (9 prompt +
+    # 4 new - 1 = 12 -> padded prefill 16) fits at a time
+    eng = PagedEngine(arch, params, ServeConfig(
+        batch_size=2, max_len=32, paged=True, block_size=4,
+        pool_blocks=5, paged_impl="jax", prefix_cache=False))
+    out, sched = _serve(eng, prompts)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+    assert sched.peak_active == 1          # pool-bound, not slot-bound
+    assert eng.pool.used_blocks == 0       # everything released
+
+
+def test_request_that_can_never_fit_raises():
+    arch, params = _arch_params()
+    eng = PagedEngine(arch, params, ServeConfig(
+        batch_size=1, max_len=32, paged=True, block_size=4,
+        pool_blocks=3, paged_impl="jax"))   # 2 usable blocks = 8 tokens
+    sched = ContinuousScheduler(eng, max_new_tokens=4)
+    sched.submit(np.arange(1, 20, dtype=np.int32))
+    with pytest.raises(PoolExhausted):
+        sched.run()
+
+
+def test_eviction_recycles_cached_prefixes_under_pressure():
+    arch, params = _arch_params()
+    eng = PagedEngine(arch, params, ServeConfig(
+        batch_size=1, max_len=32, paged=True, block_size=4,
+        pool_blocks=9, paged_impl="jax"))   # 8 usable blocks
+    rng = np.random.default_rng(9)
+    prompts = _prompts(arch.vocab_size, (9, 10, 11, 9), seed=9)
+    out, _ = _serve(eng, prompts, max_new=3)
+    assert eng.prefix.evicted_blocks > 0    # trie had to give blocks back
+    slab = Engine(arch, params, ServeConfig(batch_size=1, max_len=32))
+    ref, _ = _serve(slab, prompts, max_new=3)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_copy_on_write_on_externally_forked_chain():
+    """Appending into a chain whose tail block is shared must un-share
+    it first (the speculative-rollback safety property)."""
+    arch, params = _arch_params()
+    eng = PagedEngine(arch, params, ServeConfig(
+        batch_size=2, max_len=32, paged=True, block_size=4,
+        paged_impl="jax", prefix_cache=False))
+    sched = ContinuousScheduler(eng, max_new_tokens=6)
+    rid = sched.submit(np.arange(1, 8, dtype=np.int32))   # 7 tokens
+    sched.step()                                          # prefill only
+    # simulate an external owner of the slot's chain (e.g. a fork API
+    # user): the partial tail block becomes shared
+    chain_before = list(eng._chains[0])
+    forked = eng.pool.fork(chain_before)
+    tail = chain_before[-1]
+    res = sched.run()[rid]
+    # the tail block was copy-on-written before the next append
+    assert eng.pool.refcount(tail) == 1          # only the fork holds it
+    assert len(res) == 6
+    # the forked chain still holds the ORIGINAL blocks
+    assert forked == chain_before
+    eng.pool.free(forked)
+    # and decode under COW matched the slab engine exactly
+    slab = Engine(arch, params, ServeConfig(batch_size=2, max_len=32))
+    ref, _ = _serve(slab, [np.arange(1, 8, dtype=np.int32)], max_new=6)
+    np.testing.assert_array_equal(res, ref[0])
+
+
+def test_paged_rejects_quantized_cache():
+    arch, params = _arch_params()
+    with pytest.raises(NotImplementedError):
+        PagedEngine(arch, params, ServeConfig(
+            batch_size=1, max_len=32, paged=True, quantize_cache=True))
+
+
+def test_generate_convenience_runs_paged():
+    arch, params = _arch_params()
+    eng = PagedEngine(arch, params, ServeConfig(
+        batch_size=2, max_len=48, paged=True, block_size=8,
+        paged_impl="jax"))
+    prompts = np.stack([np.arange(1, 9, dtype=np.int32)] * 2)
+    out = eng.generate(prompts, max_new_tokens=4)
+    slab = Engine(arch, params, ServeConfig(batch_size=2, max_len=48))
+    np.testing.assert_array_equal(out, slab.generate(prompts, 4))

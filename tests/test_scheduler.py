@@ -1,13 +1,25 @@
 """Continuous-batching scheduler: slot state machine against a scripted
-engine (exact assertions on recycling, fairness, ghost rows) plus an
-end-to-end pass against the real reduced model."""
+engine (exact assertions on recycling, fairness, ghost rows, timing
+semantics, admit caps) plus an end-to-end pass against the real reduced
+model."""
 
 import jax
 import numpy as np
 import pytest
 
+import repro.serve.scheduler as sched_mod
 from repro.models.registry import get_arch, init_params
 from repro.serve import ServeConfig, Engine, ContinuousScheduler
+
+
+class FakeClock:
+    """Deterministic stand-in for the scheduler's ``time`` module."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def perf_counter(self):
+        return self.t
 
 
 class FakeEngine:
@@ -142,6 +154,82 @@ def test_token_streaming_callback_order():
         np.testing.assert_array_equal(toks, res[rid])
         dones = [d for r, _, d in seen if r == rid]
         assert dones == [False, False, True]
+
+
+def test_ttft_measured_from_submit_not_scheduler_start(monkeypatch):
+    """Regression: TTFT/latency used to be measured from the scheduler's
+    FIRST step (`self._t0`), so a request submitted mid-run reported the
+    whole elapsed run as its TTFT.  They must run from submit()."""
+    clock = FakeClock()
+    monkeypatch.setattr(sched_mod, "time", clock)
+    eng = FakeEngine(batch_size=1)
+    sched = ContinuousScheduler(eng, max_new_tokens=3)
+    r0 = sched.submit(np.arange(3))
+    sched.step()                      # r0 admitted at t=0
+    sched.step()
+    clock.t = 100.0                   # long-running session...
+    r1 = sched.submit(np.arange(4))   # ...then a request arrives NOW
+    clock.t = 101.0
+    sched.run()
+    assert sched.ttft[r0] == 0.0
+    # r1 was admitted 1s after ITS submit; its ttft is that 1s of wait —
+    # NOT the ~101s since the scheduler started
+    assert sched.ttft[r1] == pytest.approx(1.0)
+    assert sched.queue_wait[r1] == pytest.approx(1.0)
+    assert sched.latency[r1] == pytest.approx(1.0)
+
+
+def test_ttft_and_latency_include_queue_wait(monkeypatch):
+    """A request stuck behind a full batch reports its wait."""
+    clock = FakeClock()
+    monkeypatch.setattr(sched_mod, "time", clock)
+    eng = FakeEngine(batch_size=1)
+    sched = ContinuousScheduler(eng, max_new_tokens=3)
+    r0 = sched.submit(np.arange(2))
+    r1 = sched.submit(np.arange(2))   # queued behind r0, both at t=0
+    while sched.queue or sched.active:
+        clock.t += 1.0                # 1s per scheduler tick
+        sched.step()
+    # r0 finishes at the end of tick 2; r1 is admitted on tick 3
+    assert sched.queue_wait[r1] == pytest.approx(3.0)
+    assert sched.ttft[r1] >= sched.queue_wait[r1]
+    assert sched.latency[r1] >= sched.ttft[r1]
+    assert sched.latency[r0] >= sched.ttft[r0] >= 0.0
+
+
+def test_admit_cap_limits_prefills_per_tick():
+    eng = FakeEngine(batch_size=3)
+    sched = ContinuousScheduler(eng, max_new_tokens=4,
+                                max_admits_per_step=1)
+    rids = [sched.submit(np.arange(2)) for _ in range(6)]
+    sched.step()
+    assert len(eng.prefill_log) == 1
+    sched.step()
+    assert len(eng.prefill_log) == 2
+    # the burst is still draining, but the first-admitted slot kept
+    # decoding the whole time: prefill token + 2 decode tokens
+    assert len(sched.slots[0].tokens) == 3
+    assert sched.queue                 # burst not fully admitted yet
+    res = sched.run()
+    assert sorted(res) == sorted(rids)
+    # capped admission changes SCHEDULING only, not results
+    np.testing.assert_array_equal(res[rids[0]], [1, 2, 3, 4])
+    np.testing.assert_array_equal(res[rids[5]], [501, 502, 503, 504])
+
+
+def test_admit_cap_validation():
+    with pytest.raises(ValueError):
+        ContinuousScheduler(FakeEngine(), max_admits_per_step=0)
+
+
+def test_peak_active_tracks_concurrency():
+    eng = FakeEngine(batch_size=3)
+    sched = ContinuousScheduler(eng, max_new_tokens=2)
+    for _ in range(2):
+        sched.submit(np.arange(2))
+    sched.run()
+    assert sched.peak_active == 2
+    assert sched.stats()["peak_active"] == 2
 
 
 # ---------------------------------------------------------------------------

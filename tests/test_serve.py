@@ -176,6 +176,55 @@ def test_bucketed_prefill_matches_exact():
     np.testing.assert_array_equal(outs[True], outs[False])
 
 
+@pytest.mark.parametrize("arch_id", ["recurrentgemma-9b", "xlstm-125m"])
+def test_recurrent_bucketed_prefill_token_identical_and_fewer_shapes(
+        arch_id):
+    """Regression: pow2 prefill bucketing used to cover only the
+    attention families, so griffin/xlstm recompiled the prefill jit for
+    EVERY distinct prompt length.  With the `true_len` pad-step masking
+    (rglru a=1/u=0, conv-state slice, ring pos=-1, sLSTM carry select,
+    mLSTM gate no-ops) the bucketed prefill is token-identical to the
+    exact-length one while compiling only O(log) shapes."""
+    arch = get_arch(arch_id, reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    lens = (3, 11, 7, 13, 9, 5)
+    prompts = [np.random.default_rng(i).integers(
+        1, arch.vocab_size, (n,)).astype(np.int32)
+        for i, n in enumerate(lens)]
+    outs, shapes = {}, {}
+    for bucket in (True, False):
+        eng = Engine(arch, params, ServeConfig(batch_size=2, max_len=48,
+                                               bucket_prefill=bucket))
+        rec = []
+        orig = eng._prefill
+        eng._prefill = (lambda p_, c, b, tl, r, _o=orig, _r=rec:
+                        (_r.append(b["tokens"].shape[1]) or
+                         _o(p_, c, b, tl, r)))
+        sched = ContinuousScheduler(eng, max_new_tokens=5)
+        rids = [sched.submit(p) for p in prompts]
+        res = sched.run()
+        outs[bucket] = [res[r] for r in rids]
+        shapes[bucket] = rec
+    for a, b in zip(outs[True], outs[False]):
+        np.testing.assert_array_equal(a, b)
+    # 6 distinct lengths compile 6 exact shapes but only 2 buckets
+    assert len(set(shapes[False])) == len(set(lens))
+    assert set(shapes[True]) == {8, 16}
+
+
+def test_griffin_bucket_capped_by_ring_window():
+    """Bucket pads must never wrap a griffin ring buffer: a prompt whose
+    bucket would exceed the window prefills at its exact length."""
+    arch = get_arch("recurrentgemma-9b", reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    window = arch.cfg.window
+    eng = Engine(arch, params,
+                 ServeConfig(batch_size=1, max_len=2 * window))
+    assert eng._bucket_for(3) == 8
+    assert eng._bucket_for(window) == window        # fits exactly
+    assert eng._bucket_for(window + 1) == window + 1  # exact, no pad
+
+
 def test_compiled_decode_step_is_logits_free():
     """The acceptance gate: no (B, V) intermediate in the compiled decode
     step — and the detector itself flags a dense decode (negative case
@@ -187,7 +236,7 @@ def test_compiled_decode_step_is_logits_free():
     params = init_params(arch, jax.random.PRNGKey(0))
     sc = ServeConfig(batch_size=4, max_len=32)
     eng = Engine(arch, params, sc)
-    _, decode = build_serve_fns(arch, sc)
+    *_, decode = build_serve_fns(arch, sc)
     cur = jnp.zeros((4, 1), jnp.int32)
     txt = (jax.jit(decode)
            .lower(params, eng.caches, cur, jax.random.PRNGKey(0))
