@@ -1,0 +1,132 @@
+"""Backward-pass gradient filtering: tile statistics -> skip mask.
+
+DESIGN.md §9.  The fused-CE backward recomputes every (row-block,
+vocab-block) logit tile twice (dH and dW).  "Cut Your Losses" observes
+that at bf16 most softmax-gradient entries are numerically zero, so
+whole vocab tiles can be dropped from the recompute with no effect on
+training — IF the decision is sound.  This module turns the cheap tile
+statistic emitted by the forward's online-softmax scan into that
+decision, shared by the streaming (`lax.scan`) and Pallas backward
+paths, local and sharded:
+
+  tile stat   tmax[r, v] = max logit over the tile's VALID entries
+              (pad rows, pad/invalid columns and ignore-masked rows
+              excluded; -inf when nothing in the tile qualifies)
+
+  skip bound  every row i in block r has in-tile softmax mass
+                  sum_j p_ij  <=  block_v * exp(tmax[r, v] - lse_i)
+                              <=  block_v * exp(tmax[r, v] - min_lse[r])
+
+  predicate   skip[r, v] = bound < eps  AND  no row in block r has its
+              target id inside vocab tile v
+
+The target guard means the `p - 1` entry of a row is never dropped, so
+a skipped tile's gradient contribution is bounded by `gamma * eps` per
+row — below the bf16 rounding of the exact gradient for the eps values
+this is meant for.  Excluding ignore-masked rows from the stat makes
+the mask (and hence dW bits) invariant to the hidden states of ignored
+rows, and lets a fully-ignored batch skip every tile.
+
+Tensor-parallel shards compute their mask locally: `tmax` covers the
+shard's local vocab tiles, `col_offset` maps the global target ids onto
+local tile indices, and `lse` is the globally combined logsumexp (the
+same residual the backward already consumes).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import LossConfig
+
+_NEG_INF = float("-inf")
+_POS_INF = float("inf")
+
+
+def _block_min_lse(lse: jax.Array, y: jax.Array, block_rows: int,
+                   num_r: int, ignore_index: int) -> jax.Array:
+    """(num_r,) min lse over each block's live rows (+inf when none).
+
+    Pad rows and ignore-masked rows are excluded: their gradient rows
+    are exactly zero, so they must not tighten the mass bound.
+    """
+    n = lse.shape[0]
+    pad = num_r * block_rows - n
+    live = (y != ignore_index)
+    lse_live = jnp.where(live, lse.astype(jnp.float32), _POS_INF)
+    if pad:
+        lse_live = jnp.pad(lse_live, (0, pad), constant_values=_POS_INF)
+    return jnp.min(lse_live.reshape(num_r, block_rows), axis=1)
+
+
+def _block_has_target(y: jax.Array, block_rows: int, block_v: int,
+                      num_r: int, num_v: int, col_offset,
+                      ignore_index: int) -> jax.Array:
+    """(num_r, num_v) bool: vocab tile v holds a target id of row block r.
+
+    `col_offset` (traced OK) maps global target ids to this shard's
+    local column space; targets owned by other shards never pin a tile
+    here (their `p - 1` entry lives on the owning shard).
+    """
+    n = y.shape[0]
+    pad = num_r * block_rows - n
+    y = y.astype(jnp.int32)
+    if pad:
+        y = jnp.pad(y, (0, pad), constant_values=ignore_index)
+    local = y - jnp.asarray(col_offset, jnp.int32)
+    on_shard = (y != ignore_index) & (local >= 0) & (local < num_v * block_v)
+    # sentinel num_v: off-shard / ignored rows match no real tile
+    tile = jnp.where(on_shard, local // block_v, num_v)
+    tile = tile.reshape(num_r, block_rows)
+    return jnp.any(
+        tile[:, :, None] == jnp.arange(num_v, dtype=jnp.int32)[None, None, :],
+        axis=1)
+
+
+def tile_skip_mask(
+    tile_max: jax.Array,
+    lse: jax.Array,
+    y: jax.Array,
+    cfg: LossConfig,
+    *,
+    block_rows: int,
+    block_v: int,
+    col_offset=0,
+    eps: Optional[float] = None,
+) -> jax.Array:
+    """(num_r, num_v) bool skip mask from the forward's tile statistics.
+
+    Args:
+      tile_max: (num_r, num_v) f32 per-tile max VALID logit (post-softcap,
+        the same value the softmax saw), -inf for tiles with no valid
+        entry.  Row blocking must match `block_rows` over the UNPADDED
+        rows of `lse`/`y` (pad rows were excluded from the stat).
+      lse: (n,) combined logsumexp per row (global across TP shards).
+      y: (n,) global int target ids.
+      cfg: loss config; `cfg.grad_filter_eps` is the threshold unless
+        `eps` overrides it.
+      block_rows / block_v: the tiling `tile_max` was computed under.
+      col_offset: global vocab id of this shard's first local column.
+      eps: optional threshold override (property tests sweep it).
+
+    True  = the backward may drop this tile (mass bound < eps, no target).
+    False = the tile must be recomputed.
+    """
+    eps = cfg.grad_filter_eps if eps is None else eps
+    num_r, num_v = tile_max.shape
+    min_lse = _block_min_lse(lse, y, block_rows, num_r, cfg.ignore_index)
+    # upper bound on any live row's softmax mass inside the tile; the
+    # -inf/-inf corners (empty tile, no live rows) resolve to bound 0
+    bound = jnp.float32(block_v) * jnp.exp(
+        tile_max.astype(jnp.float32) - min_lse[:, None])
+    has_tgt = _block_has_target(y, block_rows, block_v, num_r, num_v,
+                                col_offset, cfg.ignore_index)
+    return (bound < jnp.float32(eps)) & ~has_tgt
+
+
+def skipped_fraction(skip: jax.Array) -> jax.Array:
+    """Fraction of (row-block, vocab-block) tiles the backward drops."""
+    return jnp.mean(skip.astype(jnp.float32))

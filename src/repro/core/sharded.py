@@ -49,24 +49,42 @@ from repro.core.streaming import (
 Mesh = jax.sharding.Mesh
 
 
-def _local_stats(h, w, y, cfg, impl, col_offset, total_valid, plan=None):
+def _local_stats(h, w, y, cfg, impl, col_offset, total_valid, plan=None,
+                 return_tile_stats=False):
+    """Per-shard forward stats; with `return_tile_stats` a fourth output
+    carries the grad-filter tile maxima (DESIGN.md §9), normalized to a
+    2-D (row_blocks, vocab_blocks) layout for both impls — streaming has
+    a single row block spanning all local rows."""
     if impl == "pallas":
         from repro.kernels.fused_ce.kernel import fwd_stats
         return fwd_stats(h, w, y, cfg, plan=plan, col_offset=col_offset,
-                         total_valid=total_valid)
-    return streaming_stats(h, w, y, cfg, col_offset=col_offset,
-                           total_valid=total_valid)
+                         total_valid=total_valid,
+                         return_tile_stats=return_tile_stats)
+    out = streaming_stats(h, w, y, cfg, col_offset=col_offset,
+                          total_valid=total_valid,
+                          return_tile_stats=return_tile_stats)
+    if return_tile_stats:
+        lse, zt, zs, tmax = out
+        return lse, zt, zs, tmax[None, :]
+    return out
 
 
 def _local_grads(h, w, y, lse, gamma, p_coeff, cfg, impl, col_offset,
-                 total_valid, plan=None):
+                 total_valid, plan=None, tile_stats=None):
+    """Per-shard backward; `tile_stats` (when filtering) is this shard's
+    LOCAL tile-max panel — the skip mask is derived against the globally
+    combined `lse` with the shard's own `col_offset`, so a target owned
+    by another shard never pins a tile here."""
     if impl == "pallas":
         from repro.kernels.fused_ce.kernel import bwd_grads
         return bwd_grads(h, w, y, lse, gamma, p_coeff, cfg, plan=plan,
-                         col_offset=col_offset, total_valid=total_valid)
+                         col_offset=col_offset, total_valid=total_valid,
+                         tile_stats=tile_stats)
     # streaming_grads folds p_coeff internally from (gamma, z_loss, lse)
     dh, dw = streaming_grads(h, w, y, lse, gamma, cfg,
-                             col_offset=col_offset, total_valid=total_valid)
+                             col_offset=col_offset, total_valid=total_valid,
+                             tile_stats=(None if tile_stats is None
+                                         else tile_stats[0]))
     return dh.astype(jnp.float32), dw.astype(jnp.float32)
 
 
@@ -130,6 +148,13 @@ def make_sharded_loss(
         idx = jax.lax.axis_index(vocab_axis)
         return (idx * v_local).astype(jnp.int32)
 
+    # gradient filtering (DESIGN.md §9): each shard's LOCAL tile-max panel
+    # rides the residuals — rows blocked over the shard's (gathered) rows,
+    # vocab blocked over its local vocab slice, so the residual spec is
+    # rows over rows_axes x vocab over vocab_axis for both layouts.
+    filtering = cfg.filter_grads
+    tmax_spec = P(rows_axes, vocab_axis)
+
     # ---------------- forward ----------------
     def _fwd_shard(h_l, w_l, y_l):
         if layout == "sp_gather":
@@ -138,9 +163,10 @@ def make_sharded_loss(
             y_l = jax.lax.all_gather(y_l, vocab_axis, axis=0, tiled=True)
         v_local = w_l.shape[0]
         total_valid = cfg.resolve_vocab(v_local * n_vocab_shards)
-        lse_p, zt_p, zs_p = _local_stats(
+        stats = _local_stats(
             h_l, w_l, y_l, cfg, impl, _offset(v_local), total_valid,
-            plan=plan)
+            plan=plan, return_tile_stats=filtering)
+        lse_p, zt_p, zs_p = stats[:3]
         lse = _combine_lse(lse_p, vocab_axis)
         z_tgt = jax.lax.psum(zt_p, vocab_axis)
         z_sum = jax.lax.psum(zs_p, vocab_axis)
@@ -156,12 +182,17 @@ def make_sharded_loss(
             loss = total / jnp.maximum(count, 1.0)
         else:
             loss = total
+        if filtering:
+            return loss, lse, count, stats[3]
         return loss, lse, count
 
+    fwd_out_specs = (P(), P(rows_axes), P())
+    if filtering:
+        fwd_out_specs = fwd_out_specs + (tmax_spec,)
     fwd_sharded = shard_map(
         _fwd_shard, mesh=mesh,
         in_specs=(h_spec, w_spec, y_spec),
-        out_specs=(P(), P(rows_axes), P()),
+        out_specs=fwd_out_specs,
         check_vma=False,
     )
 
@@ -169,7 +200,7 @@ def make_sharded_loss(
     # replicated over vocab_axis) for both layouts.
 
     # ---------------- backward ----------------
-    def _bwd_shard(h_l, w_l, y_l, lse_l, gamma_l):
+    def _bwd_shard(h_l, w_l, y_l, lse_l, gamma_l, tmax_l=None):
         if layout == "sp_gather":
             h_l = jax.lax.all_gather(h_l, vocab_axis, axis=0, tiled=True)
             y_l = jax.lax.all_gather(y_l, vocab_axis, axis=0, tiled=True)
@@ -178,7 +209,7 @@ def make_sharded_loss(
         p_coeff = gamma_l * (1.0 + 2.0 * jnp.float32(cfg.z_loss) * lse_l)
         dh_p, dw_l = _local_grads(
             h_l, w_l, y_l, lse_l, gamma_l, p_coeff, cfg, impl,
-            _offset(v_local), total_valid, plan=plan)
+            _offset(v_local), total_valid, plan=plan, tile_stats=tmax_l)
         if layout == "sp_gather":
             # reduce-scatter dH back to the SP layout (paper Fig 3c reverse)
             dh = jax.lax.psum_scatter(dh_p, vocab_axis, scatter_dimension=0,
@@ -190,10 +221,12 @@ def make_sharded_loss(
         dw = jax.lax.psum(dw_l, rows_axes)
         return dh.astype(h_l.dtype), dw.astype(w_l.dtype)
 
+    bwd_in_specs = (h_spec, w_spec, y_spec, P(rows_axes), P(rows_axes))
+    if filtering:
+        bwd_in_specs = bwd_in_specs + (tmax_spec,)
     bwd_sharded = shard_map(
         _bwd_shard, mesh=mesh,
-        in_specs=(h_spec, w_spec, y_spec,
-                  P(rows_axes), P(rows_axes)),
+        in_specs=bwd_in_specs,
         out_specs=(h_spec, w_spec),
         check_vma=False,
     )
@@ -201,15 +234,16 @@ def make_sharded_loss(
     # ---------------- custom_vjp assembly ----------------
     @jax.custom_vjp
     def loss_fn(h, w, y):
-        loss, _, _ = fwd_sharded(h, w, y)
-        return loss
+        return fwd_sharded(h, w, y)[0]
 
     def loss_fwd(h, w, y):
-        loss, lse, count = fwd_sharded(h, w, y)
-        return loss, (h, w, y, lse, count)
+        out = fwd_sharded(h, w, y)
+        loss, lse, count = out[:3]
+        tmax = out[3] if filtering else None
+        return loss, (h, w, y, lse, count, tmax)
 
     def loss_bwd(res, gbar):
-        h, w, y, lse, count = res
+        h, w, y, lse, count, tmax = res
         gbar = jnp.asarray(gbar, jnp.float32)
 
         def _gamma(y_l, count):
@@ -223,7 +257,8 @@ def make_sharded_loss(
             in_specs=(P(rows_axes), P()), out_specs=P(rows_axes),
             check_vma=False,
         )(y if layout == "2d" else _regather_rows(y), count)
-        dh, dw = bwd_sharded(h, w, y, lse, gamma)
+        args = (h, w, y, lse, gamma) + ((tmax,) if filtering else ())
+        dh, dw = bwd_sharded(*args)
         dy = np.zeros(y.shape, dtype=jax.dtypes.float0)
         return dh, dw, dy
 

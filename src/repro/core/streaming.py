@@ -80,11 +80,19 @@ def _chunk_logits(h32, w_chunk, local_start, col_offset, v_orig, valid,
 def streaming_stats(
     h: jax.Array, w: jax.Array, y: jax.Array, cfg: LossConfig,
     *, col_offset=0, total_valid: Optional[int] = None,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    return_tile_stats: bool = False,
+):
     """Stream the vocab; return per-row (lse, z_target, z_sum).
 
     z_sum (sum of valid logits) is needed only for label smoothing; it is
     computed unconditionally because it is one extra VPU add per tile.
+
+    With `return_tile_stats=True` a fourth array is returned: the
+    per-chunk max logit over live rows and valid columns — shape
+    (n_chunks,), the gradient-filtering statistic of DESIGN.md §9
+    (ignore-masked rows are excluded so the backward's skip mask is
+    invariant to their hidden states).  The (lse, z_target, z_sum)
+    arithmetic is untouched either way.
 
     For tensor-parallel shards: `w` is the local vocab slice, `col_offset`
     (traced OK) is the global id of its first row, and `total_valid` the
@@ -102,6 +110,7 @@ def streaming_stats(
     h32 = h.astype(jnp.float32)
     y = y.astype(jnp.int32)
     col_offset = jnp.asarray(col_offset, jnp.int32)
+    live_row = (y != cfg.ignore_index)                     # (n,)
 
     def body(carry, inputs):
         m, a, z_sum, z_tgt = carry
@@ -123,7 +132,10 @@ def streaming_stats(
         # the next shard and must never match a target
         is_tgt = (col[None, :] == y[:, None]) & col_valid[None, :]
         z_tgt = z_tgt + jnp.sum(jnp.where(is_tgt, z, 0.0), axis=-1)
-        return (m_new, a, z_sum, z_tgt), None
+        ys = None
+        if return_tile_stats:
+            ys = jnp.max(jnp.where(live_row, chunk_max, _NEG_INF))
+        return (m_new, a, z_sum, z_tgt), ys
 
     init = (
         jnp.full((n,), _NEG_INF, dtype=jnp.float32),
@@ -131,9 +143,11 @@ def streaming_stats(
         jnp.zeros((n,), dtype=jnp.float32),
         jnp.zeros((n,), dtype=jnp.float32),
     )
-    (m, a, z_sum, z_tgt), _ = jax.lax.scan(
+    (m, a, z_sum, z_tgt), tmax = jax.lax.scan(
         body, init, (w_chunks, jnp.arange(n_chunks, dtype=jnp.int32)))
     lse = m + jnp.log(a)
+    if return_tile_stats:
+        return lse, z_tgt, z_sum, tmax
     return lse, z_tgt, z_sum
 
 
@@ -167,6 +181,7 @@ def streaming_grads(
     h: jax.Array, w: jax.Array, y: jax.Array,
     lse: jax.Array, gamma: jax.Array, cfg: LossConfig,
     *, col_offset=0, total_valid: Optional[int] = None,
+    tile_stats: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """dH, dW via chunked logit recompute (paper Alg. 2 / Appendix A.1).
 
@@ -174,6 +189,14 @@ def streaming_grads(
                           - (1-eps)*onehot - eps/valid ]        (valid cols)
     dH      = sum_chunks g_chunk @ W_chunk
     dW_chunk = g_chunk^T @ H
+
+    Gradient filtering (DESIGN.md §9): when `cfg.grad_filter_eps > 0` and
+    `tile_stats` carries the forward's per-chunk max logits, chunks whose
+    softmax-mass bound falls below the threshold (and which contain no
+    target id) are skipped via `lax.cond` — the tile GEMMs never run and
+    their dH/dW contribution is exactly zero.  With `tile_stats=None` or
+    eps == 0 the loop below is the exact backward, bit-identical to
+    before the knob existed.
 
     Sharded use: pass the shard's `col_offset` / global `total_valid` and
     the *globally combined* lse — dH is then this shard's partial (psum it
@@ -194,8 +217,16 @@ def streaming_grads(
     # row-wise coefficient applied to p_v (softmax part).
     p_coeff = gamma * (1.0 + 2.0 * jnp.float32(cfg.z_loss) * lse)
 
-    def body(dh, inputs):
-        w_chunk, idx = inputs
+    filtering = cfg.filter_grads and tile_stats is not None
+    if filtering:
+        from repro.core.filtering import tile_skip_mask
+        # one row block spanning the whole batch: the scan streams all
+        # rows at once, so the skip decision is per vocab chunk only
+        skip = tile_skip_mask(
+            tile_stats[None, :], lse, y, cfg, block_rows=n,
+            block_v=cfg.block_v, col_offset=col_offset)[0]   # (n_chunks,)
+
+    def compute(dh, w_chunk, idx):
         start = idx * cfg.block_v
         z, col, col_valid = _chunk_logits(
             h32, w_chunk, start, col_offset, v_orig, valid, cfg)
@@ -216,9 +247,26 @@ def streaming_grads(
                            ).astype(w_chunk.dtype)
         return dh, dw_chunk
 
-    dh, dw_chunks = jax.lax.scan(
-        body, jnp.zeros((n, d), jnp.float32),
-        (w_chunks, jnp.arange(n_chunks, dtype=jnp.int32)))
+    def body(dh, inputs):
+        w_chunk, idx = inputs
+        return compute(dh, w_chunk, idx)
+
+    def body_filtered(dh, inputs):
+        w_chunk, idx, skip_chunk = inputs
+        return jax.lax.cond(
+            skip_chunk,
+            lambda dh, w_chunk, idx: (
+                dh, jnp.zeros((cfg.block_v, d), w_chunk.dtype)),
+            compute, dh, w_chunk, idx)
+
+    idxs = jnp.arange(n_chunks, dtype=jnp.int32)
+    if filtering:
+        dh, dw_chunks = jax.lax.scan(
+            body_filtered, jnp.zeros((n, d), jnp.float32),
+            (w_chunks, idxs, skip))
+    else:
+        dh, dw_chunks = jax.lax.scan(
+            body, jnp.zeros((n, d), jnp.float32), (w_chunks, idxs))
     dw = dw_chunks.reshape(-1, d)[:v_orig]
     return dh.astype(h.dtype), dw.astype(w.dtype)
 
@@ -237,16 +285,21 @@ def _streaming_loss(h, w, y, cfg: LossConfig):
 
 
 def _fwd(h, w, y, cfg: LossConfig):
-    lse, z_tgt, z_sum = streaming_stats(h, w, y, cfg)
+    tmax = None
+    if cfg.filter_grads:
+        lse, z_tgt, z_sum, tmax = streaming_stats(h, w, y, cfg,
+                                                  return_tile_stats=True)
+    else:
+        lse, z_tgt, z_sum = streaming_stats(h, w, y, cfg)
     valid = cfg.resolve_vocab(w.shape[0])
     rows = _rows_from_stats(lse, z_tgt, z_sum, y, valid, cfg)
-    return reduce_loss(rows, y, cfg), (h, w, y, lse)
+    return reduce_loss(rows, y, cfg), (h, w, y, lse, tmax)
 
 
 def _bwd(cfg: LossConfig, res, gbar):
-    h, w, y, lse = res
+    h, w, y, lse, tmax = res
     gamma = _row_scale(jnp.asarray(gbar, jnp.float32), y, cfg)
-    dh, dw = streaming_grads(h, w, y, lse, gamma, cfg)
+    dh, dw = streaming_grads(h, w, y, lse, gamma, cfg, tile_stats=tmax)
     dy = np.zeros(y.shape, dtype=jax.dtypes.float0)
     return dh, dw, dy
 

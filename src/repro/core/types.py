@@ -39,6 +39,15 @@ class LossConfig:
         tiling via `windows.choose_blocks` unless overridden.
       accum_dtype: accumulator dtype for the online softmax state (paper
         upcasts BF16 tiles to FP32 in registers; we do the same in VMEM).
+      grad_filter_eps: gradient-filtering threshold for the backward pass
+        (DESIGN.md §9).  A vocab tile is SKIPPED in the dH/dW recompute
+        when an upper bound on its per-row softmax mass is below this
+        value and it contains no target id of any row in the block — CCE's
+        observation that most softmax-gradient entries round to zero at
+        bf16.  0.0 (the default) disables filtering entirely: the exact
+        backward code path runs, bit-identical to a config without the
+        knob.  Incompatible with label_smoothing > 0 (the smoothing
+        gradient is uniform over the vocab — dense by definition).
     """
 
     reduction: str = "mean"
@@ -49,6 +58,7 @@ class LossConfig:
     valid_vocab: Optional[int] = None
     block_v: int = 2048
     accum_dtype: str = "float32"
+    grad_filter_eps: float = 0.0
 
     def __post_init__(self):
         if self.reduction not in ("mean", "sum", "none"):
@@ -61,6 +71,17 @@ class LossConfig:
             raise ValueError("logit_softcap must be > 0")
         if self.block_v <= 0:
             raise ValueError("block_v must be positive")
+        if self.grad_filter_eps < 0.0:
+            raise ValueError("grad_filter_eps must be >= 0")
+        if self.grad_filter_eps > 0.0 and self.label_smoothing > 0.0:
+            raise ValueError(
+                "grad_filter_eps is incompatible with label_smoothing: "
+                "the smoothing gradient is dense over the vocabulary")
+
+    @property
+    def filter_grads(self) -> bool:
+        """True when the backward runs the tile-filtered recompute."""
+        return self.grad_filter_eps > 0.0
 
     def resolve_vocab(self, padded_vocab: int) -> int:
         v = self.valid_vocab if self.valid_vocab is not None else padded_vocab

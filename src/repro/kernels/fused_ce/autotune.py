@@ -42,7 +42,21 @@ from repro.kernels.plan_tuner import (TuneResult, autotune_cached,
 from repro.tuning import TuningCache
 
 __all__ = ["TuneResult", "candidate_plans", "measure_plan", "run_trials",
-           "autotune_plan", "lookup_plan"]
+           "autotune_plan", "lookup_plan", "plan_op"]
+
+
+def plan_op(cfg: Optional[LossConfig]) -> str:
+    """Cache-key namespace for a loss config (DESIGN.md §9.4).
+
+    The filtered backward has a different cost profile per tile (skipped
+    tiles are nearly free), so a plan tuned at one `grad_filter_eps`
+    must not shadow the exact-backward winner (or another eps's) for the
+    same shape: filtering runs land under ``"cebwd<eps>"`` keys while
+    the exact kernels keep the legacy ``"ce"`` namespace.
+    """
+    if cfg is None or not cfg.filter_grads:
+        return "ce"
+    return f"cebwd{cfg.grad_filter_eps:g}"
 
 
 def measure_plan(
@@ -52,24 +66,32 @@ def measure_plan(
 ) -> float:
     """Min-of-`iters` wall time (µs) of fwd_stats (+ both bwd kernels).
 
+    With `cfg.grad_filter_eps > 0` the timed calls are the FILTERED
+    pipeline — stats-emitting forward plus skip-masked backward — so the
+    tuner ranks plans under the cost profile the train step will run.
+
     The first call of each kernel compiles and is excluded; min-of-k is
     robust to scheduler noise, which matters because the caller compares
     plans whose true latencies may differ by only a few percent.
     """
     n = h.shape[0]
     fwd = jax.jit(functools.partial(K.fwd_stats, cfg=cfg, plan=plan,
-                                    interpret=interpret))
+                                    interpret=interpret,
+                                    return_tile_stats=cfg.filter_grads))
     outs = fwd(h, w, y)
     jax.block_until_ready(outs)
     calls = [lambda: fwd(h, w, y)]
     if include_bwd:
         lse = outs[0]
+        tmax = outs[3] if cfg.filter_grads else None
         gamma = jnp.full((n,), 1.0 / max(n, 1), jnp.float32)
         p_coeff = gamma * (1.0 + 2.0 * jnp.float32(cfg.z_loss) * lse)
         bwd = jax.jit(functools.partial(K.bwd_grads, cfg=cfg, plan=plan,
                                         interpret=interpret))
-        jax.block_until_ready(bwd(h, w, y, lse, gamma, p_coeff))
-        calls.append(lambda: bwd(h, w, y, lse, gamma, p_coeff))
+        jax.block_until_ready(bwd(h, w, y, lse, gamma, p_coeff,
+                                  tile_stats=tmax))
+        calls.append(lambda: bwd(h, w, y, lse, gamma, p_coeff,
+                                 tile_stats=tmax))
     best = float("inf")
     for _ in range(max(iters, 1)):
         t0 = time.perf_counter()
@@ -132,7 +154,7 @@ def autotune_plan(
     next process is a pure cache hit.
     """
     return autotune_cached(
-        "ce",
+        plan_op(cfg),
         lambda: run_trials(n_rows, vocab, d, dtype, cfg=cfg,
                            trial_budget=trial_budget,
                            trial_iters=trial_iters,
@@ -147,12 +169,15 @@ def lookup_plan(
     d: int,
     dtype=jnp.bfloat16,
     *,
+    cfg: Optional[LossConfig] = None,
     cache: Optional[TuningCache] = None,
 ) -> BlockPlan:
     """Zero-cost plan resolution for hot paths (never measures).
 
     Returns the cached tuned plan when one exists for this exact
-    (shape, dtype, backend) key, otherwise the `choose_blocks`
-    heuristic.  Safe to call at trace time.
+    (shape, dtype, backend, op) key, otherwise the `choose_blocks`
+    heuristic.  `cfg` only selects the op namespace (`plan_op`); a
+    filtering config resolves under its own ``cebwd<eps>`` key.  Safe to
+    call at trace time.
     """
-    return lookup_cached("ce", n_rows, vocab, d, dtype, cache=cache)
+    return lookup_cached(plan_op(cfg), n_rows, vocab, d, dtype, cache=cache)

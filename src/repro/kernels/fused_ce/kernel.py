@@ -20,6 +20,15 @@ Grid layouts (R = n_rows/bm, Vb = V_padded/bv):
   forward : grid=(R, Vb)  — vocab innermost, state scratch per row tile
   dH      : grid=(R, Vb)  — vocab innermost, dH scratch per row tile
   dW      : grid=(Vb, R)  — rows  innermost, dW scratch per vocab tile
+
+Gradient filtering (DESIGN.md §9): `fwd_stats(..., return_tile_stats=
+True)` additionally emits a per-(row-block, vocab-block) max-valid-logit
+statistic from the same online scan; `bwd_grads(..., tile_stats=...)`
+with `cfg.grad_filter_eps > 0` derives a sound skip mask from it
+(`core/filtering.py`) and runs the `_*_kernel_filtered` variants, which
+gate each tile's recompute + MXU accumulate on the mask delivered
+through (1, 1) BlockSpecs.  Without a mask the exact kernels run,
+bit-for-bit the pre-filter code.
 """
 
 from __future__ import annotations
@@ -58,10 +67,18 @@ def _tile_logits(h_tile, w_tile, cfg: LossConfig):
 
 
 def _fwd_kernel(off_ref, y_ref, h_ref, w_ref,   # inputs
-                lse_ref, ztgt_ref, zsum_ref,    # outputs
+                lse_ref, ztgt_ref, zsum_ref,    # outputs (+ tmax with stats)
                 m_sc, a_sc, zt_sc, zs_sc,       # scratch (bm, 1) f32
-                *, cfg: LossConfig, valid: int, v_orig: int, bv: int,
-                num_v: int):
+                *scratch_rest,
+                cfg: LossConfig, valid: int, v_orig: int, bv: int,
+                num_v: int, n_orig: int = 0, emit_stats: bool = False):
+    # with emit_stats the output list grows by one (num_r, num_v) f32
+    # array of per-tile max logits; pallas_call appends outputs BEFORE
+    # scratch, so the extra ref arrives via the scratch_rest tail:
+    # (..., zsum_ref, tmax_ref, m_sc, a_sc, zt_sc, zs_sc) — remap here.
+    if emit_stats:
+        tmax_ref = m_sc
+        m_sc, a_sc, zt_sc, zs_sc = a_sc, zt_sc, zs_sc, scratch_rest[0]
     v = pl.program_id(1)
 
     @pl.when(v == 0)
@@ -93,6 +110,15 @@ def _fwd_kernel(off_ref, y_ref, h_ref, w_ref,   # inputs
                           axis=1, keepdims=True)
     zs_sc[...] += jnp.sum(jnp.where(col_valid, z, 0.0), axis=1, keepdims=True)
 
+    if emit_stats:
+        # grad-filter statistic (DESIGN.md §9): tile max over live rows —
+        # pad rows (>= n_orig) and ignore-masked rows are excluded so the
+        # backward's skip mask never depends on dead rows
+        row = pl.program_id(0) * bm + jax.lax.broadcasted_iota(
+            jnp.int32, (bm, 1), 0)
+        live = (row < n_orig) & (y != cfg.ignore_index)
+        tmax_ref[0, 0] = jnp.max(jnp.where(live, z, _NEG_INF))
+
     @pl.when(v == num_v - 1)
     def _epilogue():
         lse_ref[...] = m_sc[...] + jnp.log(a_sc[...])
@@ -104,11 +130,18 @@ def fwd_stats(
     h: jax.Array, w: jax.Array, y: jax.Array, cfg: LossConfig,
     plan: Optional[BlockPlan] = None, interpret: Optional[bool] = None,
     *, col_offset=0, total_valid: Optional[int] = None,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    return_tile_stats: bool = False,
+):
     """Per-row (lse, z_target, z_sum) via the forward Pallas kernel.
 
     h: (N, d), w: (V, d), y: (N,) int32.  N and V are padded internally to
     the block plan; pad rows/cols never influence real outputs.
+
+    With `return_tile_stats=True` a fourth output is returned: the
+    (num_row_blocks, num_vocab_blocks) f32 per-tile max logit over live
+    rows (DESIGN.md §9) — the gradient-filter statistic `bwd_grads`
+    turns into its skip mask.  The (lse, z_target, z_sum) arithmetic is
+    identical either way.
 
     Tensor-parallel shards pass `col_offset` (traced scalar: global id of
     w's first row) and `total_valid` (global valid vocab); `y` stays global.
@@ -134,10 +167,14 @@ def fwd_stats(
     off = jnp.asarray(col_offset, jnp.int32).reshape(1, 1)
     y2 = y.astype(jnp.int32)[:, None]                       # (N, 1)
     out_shape = [jax.ShapeDtypeStruct((np_, 1), jnp.float32)] * 3
+    out_specs = [pl.BlockSpec((bm, 1), lambda r, v: (r, 0))] * 3
+    if return_tile_stats:
+        out_shape.append(jax.ShapeDtypeStruct((num_r, num_v), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 1), lambda r, v: (r, v)))
     kern = functools.partial(_fwd_kernel, cfg=cfg, valid=valid,
-                             v_orig=v_orig, bv=bv, num_v=num_v)
-    row_spec = pl.BlockSpec((bm, 1), lambda r, v: (r, 0))
-    lse, ztgt, zsum = pl.pallas_call(
+                             v_orig=v_orig, bv=bv, num_v=num_v,
+                             n_orig=n, emit_stats=return_tile_stats)
+    outs = pl.pallas_call(
         kern,
         grid=(num_r, num_v),
         in_specs=[
@@ -146,13 +183,16 @@ def fwd_stats(
             pl.BlockSpec((bm, d), lambda r, v: (r, 0)),     # h
             pl.BlockSpec((bv, d), lambda r, v: (v, 0)),     # w
         ],
-        out_specs=[row_spec, row_spec, row_spec],
+        out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bm, 1), jnp.float32) for _ in range(4)],
         compiler_params=compiler_params(),
         interpret=interpret,
     )(off, y2, h, w)
-    return lse[:n, 0], ztgt[:n, 0], zsum[:n, 0]
+    lse, ztgt, zsum = (o[:n, 0] for o in outs[:3])
+    if return_tile_stats:
+        return lse, ztgt, zsum, outs[3]
+    return lse, ztgt, zsum
 
 
 # ---------------------------------------------------------------------------
@@ -234,14 +274,80 @@ def _dw_kernel(off_ref, y_ref, lse_ref, gm_ref, pc_ref, h_ref, w_ref,
         dw_ref[...] = dw_sc[...]
 
 
+def _dh_kernel_filtered(skip_ref, off_ref, y_ref, lse_ref, gm_ref, pc_ref,
+                        h_ref, w_ref, dh_ref, dh_sc,
+                        *, cfg: LossConfig, valid: int, v_orig: int,
+                        bv: int, num_v: int):
+    """`_dh_kernel` with a per-(row-block, vocab-block) skip gate: the
+    tile recompute + MXU accumulate never run for masked tiles
+    (DESIGN.md §9); init/epilogue stay unconditional."""
+    v = pl.program_id(1)
+
+    @pl.when(v == 0)
+    def _init():
+        dh_sc[...] = jnp.zeros_like(dh_sc[...])
+
+    @pl.when(skip_ref[0, 0] == 0)
+    def _accumulate():
+        g = _grad_tile(h_ref[...], w_ref[...], y_ref[...], lse_ref[...],
+                       gm_ref[...], pc_ref[...], v * bv, off_ref[0, 0],
+                       cfg, valid, v_orig)
+        dh_sc[...] += jax.lax.dot_general(
+            g, w_ref[...].astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(v == num_v - 1)
+    def _epilogue():
+        dh_ref[...] = dh_sc[...]
+
+
+def _dw_kernel_filtered(skip_ref, off_ref, y_ref, lse_ref, gm_ref, pc_ref,
+                        h_ref, w_ref, dw_ref, dw_sc,
+                        *, cfg: LossConfig, valid: int, v_orig: int,
+                        bv: int, num_r: int):
+    r = pl.program_id(1)
+    v = pl.program_id(0)   # hoisted: program_id can't be staged into when()
+
+    @pl.when(r == 0)
+    def _init():
+        dw_sc[...] = jnp.zeros_like(dw_sc[...])
+
+    @pl.when(skip_ref[0, 0] == 0)
+    def _accumulate():
+        g = _grad_tile(h_ref[...], w_ref[...], y_ref[...], lse_ref[...],
+                       gm_ref[...], pc_ref[...], v * bv, off_ref[0, 0],
+                       cfg, valid, v_orig)
+        dw_sc[...] += jax.lax.dot_general(
+            g, h_ref[...].astype(jnp.float32),
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(r == num_r - 1)
+    def _epilogue():
+        dw_ref[...] = dw_sc[...]
+
+
 def bwd_grads(
     h: jax.Array, w: jax.Array, y: jax.Array,
     lse: jax.Array, gamma: jax.Array, p_coeff: jax.Array,
     cfg: LossConfig, plan: Optional[BlockPlan] = None,
     interpret: Optional[bool] = None,
     *, col_offset=0, total_valid: Optional[int] = None,
+    tile_stats: Optional[jax.Array] = None,
+    skip_mask: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """(dH, dW) via the two backward Pallas kernels (f32 outputs)."""
+    """(dH, dW) via the two backward Pallas kernels (f32 outputs).
+
+    Gradient filtering (DESIGN.md §9): pass `tile_stats` — the fourth
+    output of `fwd_stats(..., return_tile_stats=True)` under the SAME
+    plan — and, with `cfg.grad_filter_eps > 0`, vocab tiles whose
+    softmax-mass bound falls below the threshold are skipped in both
+    kernels.  `skip_mask` overrides the derived (num_r, num_v) boolean
+    mask directly (tests force all-False to prove the filtered kernels
+    are bit-identical to the exact ones).  With neither, this is the
+    exact backward, bit-for-bit the code that predates the filter.
+    """
     n, d = h.shape
     v_orig = w.shape[0]
     valid = total_valid if total_valid is not None else (
@@ -249,6 +355,11 @@ def bwd_grads(
     plan = plan or choose_blocks(n, v_orig, d, in_bytes=h.dtype.itemsize)
     bm, bv = plan.block_rows, plan.block_v
     interpret = interpret_default() if interpret is None else interpret
+
+    if skip_mask is None and tile_stats is not None and cfg.filter_grads:
+        from repro.core.filtering import tile_skip_mask
+        skip_mask = tile_skip_mask(tile_stats, lse, y, cfg, block_rows=bm,
+                                   block_v=bv, col_offset=col_offset)
 
     n_pad = (-n) % bm
     v_pad = (-v_orig) % bv
@@ -267,46 +378,75 @@ def bwd_grads(
     y2 = y.astype(jnp.int32)[:, None]
     lse2, gm2, pc2 = lse[:, None], gamma[:, None], p_coeff[:, None]
 
+    filtered = skip_mask is not None
+    if filtered:
+        if skip_mask.shape != (num_r, num_v):
+            raise ValueError(
+                f"skip mask shape {skip_mask.shape} does not match the "
+                f"backward grid {(num_r, num_v)} of plan {plan.shape}")
+        skip = skip_mask.astype(jnp.int32)
+
     row_in = lambda r, v: (r, 0)
+    dh_in_specs = [
+        pl.BlockSpec((1, 1), lambda r, v: (0, 0)),      # col offset
+        pl.BlockSpec((bm, 1), row_in),                  # y
+        pl.BlockSpec((bm, 1), row_in),                  # lse
+        pl.BlockSpec((bm, 1), row_in),                  # gamma
+        pl.BlockSpec((bm, 1), row_in),                  # p_coeff
+        pl.BlockSpec((bm, d), row_in),                  # h
+        pl.BlockSpec((bv, d), lambda r, v: (v, 0)),     # w
+    ]
+    dh_args = (off, y2, lse2, gm2, pc2, h, w)
+    if filtered:
+        dh_kern = functools.partial(_dh_kernel_filtered, cfg=cfg,
+                                    valid=valid, v_orig=v_orig, bv=bv,
+                                    num_v=num_v)
+        dh_in_specs.insert(0, pl.BlockSpec((1, 1), lambda r, v: (r, v)))
+        dh_args = (skip,) + dh_args
+    else:
+        dh_kern = functools.partial(_dh_kernel, cfg=cfg, valid=valid,
+                                    v_orig=v_orig, bv=bv, num_v=num_v)
     dh = pl.pallas_call(
-        functools.partial(_dh_kernel, cfg=cfg, valid=valid, v_orig=v_orig,
-                          bv=bv, num_v=num_v),
+        dh_kern,
         grid=(num_r, num_v),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda r, v: (0, 0)),      # col offset
-            pl.BlockSpec((bm, 1), row_in),                  # y
-            pl.BlockSpec((bm, 1), row_in),                  # lse
-            pl.BlockSpec((bm, 1), row_in),                  # gamma
-            pl.BlockSpec((bm, 1), row_in),                  # p_coeff
-            pl.BlockSpec((bm, d), row_in),                  # h
-            pl.BlockSpec((bv, d), lambda r, v: (v, 0)),     # w
-        ],
+        in_specs=dh_in_specs,
         out_specs=pl.BlockSpec((bm, d), row_in),
         out_shape=jax.ShapeDtypeStruct((np_, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, d), jnp.float32)],
         compiler_params=compiler_params(),
         interpret=interpret,
-    )(off, y2, lse2, gm2, pc2, h, w)
+    )(*dh_args)
 
     row_in2 = lambda v, r: (r, 0)
+    dw_in_specs = [
+        pl.BlockSpec((1, 1), lambda v, r: (0, 0)),      # col offset
+        pl.BlockSpec((bm, 1), row_in2),                 # y
+        pl.BlockSpec((bm, 1), row_in2),                 # lse
+        pl.BlockSpec((bm, 1), row_in2),                 # gamma
+        pl.BlockSpec((bm, 1), row_in2),                 # p_coeff
+        pl.BlockSpec((bm, d), row_in2),                 # h
+        pl.BlockSpec((bv, d), lambda v, r: (v, 0)),     # w
+    ]
+    dw_args = (off, y2, lse2, gm2, pc2, h, w)
+    if filtered:
+        dw_kern = functools.partial(_dw_kernel_filtered, cfg=cfg,
+                                    valid=valid, v_orig=v_orig, bv=bv,
+                                    num_r=num_r)
+        # same (num_r, num_v) mask; the dw grid is (v, r)-major
+        dw_in_specs.insert(0, pl.BlockSpec((1, 1), lambda v, r: (r, v)))
+        dw_args = (skip,) + dw_args
+    else:
+        dw_kern = functools.partial(_dw_kernel, cfg=cfg, valid=valid,
+                                    v_orig=v_orig, bv=bv, num_r=num_r)
     dw = pl.pallas_call(
-        functools.partial(_dw_kernel, cfg=cfg, valid=valid, v_orig=v_orig,
-                          bv=bv, num_r=num_r),
+        dw_kern,
         grid=(num_v, num_r),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda v, r: (0, 0)),      # col offset
-            pl.BlockSpec((bm, 1), row_in2),                 # y
-            pl.BlockSpec((bm, 1), row_in2),                 # lse
-            pl.BlockSpec((bm, 1), row_in2),                 # gamma
-            pl.BlockSpec((bm, 1), row_in2),                 # p_coeff
-            pl.BlockSpec((bm, d), row_in2),                 # h
-            pl.BlockSpec((bv, d), lambda v, r: (v, 0)),     # w
-        ],
+        in_specs=dw_in_specs,
         out_specs=pl.BlockSpec((bv, d), lambda v, r: (v, 0)),
         out_shape=jax.ShapeDtypeStruct((vp, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bv, d), jnp.float32)],
         compiler_params=compiler_params(),
         interpret=interpret,
-    )(off, y2, lse2, gm2, pc2, h, w)
+    )(*dw_args)
 
     return dh[:n], dw[:v_orig]

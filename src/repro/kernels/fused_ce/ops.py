@@ -37,17 +37,26 @@ def _pallas_loss(h, w, y, cfg: LossConfig, plan: Optional[BlockPlan]):
 
 
 def _fwd(h, w, y, cfg: LossConfig, plan: Optional[BlockPlan]):
-    lse, z_tgt, z_sum = K.fwd_stats(h, w, y, cfg, plan=plan)
+    tmax = None
+    if cfg.filter_grads:
+        # the tile statistic rides the residuals (DESIGN.md §9): a few
+        # bytes per (row-block, vocab-block), computed inside the same
+        # online-softmax scan the forward runs anyway
+        lse, z_tgt, z_sum, tmax = K.fwd_stats(h, w, y, cfg, plan=plan,
+                                              return_tile_stats=True)
+    else:
+        lse, z_tgt, z_sum = K.fwd_stats(h, w, y, cfg, plan=plan)
     valid = cfg.resolve_vocab(w.shape[0])
     rows = _rows_from_stats(lse, z_tgt, z_sum, y, valid, cfg)
-    return reduce_loss(rows, y, cfg), (h, w, y, lse)
+    return reduce_loss(rows, y, cfg), (h, w, y, lse, tmax)
 
 
 def _bwd(cfg: LossConfig, plan: Optional[BlockPlan], res, gbar):
-    h, w, y, lse = res
+    h, w, y, lse, tmax = res
     gamma = _row_scale(jnp.asarray(gbar, jnp.float32), y, cfg)
     p_coeff = gamma * (1.0 + 2.0 * jnp.float32(cfg.z_loss) * lse)
-    dh, dw = K.bwd_grads(h, w, y, lse, gamma, p_coeff, cfg, plan=plan)
+    dh, dw = K.bwd_grads(h, w, y, lse, gamma, p_coeff, cfg, plan=plan,
+                         tile_stats=tmax)
     dy = np.zeros(y.shape, dtype=jax.dtypes.float0)
     return dh.astype(h.dtype), dw.astype(w.dtype), dy
 
@@ -73,5 +82,6 @@ def pallas_loss(
     """
     cfg = cfg or LossConfig()
     if plan is None:
-        plan = lookup_plan(h.shape[0], w.shape[0], h.shape[-1], h.dtype)
+        plan = lookup_plan(h.shape[0], w.shape[0], h.shape[-1], h.dtype,
+                           cfg=cfg)
     return _pallas_loss(h, w, y, cfg, plan)

@@ -45,6 +45,10 @@ def main(argv=None):
     ap.add_argument("--loss-impl", default="streaming",
                     choices=("streaming", "pallas", "canonical", "sharded"))
     ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--grad-filter-eps", type=float, default=0.0,
+                    help="gradient-filtered backward: skip vocab tiles "
+                         "whose total softmax mass is provably < eps "
+                         "(0 = exact; target tiles are never skipped)")
     ap.add_argument("--mtp-heads", type=int, default=0,
                     help="multi-token-prediction heads trained over the "
                          "trunk (per-horizon fused CE, shared BlockPlan)")
@@ -89,6 +93,7 @@ def main(argv=None):
         loss_impl=args.loss_impl,
         loss_block_v=min(2048, arch.padded_vocab),
         grad_accum=args.grad_accum,
+        grad_filter_eps=args.grad_filter_eps,
         tuning=TuningConfig(enabled=args.autotune,
                             cache_path=args.tuning_cache))
     init_fn, step_fn = build_train_step(arch, tc, rules)

@@ -47,6 +47,7 @@ class TrainConfig:
     loss_block_v: int = 2048
     label_smoothing: float = 0.0
     z_loss: float = 0.0
+    grad_filter_eps: float = 0.0   # skip low-mass vocab tiles in backward
     grad_accum: int = 1
     accum_dtype: str = "float32"   # grad-accumulation buffer dtype
     zero3: bool = False
@@ -67,7 +68,7 @@ class TrainConfig:
 def _loss_cfg(arch: Arch, tc: TrainConfig) -> LossConfig:
     return arch.loss_config(
         block_v=tc.loss_block_v, label_smoothing=tc.label_smoothing,
-        z_loss=tc.z_loss)
+        z_loss=tc.z_loss, grad_filter_eps=tc.grad_filter_eps)
 
 
 def resolve_block_plan(tc: TrainConfig, lcfg: LossConfig, n_rows: int,

@@ -259,3 +259,47 @@ def test_pallas_loss_grads_with_explicit_plan():
                                rtol=2e-5, atol=2e-5)
     np.testing.assert_allclose(np.asarray(ref[1]), np.asarray(got[1]),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# gradient-filtering op namespacing (DESIGN.md §9.4)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_op_namespacing():
+    assert at.plan_op(None) == "ce"
+    assert at.plan_op(LossConfig()) == "ce"
+    assert at.plan_op(LossConfig(grad_filter_eps=1e-05)) == "cebwd1e-05"
+    assert at.plan_op(LossConfig(grad_filter_eps=0.001)) == "cebwd0.001"
+
+
+def test_filtered_and_exact_plans_dont_cross_contaminate(monkeypatch):
+    """A plan tuned under `grad_filter_eps > 0` must not shadow the exact
+    backward's winner for the same shape (different cost profile) — and
+    vice versa.  The fake clock makes the two namespaces prefer OPPOSITE
+    tile shapes so any key collision would flip a lookup."""
+    def clock(h, w, y, cfg, plan, **kw):
+        area = float(plan.block_rows * plan.block_v)
+        return area if not cfg.filter_grads else -area
+    monkeypatch.setattr(at, "measure_plan", clock)
+    cache = TuningCache(None)
+    cfg_f = LossConfig(grad_filter_eps=1e-4)
+    p_exact = at.autotune_plan(N, V, D, jnp.float32, cfg=LossConfig(),
+                               cache=cache, trial_budget=4, trial_iters=1)
+    p_filt = at.autotune_plan(N, V, D, jnp.float32, cfg=cfg_f,
+                              cache=cache, trial_budget=4, trial_iters=1)
+    assert len(cache) == 2          # two keys, no overwrite
+    assert p_exact.shape != p_filt.shape
+    assert at.lookup_plan(N, V, D, jnp.float32, cache=cache) == p_exact
+    assert at.lookup_plan(N, V, D, jnp.float32, cfg=cfg_f,
+                          cache=cache) == p_filt
+
+
+def test_measure_plan_filtered_pipeline_runs():
+    """With a filtering config, measure_plan times the stats-emitting
+    forward + skip-masked backward end to end (interpret mode)."""
+    h, w, y = _problem()
+    cfg = LossConfig(block_v=64, grad_filter_eps=1e-4)
+    plan = choose_blocks(N, V, D, in_bytes=4)
+    us = at.measure_plan(h, w, y, cfg, plan, iters=1)
+    assert np.isfinite(us) and us > 0

@@ -1,53 +1,26 @@
 """End-to-end `jax.grad` parity for every fused-CE implementation.
 
 The backward kernels (`streaming_grads`, the Pallas `bwd_grads`, and the
-shard_map custom_vjp of `make_sharded_loss`) previously had no direct
-jax.grad oracle grid — forward parity plus hand-assembled vjp checks
-only.  Here every impl is differentiated THROUGH the public
-`fused_cross_entropy` entry point (and the sharded builder) against the
-canonical two-stage oracle, over shapes x dtypes x softcap x
+shard_map custom_vjp of `make_sharded_loss`) are differentiated THROUGH
+the public `fused_cross_entropy` entry point (and the sharded builder)
+against the canonical two-stage oracle, over shapes x dtypes x softcap x
 ignore-masked rows x vocab padding.
+
+The problem builders and oracle live in `tests/grad_oracle.py` so the
+filtered-backward grid (test_grad_filtering.py) and the convergence
+harness reuse the exact same reference.
 """
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import Mesh
 
-from repro.core import LossConfig, canonical_loss, fused_cross_entropy
+from repro.core import LossConfig, fused_cross_entropy
 from repro.core.sharded import make_sharded_loss
 
-IMPLS = ("canonical", "streaming", "pallas")
-
-# (n, v, d): ragged row/vocab counts exercise partial tiles in every impl
-SHAPES = [(16, 128, 32), (33, 100, 24)]
-
-CFGS = {
-    "base": LossConfig(block_v=64),
-    "softcap": LossConfig(block_v=64, logit_softcap=12.0),
-    "smooth_z": LossConfig(block_v=48, label_smoothing=0.1, z_loss=1e-4),
-    "padded": LossConfig(block_v=64, valid_vocab=90),
-    "sum": LossConfig(block_v=64, reduction="sum"),
-}
-
-
-def _problem(n, v, d, dtype=jnp.float32, seed=0, valid=None):
-    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
-    h = (jax.random.normal(k1, (n, d))).astype(dtype)
-    w = (jax.random.normal(k2, (v, d)) * 0.05).astype(dtype)
-    y = jax.random.randint(k3, (n,), 0, valid or v)
-    # ignore-masked rows: the oracle AND the kernels must zero their
-    # gradient contribution and renormalize the 'mean' denominator
-    y = y.at[::5].set(LossConfig().ignore_index)
-    return h, w, y
-
-
-def _oracle_grads(h, w, y, cfg):
-    return jax.grad(
-        lambda h, w: canonical_loss(h.astype(jnp.float32),
-                                    w.astype(jnp.float32), y, cfg),
-        (0, 1))(h, w)
+from grad_oracle import (CFGS, IMPLS, SHAPES, assert_grads_close,
+                         impl_grads, make_problem, mesh_1x1, oracle_grads)
 
 
 @pytest.mark.parametrize("shape", SHAPES, ids=["16x128", "33x100"])
@@ -58,13 +31,10 @@ def test_grad_matches_canonical_f32(impl, cfg_name, shape):
     cfg = CFGS[cfg_name]
     if cfg.valid_vocab is not None and cfg.valid_vocab > v:
         pytest.skip("valid_vocab exceeds this grid's vocab")
-    h, w, y = _problem(n, v, d, valid=cfg.valid_vocab)
-    ga = _oracle_grads(h, w, y, cfg)
-    gb = jax.grad(
-        lambda h, w: fused_cross_entropy(h, w, y, impl=impl, cfg=cfg),
-        (0, 1))(h, w)
-    np.testing.assert_allclose(ga[0], gb[0], rtol=3e-4, atol=1e-5)
-    np.testing.assert_allclose(ga[1], gb[1], rtol=3e-4, atol=1e-5)
+    h, w, y = make_problem(n, v, d, valid=cfg.valid_vocab)
+    ga = oracle_grads(h, w, y, cfg)
+    gb = impl_grads(h, w, y, cfg, impl)
+    assert_grads_close(ga, gb)
 
 
 @pytest.mark.parametrize("impl", ("streaming", "pallas"))
@@ -74,27 +44,20 @@ def test_grad_matches_canonical_bf16(impl):
     orders of magnitude at v=128)."""
     n, v, d = 24, 128, 32
     cfg = LossConfig(block_v=64)
-    h, w, y = _problem(n, v, d, dtype=jnp.bfloat16)
-    ga = _oracle_grads(h, w, y, cfg)
-    gb = jax.grad(
-        lambda h, w: fused_cross_entropy(h, w, y, impl=impl, cfg=cfg),
-        (0, 1))(h, w)
-    np.testing.assert_allclose(ga[0], np.asarray(gb[0], np.float32),
-                               rtol=0.1, atol=5e-3)
-    np.testing.assert_allclose(ga[1], np.asarray(gb[1], np.float32),
-                               rtol=0.1, atol=5e-3)
+    h, w, y = make_problem(n, v, d, dtype=jnp.bfloat16)
+    ga = oracle_grads(h, w, y, cfg)
+    gb = impl_grads(h, w, y, cfg, impl)
+    assert_grads_close(ga, gb, rtol=0.1, atol=5e-3)
 
 
 def test_grad_all_rows_ignored_is_zero():
     """A fully masked batch: loss 0 (mean over max(count, 1)) and exactly
     zero gradients for every impl — no NaN from the 0/0 corner."""
     cfg = LossConfig(block_v=32)
-    h, w, _ = _problem(8, 64, 16)
+    h, w, _ = make_problem(8, 64, 16)
     y = jnp.full((8,), cfg.ignore_index)
     for impl in IMPLS:
-        gh, gw = jax.grad(
-            lambda h, w: fused_cross_entropy(h, w, y, impl=impl, cfg=cfg),
-            (0, 1))(h, w)
+        gh, gw = impl_grads(h, w, y, cfg, impl)
         assert np.all(np.isfinite(np.asarray(gh, np.float32)))
         np.testing.assert_array_equal(np.asarray(gh, np.float32), 0.0)
         np.testing.assert_array_equal(np.asarray(gw, np.float32), 0.0)
@@ -107,32 +70,26 @@ def test_grad_all_rows_ignored_is_zero():
 # ---------------------------------------------------------------------------
 
 
-def _mesh_1x1():
-    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
-    return Mesh(dev, ("data", "model"))
-
-
 @pytest.mark.parametrize("layout", ("2d", "sp_gather"))
 @pytest.mark.parametrize("cfg_name", ("base", "softcap", "smooth_z"))
 def test_sharded_grads_match_canonical(layout, cfg_name):
     cfg = CFGS[cfg_name]
     n, v, d = 16, 128, 32
-    h, w, y = _problem(n, v, d)
-    loss_fn = make_sharded_loss(_mesh_1x1(), cfg, rows_axes=("data",),
+    h, w, y = make_problem(n, v, d)
+    loss_fn = make_sharded_loss(mesh_1x1(), cfg, rows_axes=("data",),
                                 vocab_axis="model", layout=layout,
                                 impl="streaming")
-    ga = _oracle_grads(h, w, y, cfg)
+    ga = oracle_grads(h, w, y, cfg)
     gb = jax.grad(loss_fn, (0, 1))(h, w, y)
-    np.testing.assert_allclose(ga[0], gb[0], rtol=3e-4, atol=1e-5)
-    np.testing.assert_allclose(ga[1], gb[1], rtol=3e-4, atol=1e-5)
+    assert_grads_close(ga, gb)
 
 
 def test_sharded_value_matches_every_local_impl():
     """The sharded loss value agrees with each local impl on the same
     problem (single shard ⇒ bitwise-comparable semantics)."""
     cfg = LossConfig(block_v=48, z_loss=1e-4)
-    h, w, y = _problem(20, 96, 16)
-    sharded = make_sharded_loss(_mesh_1x1(), cfg)(h, w, y)
+    h, w, y = make_problem(20, 96, 16)
+    sharded = make_sharded_loss(mesh_1x1(), cfg)(h, w, y)
     for impl in IMPLS:
         local = fused_cross_entropy(h, w, y, impl=impl, cfg=cfg)
         np.testing.assert_allclose(np.asarray(sharded), np.asarray(local),

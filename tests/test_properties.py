@@ -174,3 +174,83 @@ def test_clip_never_exceeds_max_norm(seed, max_norm):
     if float(pre) <= max_norm:
         for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(clipped)):
             np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gradient-filtering skip mask (DESIGN.md §9) — deterministic versions of
+# these invariants run unconditionally in test_grad_filtering.py
+# ---------------------------------------------------------------------------
+
+
+def _filter_problem(n, v, d, seed, scale):
+    """Softmax concentrated on in-band targets: the regime where the
+    mass bound can actually clear tiles."""
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    w = jax.random.normal(k1, (v, d)) * 0.5
+    band = max(v // 8, 1)
+    y = jax.random.randint(k2, (n,), 0, band)
+    y2 = jax.random.randint(k3, (n,), 0, band)
+    h = scale * w[y] + 0.6 * scale * w[y2] \
+        + 0.1 * jax.random.normal(k4, (n, d))
+    return h, w, y.at[::5].set(LossConfig().ignore_index)
+
+
+def _filter_mask(n, v, d, seed, scale, eps, block_rows=8, block_v=32):
+    from repro.core.filtering import tile_skip_mask
+    from repro.core.streaming import streaming_stats
+    h, w, y = _filter_problem(n, v, d, seed, scale)
+    cfg = LossConfig(block_v=block_v, grad_filter_eps=max(eps, 1e-30))
+    num_r = -(-n // block_rows)
+    stats = [streaming_stats(h[i * block_rows:(i + 1) * block_rows],
+                             w, y[i * block_rows:(i + 1) * block_rows],
+                             cfg, return_tile_stats=True)[3]
+             for i in range(num_r)]
+    tmax = jnp.stack(stats)
+    lse = streaming_stats(h, w, y, cfg)[0]
+    return tile_skip_mask(tmax, lse, y, cfg, block_rows=block_rows,
+                          block_v=block_v, eps=eps), y, block_rows, block_v
+
+
+@given(n=st.sampled_from([8, 24]), v=st.sampled_from([128, 256]),
+       seed=st.integers(0, 10_000), scale=st.floats(2.0, 12.0),
+       eps_lo=st.floats(0, 1e-2), eps_mul=st.floats(1.0, 1e6))
+@settings(**_SETTINGS)
+def test_filter_skip_set_monotone_in_eps(n, v, seed, scale, eps_lo,
+                                         eps_mul):
+    """skip(eps1) ⊆ skip(eps2) whenever eps1 <= eps2, and eps=0 skips
+    nothing — the knob only ever trades MORE accuracy for LESS work."""
+    lo, _, _, _ = _filter_mask(n, v, 32, seed, scale, eps_lo)
+    hi, _, _, _ = _filter_mask(n, v, 32, seed, scale, eps_lo * eps_mul)
+    zero, _, _, _ = _filter_mask(n, v, 32, seed, scale, 0.0)
+    assert not bool(jnp.any(zero))
+    assert bool(jnp.all(~lo | hi))
+
+
+@given(n=st.sampled_from([8, 24]), v=st.sampled_from([128, 256]),
+       seed=st.integers(0, 10_000), scale=st.floats(2.0, 12.0),
+       eps=st.floats(1e-8, 1e20))
+@settings(**_SETTINGS)
+def test_filter_never_skips_a_target_tile(n, v, seed, scale, eps):
+    """No live row's target tile is ever dropped — the `p - 1` entry
+    survives at EVERY eps, so filtered training can't unlearn targets."""
+    sk, y, block_rows, block_v = _filter_mask(n, v, 32, seed, scale, eps)
+    sk, y = np.asarray(sk), np.asarray(y)
+    for i in range(y.shape[0]):
+        if y[i] == LossConfig().ignore_index:
+            continue
+        assert not sk[i // block_rows, y[i] // block_v]
+
+
+@given(n=st.sampled_from([16, 24]), seed=st.integers(0, 10_000),
+       scale=st.floats(2.0, 10.0), eps=st.floats(0, 1e-2))
+@settings(**_SETTINGS)
+def test_filter_ignored_rows_never_touch_dw(n, seed, scale, eps):
+    """dw is bitwise invariant to the hidden states of ignore-masked
+    rows at every eps: their gradient rows are zero AND they are
+    excluded from the tile stat, so they can't flip the skip mask."""
+    h, w, y = _filter_problem(n, 128, 32, seed, scale)
+    cfg = LossConfig(block_v=32, grad_filter_eps=eps)
+    h2 = jnp.where((y == cfg.ignore_index)[:, None], h * -3.0 + 7.0, h)
+    dw = jax.grad(lambda w: streaming_loss(h, w, y, cfg))(w)
+    dw2 = jax.grad(lambda w: streaming_loss(h2, w, y, cfg))(w)
+    np.testing.assert_array_equal(np.asarray(dw), np.asarray(dw2))
