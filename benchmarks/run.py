@@ -36,7 +36,7 @@ import json
 import os
 import sys
 
-ALL_PARTS = "lat,mem,train,topk,roof,tune,serve,spec,mtp,paged,bwd"
+ALL_PARTS = "lat,mem,train,topk,roof,tune,serve,spec,mtp,paged,quant,bwd"
 
 
 def _runner(part):
@@ -73,6 +73,9 @@ def _runner(part):
     if part == "paged":
         from benchmarks.bench_paged import bench_paged
         return [bench_paged]
+    if part == "quant":
+        from benchmarks.bench_quant import bench_quant
+        return [bench_quant]
     if part == "bwd":
         from benchmarks.bench_backward import bench_backward
         return [bench_backward]

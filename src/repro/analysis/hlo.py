@@ -101,6 +101,7 @@ def collective_stats(hlo_text: str) -> CollectiveStats:
 
 _DEF_RE = re.compile(
     r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s(]*))")
+_KERNEL_SRC_RE = re.compile(r'source_file="[^"]*kernels[^"]*"')
 
 
 def logits_intermediates(hlo_text: str, batch: int, vocab: int,
@@ -175,6 +176,66 @@ def assert_logits_free(hlo_text: str, batch: int, vocabs,
             raise AssertionError(
                 f"{shapes} logits intermediate(s) in compiled "
                 f"module:\n  " + "\n  ".join(hits[:8]))
+
+
+def wide_dequant_intermediates(hlo_text: str, shape) -> List[str]:
+    """Lines that DEFINE a wide (>1 byte/element) tensor of `shape`.
+
+    The quantized serving paths promise in-register dequantization: the
+    int8 K/V pools (and the quantized lm_head) are only ever widened one
+    VMEM tile at a time inside a kernel.  A full-size dequantized copy —
+    XLA materializing ``convert(s8[...]) * scale`` before the consuming
+    op — shows up in compiled HLO as a result whose dtype is wider than
+    1 byte and whose non-unit dims are exactly the quantized operand's
+    (order-free, size-1 dims ignored).  The 1-byte storage itself
+    (``s8``/``f8``) never matches, and neither do the f32 scale tensors
+    (their element count differs by the head_dim/d factor).
+
+    Two definition classes are skipped as non-evidence: ``parameter``
+    declarations (inputs that happen to share the shape — e.g. a
+    full-precision embedding table shaped like the quantized lm_head —
+    are not dequants), and ops whose source metadata points inside
+    ``kernels/``.  The latter matters only under interpret mode, where
+    pallas kernel bodies leak into the HLO as plain ops: a reduced-shape
+    plan may tile the whole operand (``bv == V``), making the IN-KERNEL
+    tile convert full-size.  On a real TPU compile kernel internals live
+    behind a custom-call and are invisible, so every surviving hit is a
+    genuine out-of-kernel widening.
+
+    Returns the offending lines (empty == no wide dequant).
+    """
+    def nonunit(dims):
+        return tuple(sorted(int(d) for d in dims if int(d) != 1))
+
+    target = nonunit(shape)
+    hits: List[str] = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.search(line)
+        if not m:
+            continue
+        if " parameter(" in line or _KERNEL_SRC_RE.search(line):
+            continue
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            if _DTYPE_BYTES.get(dt, 4) <= 1:
+                continue
+            ds = [int(x) for x in dims.split(",") if x]
+            if nonunit(ds) == target:
+                hits.append(line.strip())
+                break
+    return hits
+
+
+def assert_no_wide_dequant(hlo_text: str, shapes) -> None:
+    """Raise if the module materializes a full-size wide copy of any of
+    the quantized operand `shapes` (pass the K/V pool shape, the
+    gathered-cache shape, and/or the quantized lm_head shape)."""
+    for shape in shapes:
+        hits = wide_dequant_intermediates(hlo_text, shape)
+        if hits:
+            raise AssertionError(
+                f"full-size dequantized copy of quantized operand "
+                f"{tuple(shape)} in compiled module:\n  "
+                + "\n  ".join(hits[:8]))
 
 
 def cost_dict(compiled) -> Dict[str, float]:

@@ -62,7 +62,7 @@ def plan_op(cfg: Optional[LossConfig]) -> str:
 def measure_plan(
     h: jax.Array, w: jax.Array, y: jax.Array, cfg: LossConfig,
     plan: BlockPlan, *, iters: int = 2, include_bwd: bool = True,
-    interpret: Optional[bool] = None,
+    interpret: Optional[bool] = None, w_scale=None,
 ) -> float:
     """Min-of-`iters` wall time (µs) of fwd_stats (+ both bwd kernels).
 
@@ -77,7 +77,8 @@ def measure_plan(
     n = h.shape[0]
     fwd = jax.jit(functools.partial(K.fwd_stats, cfg=cfg, plan=plan,
                                     interpret=interpret,
-                                    return_tile_stats=cfg.filter_grads))
+                                    return_tile_stats=cfg.filter_grads,
+                                    w_scale=w_scale))
     outs = fwd(h, w, y)
     jax.block_until_ready(outs)
     calls = [lambda: fwd(h, w, y)]
@@ -113,9 +114,12 @@ def run_trials(
     include_bwd: bool = True,
     interpret: Optional[bool] = None,
     seed: int = 0,
+    wdtype: Optional[str] = None,
 ) -> TuneResult:
     """Time candidate plans on synthetic data of the exact problem shape
-    (see `plan_tuner.run_plan_trials` for the sweep semantics)."""
+    (see `plan_tuner.run_plan_trials` for the sweep semantics).
+    ``wdtype`` times the quantized forward (1-byte W tiles + per-row
+    scales); the backward is excluded — it refuses quantized weights."""
     cfg = cfg or LossConfig()
     dtype = jnp.dtype(dtype)
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
@@ -123,12 +127,17 @@ def run_trials(
     w = (jax.random.normal(k2, (vocab, d)) * 0.05).astype(dtype)
     y = jax.random.randint(k3, (n_rows,), 0,
                            max(cfg.resolve_vocab(vocab), 1))
+    w_scale = None
+    if wdtype is not None:
+        from repro.kernels.quant import quantize_weight
+        w, w_scale = quantize_weight(w, wdtype)
+        include_bwd = False
     # `measure_plan` resolved from module globals at call time, so tests
     # (and callers) may monkeypatch it
     return run_plan_trials(
         lambda plan: measure_plan(h, w, y, cfg, plan, iters=trial_iters,
                                   include_bwd=include_bwd,
-                                  interpret=interpret),
+                                  interpret=interpret, w_scale=w_scale),
         n_rows, vocab, d, dtype, trial_budget=trial_budget)
 
 
@@ -145,22 +154,27 @@ def autotune_plan(
     include_bwd: bool = True,
     interpret: Optional[bool] = None,
     refresh: bool = False,
+    wdtype: Optional[str] = None,
 ) -> BlockPlan:
     """Memoized empirical plan: cache hit → stored winner, miss → trials.
 
     `trial_budget <= 0` disables measurement entirely and returns the
     `choose_blocks` heuristic (still the universal cold-cache fallback).
     The winner and its latency are persisted via ``cache.save()`` so the
-    next process is a pure cache hit.
+    next process is a pure cache hit.  ``wdtype`` (e.g. "int8") tunes —
+    and keys — the quantized-lm_head forward (forward-only timing: the
+    quantized path has no backward).
     """
+    include_bwd = include_bwd and wdtype is None
     return autotune_cached(
         plan_op(cfg),
         lambda: run_trials(n_rows, vocab, d, dtype, cfg=cfg,
                            trial_budget=trial_budget,
                            trial_iters=trial_iters,
-                           include_bwd=include_bwd, interpret=interpret),
+                           include_bwd=include_bwd, interpret=interpret,
+                           wdtype=wdtype),
         n_rows, vocab, d, dtype, cache=cache, trial_budget=trial_budget,
-        refresh=refresh)
+        refresh=refresh, wdtype=wdtype)
 
 
 def lookup_plan(
@@ -171,13 +185,16 @@ def lookup_plan(
     *,
     cfg: Optional[LossConfig] = None,
     cache: Optional[TuningCache] = None,
+    wdtype: Optional[str] = None,
 ) -> BlockPlan:
     """Zero-cost plan resolution for hot paths (never measures).
 
     Returns the cached tuned plan when one exists for this exact
     (shape, dtype, backend, op) key, otherwise the `choose_blocks`
     heuristic.  `cfg` only selects the op namespace (`plan_op`); a
-    filtering config resolves under its own ``cebwd<eps>`` key.  Safe to
+    filtering config resolves under its own ``cebwd<eps>`` key, and a
+    quantized lm_head (``wdtype``) under its ``+<wdtype>`` key.  Safe to
     call at trace time.
     """
-    return lookup_cached(plan_op(cfg), n_rows, vocab, d, dtype, cache=cache)
+    return lookup_cached(plan_op(cfg), n_rows, vocab, d, dtype, cache=cache,
+                         wdtype=wdtype)

@@ -48,13 +48,24 @@ from repro.kernels.pallas_utils import compiler_params, interpret_default
 _NEG_INF = float("-inf")
 
 
-def _tile_logits(h_tile, w_tile, cfg: LossConfig):
-    """(bm, bv) logits tile on the MXU, f32 accumulate; softcap applied."""
+def _tile_logits(h_tile, w_tile, cfg: LossConfig, scale_row=None):
+    """(bm, bv) logits tile on the MXU, f32 accumulate; softcap applied.
+
+    `scale_row` ((1, bv) f32) marks `w_tile` as row-quantized (int8/fp8,
+    `kernels/quant.quantize_weight`): the 1-byte tile is cast in-register
+    (lossless — the quantized grids are exact in bf16/f32) and the logits
+    tile rescaled BEFORE the softcap, since per-row scales factor out of
+    the d-contraction: z[r, v] = s[v] * sum_d h[r, d] * q[v, d].
+    """
+    if scale_row is not None:
+        w_tile = w_tile.astype(h_tile.dtype)
     z = jax.lax.dot_general(
         h_tile, w_tile,
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
+    if scale_row is not None:
+        z = z * scale_row
     if cfg.logit_softcap is not None:
         cap = jnp.float32(cfg.logit_softcap)
         z = cap * jnp.tanh(z / cap)
@@ -66,19 +77,23 @@ def _tile_logits(h_tile, w_tile, cfg: LossConfig):
 # ---------------------------------------------------------------------------
 
 
-def _fwd_kernel(off_ref, y_ref, h_ref, w_ref,   # inputs
-                lse_ref, ztgt_ref, zsum_ref,    # outputs (+ tmax with stats)
-                m_sc, a_sc, zt_sc, zs_sc,       # scratch (bm, 1) f32
-                *scratch_rest,
+def _fwd_kernel(off_ref, y_ref, h_ref, w_ref,   # inputs (+ opt. scale)
+                *rest,                          # outputs, then scratch
                 cfg: LossConfig, valid: int, v_orig: int, bv: int,
-                num_v: int, n_orig: int = 0, emit_stats: bool = False):
-    # with emit_stats the output list grows by one (num_r, num_v) f32
-    # array of per-tile max logits; pallas_call appends outputs BEFORE
-    # scratch, so the extra ref arrives via the scratch_rest tail:
-    # (..., zsum_ref, tmax_ref, m_sc, a_sc, zt_sc, zs_sc) — remap here.
+                num_v: int, n_orig: int = 0, emit_stats: bool = False,
+                quantized: bool = False):
+    # variadic tail: [ws_ref (quantized),] lse, ztgt, zsum,
+    # [tmax (emit_stats),] m_sc, a_sc, zt_sc, zs_sc — pallas_call passes
+    # inputs, then outputs, then scratch, so unpack front-to-back here.
+    if quantized:
+        ws_ref, *rest = rest
+    else:
+        ws_ref = None
+    lse_ref, ztgt_ref, zsum_ref, *rest = rest
+    tmax_ref = None
     if emit_stats:
-        tmax_ref = m_sc
-        m_sc, a_sc, zt_sc, zs_sc = a_sc, zt_sc, zs_sc, scratch_rest[0]
+        tmax_ref, *rest = rest
+    m_sc, a_sc, zt_sc, zs_sc = rest
     v = pl.program_id(1)
 
     @pl.when(v == 0)
@@ -88,7 +103,8 @@ def _fwd_kernel(off_ref, y_ref, h_ref, w_ref,   # inputs
         zt_sc[...] = jnp.zeros_like(zt_sc[...])
         zs_sc[...] = jnp.zeros_like(zs_sc[...])
 
-    z = _tile_logits(h_ref[...], w_ref[...], cfg)           # (bm, bv) f32
+    scale_row = ws_ref[...] if quantized else None
+    z = _tile_logits(h_ref[...], w_ref[...], cfg, scale_row)  # (bm, bv) f32
     bm = z.shape[0]
     local_col = v * bv + jax.lax.broadcasted_iota(jnp.int32, (bm, bv), 1)
     col = local_col + off_ref[0, 0]                         # global vocab id
@@ -131,11 +147,18 @@ def fwd_stats(
     plan: Optional[BlockPlan] = None, interpret: Optional[bool] = None,
     *, col_offset=0, total_valid: Optional[int] = None,
     return_tile_stats: bool = False,
+    w_scale: Optional[jax.Array] = None,
 ):
     """Per-row (lse, z_target, z_sum) via the forward Pallas kernel.
 
     h: (N, d), w: (V, d), y: (N,) int32.  N and V are padded internally to
     the block plan; pad rows/cols never influence real outputs.
+
+    `w_scale` (V,) f32 marks `w` as row-quantized (int8/fp8, see
+    `kernels/quant.quantize_weight`): W tiles stream at 1 byte/element
+    and each logits tile is rescaled in-register before the softcap
+    (DESIGN.md §10.2).  Forward/eval only — `bwd_grads` refuses
+    quantized weights.
 
     With `return_tile_stats=True` a fourth output is returned: the
     (num_row_blocks, num_vocab_blocks) f32 per-tile max logit over live
@@ -150,7 +173,8 @@ def fwd_stats(
     v_orig = w.shape[0]
     valid = total_valid if total_valid is not None else (
         cfg.resolve_vocab(v_orig))
-    plan = plan or choose_blocks(n, v_orig, d, in_bytes=h.dtype.itemsize)
+    quantized = w_scale is not None
+    plan = plan or choose_blocks(n, v_orig, d, in_bytes=w.dtype.itemsize)
     bm, bv = plan.block_rows, plan.block_v
     interpret = interpret_default() if interpret is None else interpret
 
@@ -173,22 +197,29 @@ def fwd_stats(
         out_specs.append(pl.BlockSpec((1, 1), lambda r, v: (r, v)))
     kern = functools.partial(_fwd_kernel, cfg=cfg, valid=valid,
                              v_orig=v_orig, bv=bv, num_v=num_v,
-                             n_orig=n, emit_stats=return_tile_stats)
+                             n_orig=n, emit_stats=return_tile_stats,
+                             quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda r, v: (0, 0)),          # col offset
+        pl.BlockSpec((bm, 1), lambda r, v: (r, 0)),         # y
+        pl.BlockSpec((bm, d), lambda r, v: (r, 0)),         # h
+        pl.BlockSpec((bv, d), lambda r, v: (v, 0)),         # w
+    ]
+    inputs = [off, y2, h, w]
+    if quantized:
+        ws = jnp.pad(w_scale.astype(jnp.float32), (0, v_pad))[None, :]
+        in_specs.append(pl.BlockSpec((1, bv), lambda r, v: (0, v)))
+        inputs.append(ws)
     outs = pl.pallas_call(
         kern,
         grid=(num_r, num_v),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda r, v: (0, 0)),      # col offset
-            pl.BlockSpec((bm, 1), lambda r, v: (r, 0)),     # y
-            pl.BlockSpec((bm, d), lambda r, v: (r, 0)),     # h
-            pl.BlockSpec((bv, d), lambda r, v: (v, 0)),     # w
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bm, 1), jnp.float32) for _ in range(4)],
         compiler_params=compiler_params(),
         interpret=interpret,
-    )(off, y2, h, w)
+    )(*inputs)
     lse, ztgt, zsum = (o[:n, 0] for o in outs[:3])
     if return_tile_stats:
         return lse, ztgt, zsum, outs[3]
@@ -348,6 +379,12 @@ def bwd_grads(
     are bit-identical to the exact ones).  With neither, this is the
     exact backward, bit-for-bit the code that predates the filter.
     """
+    if w.dtype.itemsize == 1:
+        raise NotImplementedError(
+            "fused-CE backward does not support quantized lm_head weights "
+            f"(w.dtype={w.dtype.name}); quantized heads are forward/eval "
+            "only (DESIGN.md §10.2) — keep a bf16 master weight for "
+            "training")
     n, d = h.shape
     v_orig = w.shape[0]
     valid = total_valid if total_valid is not None else (

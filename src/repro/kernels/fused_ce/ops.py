@@ -70,6 +70,8 @@ def pallas_loss(
     y: jax.Array,
     cfg: Optional[LossConfig] = None,
     plan: Optional[BlockPlan] = None,
+    *,
+    w_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Fused projection+CE via the Pallas TPU kernels.
 
@@ -79,9 +81,23 @@ def pallas_loss(
     `plan` fixes the kernel tiling; `None` resolves it through the tuning
     cache (tuned winner if this shape was autotuned, `choose_blocks`
     otherwise).  Resolution is a trace-time dict lookup, never a trial run.
+
+    `w_scale` (V,) f32 marks `w` as row-quantized
+    (`kernels/quant.quantize_weight`): the forward streams 1-byte W
+    tiles with in-register rescale and plans resolve under the
+    wdtype-namespaced cache key.  This path is forward/eval only (no
+    custom VJP) — differentiating through it fails, by design: training
+    keeps a full-precision master weight (DESIGN.md §10.2).
     """
     cfg = cfg or LossConfig()
     if plan is None:
+        wdtype = w.dtype.name if w_scale is not None else None
         plan = lookup_plan(h.shape[0], w.shape[0], h.shape[-1], h.dtype,
-                           cfg=cfg)
+                           cfg=cfg, wdtype=wdtype)
+    if w_scale is not None:
+        lse, z_tgt, z_sum = K.fwd_stats(h, w, y, cfg, plan=plan,
+                                        w_scale=w_scale)
+        valid = cfg.resolve_vocab(w.shape[0])
+        rows = _rows_from_stats(lse, z_tgt, z_sum, y, valid, cfg)
+        return reduce_loss(rows, y, cfg)
     return _pallas_loss(h, w, y, cfg, plan)

@@ -38,15 +38,19 @@ def plan_pages_per_step(plan: BlockPlan, block_size: int, nb: int) -> int:
 
 
 def lookup_paged_plan(b: int, tq: int, nkv: int, hd: int, nb: int,
-                      block_size: int, dtype) -> int:
+                      block_size: int, dtype,
+                      wdtype: Optional[str] = None) -> int:
     """Zero-cost resolution of ``pages_per_step`` for the hot path.
 
     Cache hit -> the tuned winner; miss -> 1 (the conservative default:
     one pool block per sequential step — NOT the `choose_blocks`
-    heuristic, whose vocab-tile model says nothing about DMA chasing)."""
+    heuristic, whose vocab-tile model says nothing about DMA chasing).
+    ``wdtype`` names the quantized pool dtype (e.g. "int8"); its plans
+    live under separate ``+<wdtype>`` keys — in-register dequant changes
+    the per-page cost, so precisions must never share winners."""
     key = plan_key(b * tq, nb * block_size, nkv * hd,
                    jnp.dtype(dtype).name, jax.default_backend(),
-                   op=_op(block_size))
+                   op=_op(block_size), wdtype=wdtype)
     hit = get_cache().get(key)
     if hit is None:
         return 1
@@ -60,10 +64,14 @@ def autotune_paged_plan(
     trial_budget: int = 6,
     trial_iters: int = 2,
     refresh: bool = False,
+    wdtype: Optional[str] = None,
 ) -> int:
     """Measure candidate ``pages_per_step`` values on synthetic data of
     the exact decode shape; memoize the winning plan.  Returns the
-    resolved ``pages_per_step``."""
+    resolved ``pages_per_step``.  ``wdtype`` tunes the QUANTIZED kernel:
+    synthetic pools are quantized to that dtype with per-(token, head)
+    scale pools riding along, and the winner lands under the dtype's own
+    ``+<wdtype>`` key (see `lookup_paged_plan`)."""
     from repro.kernels.paged_attn.kernel import pallas_paged_attention
 
     dtype = jnp.dtype(dtype)
@@ -76,6 +84,13 @@ def autotune_paged_plan(
         (n_pool, block_size, nkv, hd)), dtype)
     vp = jnp.asarray(rng.standard_normal(
         (n_pool, block_size, nkv, hd)), dtype)
+    kps = vps = None
+    if wdtype is not None:
+        from repro.models.attention import quantize_kv
+        kp, kps = quantize_kv(kp)
+        vp, vps = quantize_kv(vp)
+        kp = kp.astype(jnp.dtype(wdtype))
+        vp = vp.astype(jnp.dtype(wdtype))
     table = jnp.asarray(
         1 + np.arange(b * nb).reshape(b, nb) % (n_pool - 1), jnp.int32)
     lens = jnp.full((b,), vocab, jnp.int32)
@@ -87,8 +102,8 @@ def autotune_paged_plan(
         if ppb in seen:
             return seen[ppb]
         fn = jax.jit(lambda q_, kp_, vp_: pallas_paged_attention(
-            q_, kp_, vp_, table, lens, softcap=softcap,
-            pages_per_step=ppb))
+            q_, kp_, vp_, table, lens, kp_scale=kps, vp_scale=vps,
+            softcap=softcap, pages_per_step=ppb))
         fn(q, kp, vp).block_until_ready()              # compile
         best = float("inf")
         for _ in range(max(trial_iters, 1)):
@@ -104,5 +119,6 @@ def autotune_paged_plan(
                                tag=f"{_op(block_size)}: ")
 
     plan = autotune_cached(_op(block_size), run, n_rows, vocab, d, dtype,
-                           trial_budget=trial_budget, refresh=refresh)
+                           trial_budget=trial_budget, refresh=refresh,
+                           wdtype=wdtype)
     return plan_pages_per_step(plan, block_size, nb)

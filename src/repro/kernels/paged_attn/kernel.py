@@ -59,14 +59,31 @@ def _round_up(x: int, m: int) -> int:
 def _paged_kernel(tab_ref, len_ref,                 # scalar prefetch
                   q_ref, *refs,
                   ppb: int, bs: int, tq: int, nkv: int, g: int, hd: int,
-                  n_steps: int, scale: float, softcap: Optional[float]):
-    """refs layout: ppb k-page refs, ppb v-page refs, out ref, then the
-    (m, a, acc) VMEM scratch.  Scratch rows are grouped per kv head:
-    rows ``n*g*tq .. (n+1)*g*tq`` belong to head ``n``."""
+                  n_steps: int, scale: float, softcap: Optional[float],
+                  quantized: bool = False):
+    """refs layout: ppb k-page refs, ppb v-page refs, [2*ppb scale-page
+    refs when quantized,] out ref, then the (m, a, acc) VMEM scratch.
+    Scratch rows are grouped per kv head: rows ``n*g*tq .. (n+1)*g*tq``
+    belong to head ``n``.
+
+    Quantized pages hold int8 K/V with per-(token, head) f32 scales
+    (`models/attention.quantize_kv`); each page's K tile is dequantized
+    in-register — cast + one multiply per kv head — and cast back to the
+    query dtype before the score dot, matching `_decode_quantized`'s
+    slab math bit-for-bit.  V dequantizes to f32 for the pv accumulate.
+    The full dequantized cache never exists anywhere (DESIGN.md §10.1).
+    """
     k_refs = refs[:ppb]
     v_refs = refs[ppb:2 * ppb]
-    o_ref = refs[2 * ppb]
-    m_sc, a_sc, acc_sc = refs[2 * ppb + 1:]
+    if quantized:
+        ks_refs = refs[2 * ppb:3 * ppb]
+        vs_refs = refs[3 * ppb:4 * ppb]
+        o_ref = refs[4 * ppb]
+        m_sc, a_sc, acc_sc = refs[4 * ppb + 1:]
+    else:
+        ks_refs = vs_refs = None
+        o_ref = refs[2 * ppb]
+        m_sc, a_sc, acc_sc = refs[2 * ppb + 1:]
 
     b = pl.program_id(0)
     j = pl.program_id(1)
@@ -84,11 +101,19 @@ def _paged_kernel(tab_ref, len_ref,                 # scalar prefetch
         col = j * ppb + i                        # RAW chain column: pages
         kb = k_refs[i][0]                        # past the clamp mask out
         vb = v_refs[i][0]                        # (bs, nkv*hd)
+        ksb = ks_refs[i][0] if quantized else None   # (bs, nkv) f32
+        vsb = vs_refs[i][0] if quantized else None
         for n in range(nkv):
             sl = slice(n * gtq, (n + 1) * gtq)
             q_n = q_ref[0, sl, :]                            # (gtq, hd)
             k_n = kb[:, n * hd:(n + 1) * hd]                 # (bs, hd)
             v_n = vb[:, n * hd:(n + 1) * hd]
+            if quantized:
+                # per-token dequant, one page tile at a time; K back to
+                # the query dtype so the MXU dot matches the slab oracle
+                k_n = (k_n.astype(jnp.float32)
+                       * ksb[:, n:n + 1]).astype(q_n.dtype)
+                v_n = v_n.astype(jnp.float32) * vsb[:, n:n + 1]
             s = jax.lax.dot_general(
                 q_n, k_n, dimension_numbers=(((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.float32) * scale  # (gtq, bs)
@@ -127,6 +152,8 @@ def _paged_kernel(tab_ref, len_ref,                 # scalar prefetch
 def pallas_paged_attention(
     q: jax.Array, kp: jax.Array, vp: jax.Array,
     table: jax.Array, lens: jax.Array, *,
+    kp_scale: Optional[jax.Array] = None,
+    vp_scale: Optional[jax.Array] = None,
     softcap: Optional[float] = None,
     pages_per_step: int = 1,
     interpret: Optional[bool] = None,
@@ -137,6 +164,12 @@ def pallas_paged_attention(
     block-chain rows (null block 0 beyond each chain); lens: (B,) cache
     length AFTER the Tq entries were appended.  Returns (B, Tq, nq, hd)
     in q's dtype; rows with ``lens == 0`` (ghost slots) return zeros.
+
+    `kp_scale`/`vp_scale` ((N, bs, nkv, 1) f32) mark the pools as
+    int8-quantized (`quantize_kv` layout): scale pages DMA alongside the
+    value pages through the same table-chasing index maps and each K/V
+    tile dequantizes in-register under the online-softmax scan — neither
+    the dense gathered cache NOR a dequantized pool ever exists.
     """
     b, tq, nq, hd = q.shape
     n_pool, bs, nkv = kp.shape[0], kp.shape[1], kp.shape[2]
@@ -149,6 +182,9 @@ def pallas_paged_attention(
     n_steps = -(-nb // ppb)
     scale = 1.0 / np.sqrt(hd)
     interpret = interpret_default() if interpret is None else interpret
+    quantized = kp_scale is not None
+    if quantized and vp_scale is None:
+        raise ValueError("kp_scale given without vp_scale")
 
     # rows grouped per kv head: row (n*g + gi)*tq + ti
     q_r = q.reshape(b, tq, nkv, g, hd)
@@ -158,20 +194,27 @@ def pallas_paged_attention(
     kp_f = kp.reshape(n_pool, bs, nkv * hd)
     vp_f = vp.reshape(n_pool, bs, nkv * hd)
 
-    def page_spec(i):
+    def page_spec(i, width):
         def index(bi, ji, tab_ref, len_ref):
             del len_ref
             col = jnp.minimum(ji * ppb + i, nb - 1)
             return (tab_ref[bi, col], 0, 0)
-        return pl.BlockSpec((1, bs, nkv * hd), index)
+        return pl.BlockSpec((1, bs, width), index)
+
+    in_specs = ([page_spec(i, nkv * hd) for i in range(ppb)] * 2)
+    inputs = [*([kp_f] * ppb), *([vp_f] * ppb)]
+    if quantized:
+        ks_f = kp_scale.astype(jnp.float32).reshape(n_pool, bs, nkv)
+        vs_f = vp_scale.astype(jnp.float32).reshape(n_pool, bs, nkv)
+        in_specs += [page_spec(i, nkv) for i in range(ppb)] * 2
+        inputs += [*([ks_f] * ppb), *([vs_f] * ppb)]
 
     row_spec = pl.BlockSpec((1, rows_pad, hd),
                             lambda bi, ji, tab_ref, len_ref: (bi, 0, 0))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, n_steps),
-        in_specs=[row_spec]
-        + [page_spec(i) for i in range(ppb)] * 2,
+        in_specs=[row_spec] + in_specs,
         out_specs=row_spec,
         scratch_shapes=[pltpu.VMEM((rows_pad, _LANE), jnp.float32),
                         pltpu.VMEM((rows_pad, _LANE), jnp.float32),
@@ -179,15 +222,15 @@ def pallas_paged_attention(
     )
     kern = functools.partial(
         _paged_kernel, ppb=ppb, bs=bs, tq=tq, nkv=nkv, g=g, hd=hd,
-        n_steps=n_steps, scale=scale, softcap=softcap)
+        n_steps=n_steps, scale=scale, softcap=softcap,
+        quantized=quantized)
     out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, rows_pad, hd), jnp.float32),
         compiler_params=compiler_params(),
         interpret=interpret,
-    )(table.astype(jnp.int32), lens.astype(jnp.int32), q_r,
-      *([kp_f] * ppb), *([vp_f] * ppb))
+    )(table.astype(jnp.int32), lens.astype(jnp.int32), q_r, *inputs)
     out = out[:, :rows].reshape(b, nkv, g, tq, hd)
     return jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(
         b, tq, nq, hd).astype(q.dtype)

@@ -142,6 +142,7 @@ def autotune_cached(
     cache: Optional[TuningCache] = None,
     trial_budget: int = 8,
     refresh: bool = False,
+    wdtype: Optional[str] = None,
 ) -> BlockPlan:
     """Memoized empirical plan: cache hit → stored winner, miss → `run()`.
 
@@ -149,11 +150,13 @@ def autotune_cached(
     `choose_blocks` heuristic (still the universal cold-cache fallback).
     A sweep where every trial failed falls back to the heuristic WITHOUT
     memoizing, so tuning retries once the transient cause clears — and
-    Infinity is never written into the JSON cache.
+    Infinity is never written into the JSON cache.  ``wdtype`` names a
+    quantized streamed-operand dtype (int8/fp8 lm_head or KV pool) so
+    tuned plans never cross-contaminate between precisions.
     """
     dtype = jnp.dtype(dtype)
     key = plan_key(n_rows, vocab, d, dtype.name, jax.default_backend(),
-                   op=op)
+                   op=op, wdtype=wdtype)
     cache = cache if cache is not None else get_cache()
     if not refresh:
         hit = cache.get(key)
@@ -182,12 +185,13 @@ def lookup_cached(
     dtype,
     *,
     cache: Optional[TuningCache] = None,
+    wdtype: Optional[str] = None,
 ) -> BlockPlan:
     """Zero-cost plan resolution for hot paths (never measures)."""
     dtype = jnp.dtype(dtype)
     cache = cache if cache is not None else get_cache()
     hit = cache.get(plan_key(n_rows, vocab, d, dtype.name,
-                             jax.default_backend(), op=op))
+                             jax.default_backend(), op=op, wdtype=wdtype))
     if hit is not None:
         return hit
     return choose_blocks(n_rows, vocab, d, in_bytes=dtype.itemsize)

@@ -1,0 +1,95 @@
+"""Shared weight/KV quantization helpers for the serve hot path.
+
+DESIGN.md §10: the decode bottleneck is bytes moved, not FLOPs — the
+lm_head operand streamed through fused_ce / sample_topk / score_tokens
+and the paged KV pool dominate HBM traffic.  This module is the ONE
+place that defines how those operands shrink:
+
+  * `quantize_weight(w, dtype)` — per-output-row (= per vocab column of
+    the logits) symmetric quantization of a (V, d) projection into int8
+    or fp8 plus an f32 scale vector (V,).  Row-granular scales factor
+    OUT of the d-contraction — ``z[r, v] = s[v] * Σ_d h[r, d] * q[v, d]``
+    — so every consumer kernel can run the MXU dot on the raw quantized
+    tile and multiply the (rows, bv) logits tile by ``s[None, :]``
+    afterwards: the dequantized weight tensor never exists, in HBM or
+    VMEM.
+  * `head_quant_dtype(name)` — resolves/validates a user-facing
+    ``head_dtype`` string ("int8", "float8_e4m3fn", "float8_e5m2") to a
+    jnp dtype, gated on backend support so fp8 requests fail loudly
+    where the toolchain lacks the type.
+
+int8 uses the symmetric [-127, 127] grid (`-128` unused, like
+`attention.quantize_kv`); fp8 divides by ``amax / finfo.max`` and lets
+the cast round.  Both quantized value sets are exactly representable in
+bf16/f32, so the in-tile ``q.astype(h.dtype)`` cast is lossless and the
+only approximation error is the quantization grid itself.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_FP8_NAMES = ("float8_e4m3fn", "float8_e5m2")
+HEAD_DTYPES = ("int8",) + _FP8_NAMES
+
+_EPS = 1e-8
+
+
+def head_quant_dtype(name: Optional[str]):
+    """``ServeConfig.head_dtype`` string -> jnp dtype, or None for off.
+
+    ``""``/None/"bfloat16"/"float32" mean "serve the lm_head at model
+    dtype" (no quantization).  Unknown or backend-unsupported names
+    raise, so a typo'd ``--head-dtype`` never silently serves bf16.
+    """
+    if not name or name in ("bfloat16", "float32"):
+        return None
+    if name not in HEAD_DTYPES:
+        raise ValueError(
+            f"head_dtype {name!r} not supported; pick one of "
+            f"{('',) + HEAD_DTYPES} ('' serves at model dtype)")
+    try:
+        return jnp.dtype(name)
+    except TypeError as e:  # fp8 type absent from this jax build
+        raise NotImplementedError(
+            f"head_dtype {name!r} is not available in this jax build "
+            f"({e}); use 'int8'") from e
+
+
+def quantize_weight(w: jax.Array, dtype="int8"
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """(V, d) weight -> (quantized (V, d), per-row f32 scale (V,)).
+
+    Symmetric per-row max-abs scaling: row v's scale is
+    ``max_d |w[v, d]| / grid_max`` (clamped >= 1e-8 so all-zero rows
+    stay finite), and ``dequantize_weight(q, s) ≈ w`` with relative
+    error bounded by half a grid step per element.
+    """
+    qdtype = jnp.dtype(dtype)
+    w32 = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(w32), axis=-1, keepdims=True)       # (V, 1)
+    if qdtype == jnp.int8:
+        s = jnp.maximum(amax / 127.0, _EPS)
+        q = jnp.clip(jnp.round(w32 / s), -127, 127).astype(jnp.int8)
+    elif qdtype.name in _FP8_NAMES:
+        s = jnp.maximum(amax / float(jnp.finfo(qdtype).max), _EPS)
+        q = (w32 / s).astype(qdtype)
+    else:
+        raise ValueError(f"unsupported quantization dtype {qdtype.name!r}; "
+                         f"pick one of {HEAD_DTYPES}")
+    return q, s[:, 0].astype(jnp.float32)
+
+
+def dequantize_weight(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Reference inverse of `quantize_weight` (tests/oracles only — hot
+    paths dequantize per tile inside the kernels, never materializing
+    this array)."""
+    return q.astype(jnp.float32) * scale[:, None]
+
+
+def is_quantized_dtype(dtype) -> bool:
+    """True for sub-bf16 storage dtypes (1 byte/element)."""
+    return jnp.dtype(dtype).itemsize == 1

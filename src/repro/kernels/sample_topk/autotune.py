@@ -35,12 +35,12 @@ def _op(k: int) -> str:
 def measure_topk_plan(
     h: jax.Array, w: jax.Array, k: int, plan: BlockPlan, *,
     iters: int = 2, logit_softcap: Optional[float] = None,
-    interpret: Optional[bool] = None,
+    interpret: Optional[bool] = None, w_scale=None,
 ) -> float:
     """Min-of-`iters` wall time (µs) of one `topk_scores` call."""
     fn = jax.jit(functools.partial(K.topk_scores, k=k, plan=plan,
                                    logit_softcap=logit_softcap,
-                                   interpret=interpret))
+                                   interpret=interpret, w_scale=w_scale))
     jax.block_until_ready(fn(h, w))        # compile, excluded from timing
     best = float("inf")
     for _ in range(max(iters, 1)):
@@ -62,17 +62,25 @@ def run_topk_trials(
     logit_softcap: Optional[float] = None,
     interpret: Optional[bool] = None,
     seed: int = 0,
+    wdtype: Optional[str] = None,
 ) -> TuneResult:
     """Time candidate plans for the decode top-k shape; heuristic always in
-    the timed set, so ``best_us <= heuristic_us`` within one sweep."""
+    the timed set, so ``best_us <= heuristic_us`` within one sweep.
+    ``wdtype`` times the QUANTIZED kernel variant (int8/fp8 W tiles with
+    per-row scales) so the plan reflects the halved bytes-per-tile."""
     dtype = jnp.dtype(dtype)
     k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
     h = (jax.random.normal(k1, (n_rows, d)) * 0.5).astype(dtype)
     w = (jax.random.normal(k2, (vocab, d)) * 0.05).astype(dtype)
+    w_scale = None
+    if wdtype is not None:
+        from repro.kernels.quant import quantize_weight
+        w, w_scale = quantize_weight(w, wdtype)
     return run_plan_trials(
         lambda plan: measure_topk_plan(h, w, k, plan, iters=trial_iters,
                                        logit_softcap=logit_softcap,
-                                       interpret=interpret),
+                                       interpret=interpret,
+                                       w_scale=w_scale),
         n_rows, vocab, d, dtype, trial_budget=trial_budget,
         tag=f"topk{k} ")
 
@@ -90,17 +98,19 @@ def autotune_topk_plan(
     logit_softcap: Optional[float] = None,
     interpret: Optional[bool] = None,
     refresh: bool = False,
+    wdtype: Optional[str] = None,
 ) -> BlockPlan:
-    """Memoized empirical plan for the decode top-k kernel."""
+    """Memoized empirical plan for the decode top-k kernel.  ``wdtype``
+    (e.g. "int8") tunes — and keys — the quantized-lm_head variant."""
     return autotune_cached(
         _op(k),
         lambda: run_topk_trials(n_rows, vocab, d, k, dtype,
                                 trial_budget=trial_budget,
                                 trial_iters=trial_iters,
                                 logit_softcap=logit_softcap,
-                                interpret=interpret),
+                                interpret=interpret, wdtype=wdtype),
         n_rows, vocab, d, dtype, cache=cache, trial_budget=trial_budget,
-        refresh=refresh)
+        refresh=refresh, wdtype=wdtype)
 
 
 def lookup_topk_plan(
@@ -111,6 +121,8 @@ def lookup_topk_plan(
     dtype=jnp.bfloat16,
     *,
     cache: Optional[TuningCache] = None,
+    wdtype: Optional[str] = None,
 ) -> BlockPlan:
     """Zero-cost plan resolution for the decode hot path (never measures)."""
-    return lookup_cached(_op(k), n_rows, vocab, d, dtype, cache=cache)
+    return lookup_cached(_op(k), n_rows, vocab, d, dtype, cache=cache,
+                         wdtype=wdtype)

@@ -50,11 +50,15 @@ _NEG_INF = float("-inf")
 _BIG_IDX = 2 ** 30
 
 
-def _topk_kernel(off_ref, h_ref, w_ref,          # inputs
-                 vals_ref, idx_ref,              # outputs (bm, k_pad)
-                 vals_sc, idx_sc,                # scratch  (bm, k_pad)
-                 *, k: int, valid: int, v_orig: int, bv: int, num_v: int,
-                 softcap: Optional[float]):
+def _topk_kernel(off_ref, h_ref, w_ref,          # inputs (+ opt. w scale)
+                 *rest,                          # [ws_ref,] outs, scratch
+                 k: int, valid: int, v_orig: int, bv: int, num_v: int,
+                 softcap: Optional[float], quantized: bool):
+    if quantized:
+        ws_ref, vals_ref, idx_ref, vals_sc, idx_sc = rest
+    else:
+        vals_ref, idx_ref, vals_sc, idx_sc = rest
+        ws_ref = None
     v = pl.program_id(1)
 
     @pl.when(v == 0)
@@ -62,12 +66,21 @@ def _topk_kernel(off_ref, h_ref, w_ref,          # inputs
         vals_sc[...] = jnp.full_like(vals_sc[...], _NEG_INF)
         idx_sc[...] = jnp.zeros_like(idx_sc[...])
 
-    # (bm, bv) logits tile on the MXU, f32 accumulate; softcap in-tile
+    # (bm, bv) logits tile on the MXU, f32 accumulate; softcap in-tile.
+    # A quantized W tile is cast in-register (int8/fp8 grids are exact in
+    # bf16/f32) and the per-row scale factors out of the d-contraction:
+    # the (1, bv) scale block multiplies the logits tile AFTER the dot,
+    # so no dequantized W tile ever exists (DESIGN.md §10.2).
+    wt = w_ref[...]
+    if quantized:
+        wt = wt.astype(h_ref.dtype)
     z = jax.lax.dot_general(
-        h_ref[...], w_ref[...],
+        h_ref[...], wt,
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
+    if quantized:
+        z = z * ws_ref[...]                      # (1, bv) broadcast
     if softcap is not None:
         cap = jnp.float32(softcap)
         z = cap * jnp.tanh(z / cap)
@@ -126,6 +139,7 @@ def topk_scores(
     plan: Optional[BlockPlan] = None,
     interpret: Optional[bool] = None,
     col_offset=0,
+    w_scale: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Per-row top-k of ``h @ w.T`` via the streaming Pallas kernel.
 
@@ -136,6 +150,11 @@ def topk_scores(
     plan; when k exceeds the valid vocabulary the tail positions hold
     ``-inf`` values and unspecified indices.
 
+    `w_scale` (V,) f32 marks `w` as quantized (int8/fp8 per-row, see
+    `kernels/quant.quantize_weight`): the kernel streams the 1-byte W
+    tiles and rescales each logits tile in-register — half the HBM
+    bytes per sampling step, no dequantized W anywhere.
+
     Tensor-parallel shards pass `col_offset` (global id of w's first row)
     and a global `valid_vocab`; per-shard (k-best values, ids) then merge
     with one small all-gather + host-side top-k — never the logits.
@@ -145,10 +164,11 @@ def topk_scores(
     n, d = h.shape
     v_orig = w.shape[0]
     valid = v_orig if valid_vocab is None else valid_vocab
-    plan = plan or choose_blocks(n, v_orig, d, in_bytes=h.dtype.itemsize)
+    plan = plan or choose_blocks(n, v_orig, d, in_bytes=w.dtype.itemsize)
     bm, bv = plan.block_rows, plan.block_v
     interpret = interpret_default() if interpret is None else interpret
     kp = -(-k // _LANE) * _LANE                     # lane-aligned state
+    quantized = w_scale is not None
 
     n_pad = (-n) % bm
     v_pad = (-v_orig) % bv
@@ -161,16 +181,23 @@ def topk_scores(
 
     off = jnp.asarray(col_offset, jnp.int32).reshape(1, 1)
     kern = functools.partial(_topk_kernel, k=k, valid=valid, v_orig=v_orig,
-                             bv=bv, num_v=num_v, softcap=logit_softcap)
+                             bv=bv, num_v=num_v, softcap=logit_softcap,
+                             quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda r, v: (0, 0)),      # col offset
+        pl.BlockSpec((bm, d), lambda r, v: (r, 0)),     # h
+        pl.BlockSpec((bv, d), lambda r, v: (v, 0)),     # w
+    ]
+    inputs = [off, h, w]
+    if quantized:
+        ws = jnp.pad(w_scale.astype(jnp.float32), (0, v_pad))[None, :]
+        in_specs.append(pl.BlockSpec((1, bv), lambda r, v: (0, v)))
+        inputs.append(ws)
     out_spec = pl.BlockSpec((bm, kp), lambda r, v: (r, 0))
     vals, idxs = pl.pallas_call(
         kern,
         grid=(num_r, num_v),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda r, v: (0, 0)),      # col offset
-            pl.BlockSpec((bm, d), lambda r, v: (r, 0)),     # h
-            pl.BlockSpec((bv, d), lambda r, v: (v, 0)),     # w
-        ],
+        in_specs=in_specs,
         out_specs=[out_spec, out_spec],
         out_shape=[jax.ShapeDtypeStruct((np_, kp), jnp.float32),
                    jax.ShapeDtypeStruct((np_, kp), jnp.int32)],
@@ -178,5 +205,5 @@ def topk_scores(
                         pltpu.VMEM((bm, kp), jnp.int32)],
         compiler_params=compiler_params(),
         interpret=interpret,
-    )(off, h, w)
+    )(*inputs)
     return vals[:n, :k], idxs[:n, :k]

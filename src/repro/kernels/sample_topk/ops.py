@@ -30,6 +30,7 @@ def pallas_topk(
     plan: Optional[BlockPlan] = None,
     interpret: Optional[bool] = None,
     col_offset=0,
+    w_scale: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Top-k (values, global indices) of ``h @ w.T`` per row, logits-free.
 
@@ -37,10 +38,16 @@ def pallas_topk(
     the same algorithm.  Output matches ``jax.lax.top_k`` of the masked
     dense logits exactly at every finite position, ties included (-inf
     tail positions, k > valid vocab, carry unspecified indices).
+
+    `w_scale` (V,) marks `w` as row-quantized (`quantize_weight`); plans
+    then resolve under the wdtype-namespaced cache key so int8 and bf16
+    winners never shadow each other.
     """
     if plan is None:
+        wdtype = w.dtype.name if w_scale is not None else None
         plan = lookup_topk_plan(h.shape[0], w.shape[0], h.shape[-1], k,
-                                h.dtype)
+                                h.dtype, wdtype=wdtype)
     return K.topk_scores(h, w, k, valid_vocab=valid_vocab,
                          logit_softcap=logit_softcap, plan=plan,
-                         interpret=interpret, col_offset=col_offset)
+                         interpret=interpret, col_offset=col_offset,
+                         w_scale=w_scale)

@@ -37,12 +37,12 @@ def _op(p: int) -> str:
 def measure_score_plan(
     h: jax.Array, w: jax.Array, ids: jax.Array, plan: BlockPlan, *,
     iters: int = 2, logit_softcap: Optional[float] = None,
-    interpret: Optional[bool] = None,
+    interpret: Optional[bool] = None, w_scale=None,
 ) -> float:
     """Min-of-`iters` wall time (µs) of one `score_stats` call."""
     fn = jax.jit(functools.partial(K.score_stats, plan=plan,
                                    logit_softcap=logit_softcap,
-                                   interpret=interpret))
+                                   interpret=interpret, w_scale=w_scale))
     jax.block_until_ready(fn(h, w, ids))   # compile, excluded from timing
     best = float("inf")
     for _ in range(max(iters, 1)):
@@ -64,18 +64,25 @@ def run_score_trials(
     logit_softcap: Optional[float] = None,
     interpret: Optional[bool] = None,
     seed: int = 0,
+    wdtype: Optional[str] = None,
 ) -> TuneResult:
     """Time candidate plans for the scoring shape; the heuristic is always
-    in the timed set, so ``best_us <= heuristic_us`` within one sweep."""
+    in the timed set, so ``best_us <= heuristic_us`` within one sweep.
+    ``wdtype`` times the quantized-lm_head kernel variant."""
     dtype = jnp.dtype(dtype)
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
     h = (jax.random.normal(k1, (n_rows, d)) * 0.5).astype(dtype)
     w = (jax.random.normal(k2, (vocab, d)) * 0.05).astype(dtype)
+    w_scale = None
+    if wdtype is not None:
+        from repro.kernels.quant import quantize_weight
+        w, w_scale = quantize_weight(w, wdtype)
     ids = jax.random.randint(k3, (n_rows, n_cand), 0, vocab, jnp.int32)
     return run_plan_trials(
         lambda plan: measure_score_plan(h, w, ids, plan, iters=trial_iters,
                                         logit_softcap=logit_softcap,
-                                        interpret=interpret),
+                                        interpret=interpret,
+                                        w_scale=w_scale),
         n_rows, vocab, d, dtype, trial_budget=trial_budget,
         tag=f"score{n_cand} ")
 
@@ -93,17 +100,19 @@ def autotune_score_plan(
     logit_softcap: Optional[float] = None,
     interpret: Optional[bool] = None,
     refresh: bool = False,
+    wdtype: Optional[str] = None,
 ) -> BlockPlan:
-    """Memoized empirical plan for the token-scoring kernel."""
+    """Memoized empirical plan for the token-scoring kernel.  ``wdtype``
+    (e.g. "int8") tunes — and keys — the quantized-lm_head variant."""
     return autotune_cached(
         _op(n_cand),
         lambda: run_score_trials(n_rows, vocab, d, n_cand, dtype,
                                  trial_budget=trial_budget,
                                  trial_iters=trial_iters,
                                  logit_softcap=logit_softcap,
-                                 interpret=interpret),
+                                 interpret=interpret, wdtype=wdtype),
         n_rows, vocab, d, dtype, cache=cache, trial_budget=trial_budget,
-        refresh=refresh)
+        refresh=refresh, wdtype=wdtype)
 
 
 def lookup_score_plan(
@@ -114,6 +123,8 @@ def lookup_score_plan(
     dtype=jnp.bfloat16,
     *,
     cache: Optional[TuningCache] = None,
+    wdtype: Optional[str] = None,
 ) -> BlockPlan:
     """Zero-cost plan resolution for the verify hot path (never measures)."""
-    return lookup_cached(_op(n_cand), n_rows, vocab, d, dtype, cache=cache)
+    return lookup_cached(_op(n_cand), n_rows, vocab, d, dtype, cache=cache,
+                         wdtype=wdtype)

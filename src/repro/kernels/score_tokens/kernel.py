@@ -51,11 +51,16 @@ _NEG_INF = float("-inf")
 _NO_ID = -1
 
 
-def _score_kernel(off_ref, ids_ref, h_ref, w_ref,   # inputs
-                  lse_ref, zt_ref,                  # outputs
-                  m_sc, a_sc, zt_sc,                # scratch
-                  *, n_cand: int, valid: int, v_orig: int, bv: int,
-                  num_v: int, softcap: Optional[float], inv_temp: float):
+def _score_kernel(off_ref, ids_ref, h_ref, w_ref,   # inputs (+ opt. scale)
+                  *rest,                            # [ws_ref,] outs, scratch
+                  n_cand: int, valid: int, v_orig: int, bv: int,
+                  num_v: int, softcap: Optional[float], inv_temp: float,
+                  quantized: bool):
+    if quantized:
+        ws_ref, lse_ref, zt_ref, m_sc, a_sc, zt_sc = rest
+    else:
+        lse_ref, zt_ref, m_sc, a_sc, zt_sc = rest
+        ws_ref = None
     v = pl.program_id(1)
 
     @pl.when(v == 0)
@@ -65,12 +70,20 @@ def _score_kernel(off_ref, ids_ref, h_ref, w_ref,   # inputs
         zt_sc[...] = jnp.zeros_like(zt_sc[...])
 
     # (bm, bv) logits tile on the MXU, f32 accumulate; softcap and
-    # temperature applied in-tile (sampling order: cap, then z/T)
+    # temperature applied in-tile (sampling order: cap, then z/T).
+    # Quantized W: cast the 1-byte tile in-register (lossless), rescale
+    # the logits tile by the (1, bv) per-row scales BEFORE the softcap —
+    # the scale is part of the raw logit (DESIGN.md §10.2).
+    wt = w_ref[...]
+    if quantized:
+        wt = wt.astype(h_ref.dtype)
     z = jax.lax.dot_general(
-        h_ref[...], w_ref[...],
+        h_ref[...], wt,
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
+    if quantized:
+        z = z * ws_ref[...]
     if softcap is not None:
         cap = jnp.float32(softcap)
         z = cap * jnp.tanh(z / cap)
@@ -121,8 +134,13 @@ def score_stats(
     plan: Optional[BlockPlan] = None,
     interpret: Optional[bool] = None,
     col_offset=0,
+    w_scale: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Per-row (lse, candidate logits) via the streaming Pallas kernel.
+
+    `w_scale` (V,) f32 marks `w` as row-quantized (int8/fp8, see
+    `kernels/quant.quantize_weight`): W tiles stream at 1 byte/element
+    and each logits tile is rescaled in-register before softcap/T.
 
     h: (N, d); w: (V, d); ids: (N,) or (N, P) int32 global token ids.
     Returns (lse (N,) f32, z_cand (N, P) f32) where ``z_cand[r, p]`` is
@@ -142,10 +160,11 @@ def score_stats(
         raise ValueError(f"ids rows {ids.shape[0]} != h rows {n}")
     v_orig = w.shape[0]
     valid = v_orig if valid_vocab is None else valid_vocab
-    plan = plan or choose_blocks(n, v_orig, d, in_bytes=h.dtype.itemsize)
+    plan = plan or choose_blocks(n, v_orig, d, in_bytes=w.dtype.itemsize)
     bm, bv = plan.block_rows, plan.block_v
     interpret = interpret_default() if interpret is None else interpret
     kp = -(-p_cand // _LANE) * _LANE                 # lane-aligned cands
+    quantized = w_scale is not None
 
     n_pad = (-n) % bm
     v_pad = (-v_orig) % bv
@@ -164,16 +183,23 @@ def score_stats(
     off = jnp.asarray(col_offset, jnp.int32).reshape(1, 1)
     kern = functools.partial(_score_kernel, n_cand=p_cand, valid=valid,
                              v_orig=v_orig, bv=bv, num_v=num_v,
-                             softcap=logit_softcap, inv_temp=inv_temp)
+                             softcap=logit_softcap, inv_temp=inv_temp,
+                             quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda r, v: (0, 0)),      # col offset
+        pl.BlockSpec((bm, kp), lambda r, v: (r, 0)),    # candidate ids
+        pl.BlockSpec((bm, d), lambda r, v: (r, 0)),     # h
+        pl.BlockSpec((bv, d), lambda r, v: (v, 0)),     # w
+    ]
+    inputs = [off, ids, h, w]
+    if quantized:
+        ws = jnp.pad(w_scale.astype(jnp.float32), (0, v_pad))[None, :]
+        in_specs.append(pl.BlockSpec((1, bv), lambda r, v: (0, v)))
+        inputs.append(ws)
     lse, zt = pl.pallas_call(
         kern,
         grid=(num_r, num_v),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda r, v: (0, 0)),      # col offset
-            pl.BlockSpec((bm, kp), lambda r, v: (r, 0)),    # candidate ids
-            pl.BlockSpec((bm, d), lambda r, v: (r, 0)),     # h
-            pl.BlockSpec((bv, d), lambda r, v: (v, 0)),     # w
-        ],
+        in_specs=in_specs,
         out_specs=[pl.BlockSpec((bm, 1), lambda r, v: (r, 0)),
                    pl.BlockSpec((bm, kp), lambda r, v: (r, 0))],
         out_shape=[jax.ShapeDtypeStruct((np_, 1), jnp.float32),
@@ -183,5 +209,5 @@ def score_stats(
                         pltpu.VMEM((bm, kp), jnp.float32)],
         compiler_params=compiler_params(),
         interpret=interpret,
-    )(off, ids, h, w)
+    )(*inputs)
     return lse[:n, 0], zt[:n, :p_cand]

@@ -33,8 +33,13 @@ def pallas_score_tokens(
     plan: Optional[BlockPlan] = None,
     interpret: Optional[bool] = None,
     col_offset=0,
+    w_scale: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """(logp (N, P) f32, lse (N,) f32) of candidate ids — logits-free.
+
+    `w_scale` (V,) marks `w` as row-quantized (`quantize_weight`): the
+    kernel streams 1-byte W tiles with in-register rescale, and plans
+    resolve under the wdtype-namespaced tuning-cache key.
 
     ``logp[r, p] = log softmax(h_r @ w.T)[ids[r, p]]`` on the valid
     vocabulary (softcap, then 1/T temperature scaling, applied inside
@@ -51,12 +56,14 @@ def pallas_score_tokens(
     if squeeze:
         ids = ids[:, None]
     if plan is None:
+        wdtype = w.dtype.name if w_scale is not None else None
         plan = lookup_score_plan(h.shape[0], w.shape[0], h.shape[-1],
-                                 ids.shape[1], h.dtype)
+                                 ids.shape[1], h.dtype, wdtype=wdtype)
     lse, zt = K.score_stats(h, w, ids, valid_vocab=valid_vocab,
                             logit_softcap=logit_softcap,
                             temperature=temperature, plan=plan,
-                            interpret=interpret, col_offset=col_offset)
+                            interpret=interpret, col_offset=col_offset,
+                            w_scale=w_scale)
     valid = w.shape[0] if valid_vocab is None else valid_vocab
     ok = (ids >= 0) & (ids < valid)
     logp = jnp.where(ok, zt - lse[:, None], -jnp.inf)

@@ -19,13 +19,17 @@ def streaming_score(
     block_v: int = 8192, valid_vocab: Optional[int] = None,
     logit_softcap: Optional[float] = None,
     temperature: Optional[float] = None,
+    w_scale: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """(logp (N, P) f32, lse (N,) f32) of candidate ids under h @ w.T.
 
     h: (N, d); w: (V, d); ids: (N,) or (N, P) int32.  Ids outside
     ``[0, valid_vocab)`` score -inf.  `temperature` > 0 scales logits
     by 1/T after the softcap (the sampled distribution); None or <= 0
-    scores unscaled.  Mirrors `ops.pallas_score_tokens`.
+    scores unscaled.  `w_scale` (V,) marks `w` as row-quantized: each
+    chunk's logits are rescaled after the dot (only one (N, bv) chunk
+    of dequantized math lives at a time).  Mirrors
+    `ops.pallas_score_tokens`.
     """
     if ids.ndim == 1:
         ids = ids[:, None]
@@ -40,14 +44,20 @@ def streaming_score(
         w = jnp.pad(w, ((0, pad), (0, 0)))
     n_chunks = w.shape[0] // bv
     w_chunks = w.reshape(n_chunks, bv, d)
+    s_chunks = None
+    if w_scale is not None:
+        s_chunks = jnp.pad(w_scale.astype(jnp.float32),
+                           (0, pad)).reshape(n_chunks, bv)
     h32 = h.astype(jnp.float32)
     ids = ids.astype(jnp.int32)
 
     def body(carry, inputs):
         m, a, zt = carry
-        w_chunk, idx = inputs
+        w_chunk, s_chunk, idx = inputs
         z = jnp.dot(h32, w_chunk.T.astype(jnp.float32),
                     preferred_element_type=jnp.float32)     # (N, bv)
+        if s_chunk is not None:
+            z = z * s_chunk[None, :]
         if logit_softcap is not None:
             cap = jnp.float32(logit_softcap)
             z = cap * jnp.tanh(z / cap)
@@ -69,8 +79,14 @@ def streaming_score(
     init = (jnp.full((n, 1), -jnp.inf, jnp.float32),
             jnp.zeros((n, 1), jnp.float32),
             jnp.zeros(ids.shape, jnp.float32))
-    (m, a, zt), _ = jax.lax.scan(
-        body, init, (w_chunks, jnp.arange(n_chunks, dtype=jnp.int32)))
+    chunk_ids = jnp.arange(n_chunks, dtype=jnp.int32)
+    if s_chunks is None:
+        (m, a, zt), _ = jax.lax.scan(
+            lambda c, xs: body(c, (xs[0], None, xs[1])), init,
+            (w_chunks, chunk_ids))
+    else:
+        (m, a, zt), _ = jax.lax.scan(
+            body, init, (w_chunks, s_chunks, chunk_ids))
     lse = (m + jnp.log(a))[:, 0]
     ok = (ids >= 0) & (ids < valid)
     logp = jnp.where(ok, zt - lse[:, None], -jnp.inf)

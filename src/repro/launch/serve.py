@@ -74,6 +74,14 @@ def main(argv=None):
                     help="paged decode: Pallas kernel or gather oracle")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="paged: disable the shared-prefix trie")
+    ap.add_argument("--quantize-cache", action="store_true",
+                    help="int8 KV cache with per-(token, head) scales "
+                         "(slab or paged; transformer family only)")
+    ap.add_argument("--head-dtype", default=None,
+                    metavar="DTYPE",
+                    help="quantized lm_head serving dtype (int8, "
+                         "float8_e4m3fn, float8_e5m2; default: full "
+                         "precision)")
     ap.add_argument("--stats-json", nargs="?", const="-", default=None,
                     metavar="PATH",
                     help="dump the scheduler stats report as JSON "
@@ -104,7 +112,9 @@ def main(argv=None):
                      paged=args.paged, block_size=args.block_size,
                      pool_blocks=args.pool_blocks,
                      paged_impl=args.paged_impl,
-                     prefix_cache=not args.no_prefix_cache)
+                     prefix_cache=not args.no_prefix_cache,
+                     quantize_cache=args.quantize_cache,
+                     head_dtype=args.head_dtype)
     if args.spec_self:
         cls = PagedSelfSpecEngine if args.paged else SelfSpecEngine
         eng = cls(arch, params, sc,

@@ -424,7 +424,12 @@ def attention_layer(
 
     cache: None for training; {'k','v','len'} (dense slab), a ring
     buffer ({'pos'}), an int8 slab ({'k_scale'}) or a paged block-pool
-    tree ({'kp','vp','table','len'}, DESIGN.md §8) for serving.  When x
+    tree ({'kp','vp','table','len'}, DESIGN.md §8) for serving.  A paged
+    tree carrying 'kp_scale'/'vp_scale' pools is QUANTIZED paging
+    (DESIGN.md §10): fresh K/V quantize through `quantize_kv` before the
+    block scatter and decode dequantizes per chain block — in-register
+    in the pallas kernel, or through a gathered dense slab view fed to
+    `_decode_quantized` on the jax oracle path.  When x
     has T > 1 and cache is given, this is a prefill (cache is filled);
     when T == 1 it is a decode step (append + attend).  ``decode=True``
     (static) forces decode semantics for T > 1 too: the new tokens are
@@ -456,32 +461,66 @@ def attention_layer(
     if cache is None:
         out = blockwise_attention(q, k, v, cfg)
     elif "table" in cache:                                # paged block-pool
-        kp = _paged_update(cache["kp"], cache["table"], k, cache["len"])
-        vp = _paged_update(cache["vp"], cache["table"], v, cache["len"])
+        quant = "kp_scale" in cache             # int8 pools + scale pools
+        table = cache["table"]
+        if quant:
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            kp = _paged_update(cache["kp"], table, kq, cache["len"])
+            vp = _paged_update(cache["vp"], table, vq, cache["len"])
+            kps = _paged_update(cache["kp_scale"], table, ks, cache["len"])
+            vps = _paged_update(cache["vp_scale"], table, vs, cache["len"])
+        else:
+            kp = _paged_update(cache["kp"], table, k, cache["len"])
+            vp = _paged_update(cache["vp"], table, v, cache["len"])
         new_len = cache["len"] + t
-        new_cache = {"kp": kp, "vp": vp, "table": cache["table"],
-                     "len": new_len}
+        new_cache = {"kp": kp, "vp": vp, "table": table, "len": new_len}
+        if quant:
+            new_cache["kp_scale"] = kps
+            new_cache["vp_scale"] = vps
         if is_decode:
             if cfg.window is not None:
                 raise NotImplementedError(
                     "paged decode has no local-window path (windowed "
                     "caches are ring buffers, already O(window))")
             if prefill_ext:
-                out = extend_attention(q, gather_paged_kv(kp, cache["table"]),
-                                       gather_paged_kv(vp, cache["table"]),
-                                       new_len, cfg)
+                if quant:
+                    # suffix prefill over a dequantized chain view; the
+                    # scale factors mirror `_decode_quantized` (K back
+                    # to the query dtype, V in f32)
+                    kd = (gather_paged_kv(kp, table).astype(jnp.float32)
+                          * gather_paged_kv(kps, table)).astype(q.dtype)
+                    vd = (gather_paged_kv(vp, table).astype(jnp.float32)
+                          * gather_paged_kv(vps, table))
+                    out = extend_attention(q, kd, vd, new_len, cfg)
+                else:
+                    out = extend_attention(q, gather_paged_kv(kp, table),
+                                           gather_paged_kv(vp, table),
+                                           new_len, cfg)
             elif cfg.paged_impl == "pallas":
                 from repro.kernels.paged_attn import (lookup_paged_plan,
                                                       pallas_paged_attention)
                 ppb = lookup_paged_plan(
-                    b, t, kp.shape[2], kp.shape[3], cache["table"].shape[1],
-                    kp.shape[1], q.dtype)
+                    b, t, kp.shape[2], kp.shape[3], table.shape[1],
+                    kp.shape[1], q.dtype,
+                    wdtype=str(kp.dtype) if quant else None)
                 out = pallas_paged_attention(
-                    q, kp, vp, cache["table"], new_len,
+                    q, kp, vp, table, new_len,
+                    kp_scale=kps if quant else None,
+                    vp_scale=vps if quant else None,
                     softcap=cfg.attn_softcap, pages_per_step=ppb)
+            elif quant:
+                # pure-jnp oracle: gather the chains into a dense
+                # quantized-slab view and reuse the slab decode math
+                dense = {"k": gather_paged_kv(kp, table),
+                         "v": gather_paged_kv(vp, table),
+                         "k_scale": gather_paged_kv(kps, table),
+                         "v_scale": gather_paged_kv(vps, table),
+                         "len": new_len}
+                out = _decode_quantized(q, dense, cfg)
             else:
-                out = decode_attention(q, gather_paged_kv(kp, cache["table"]),
-                                       gather_paged_kv(vp, cache["table"]),
+                out = decode_attention(q, gather_paged_kv(kp, table),
+                                       gather_paged_kv(vp, table),
                                        new_len, cfg)
         else:
             # cold prefill: the chain is empty, attend within the fresh

@@ -51,7 +51,10 @@ class ServeConfig:
     top_p: Optional[float] = None  # nucleus filter over the top-k logits
     sample_block_v: int = 8192     # vocab chunk of the 'jax' sampler impl
     cache_dtype: str = "bfloat16"
-    quantize_cache: bool = False   # int8 KV (transformer family)
+    quantize_cache: bool = False   # int8 KV (transformer family only)
+    head_dtype: Optional[str] = None  # quantized lm_head serving dtype
+    #   ("int8" | "float8_e4m3fn" | "float8_e5m2"; None/"bfloat16"/
+    #   "float32" serve the full-precision head) — kernels/quant.py
     logit_softcap: Optional[float] = None   # None -> arch.cfg.logit_softcap
     sampler_impl: str = "pallas"   # 'pallas' kernel | 'jax' oracle
     bucket_prefill: bool = True    # pow2 prompt buckets (all families)
@@ -86,11 +89,12 @@ def make_sampler(arch: Arch, sc: ServeConfig):
     valid = arch.vocab_size
     softcap = resolve_logit_softcap(arch, sc)
 
-    def sample(h2, w, rng, temperature):
+    def sample(h2, w, rng, temperature, w_scale=None):
         return sample_tokens(h2, w, rng, temperature=temperature,
                              top_k=sc.top_k, top_p=sc.top_p,
                              block_v=sc.sample_block_v, valid_vocab=valid,
-                             logit_softcap=softcap, impl=sc.sampler_impl)
+                             logit_softcap=softcap, impl=sc.sampler_impl,
+                             w_scale=w_scale)
 
     return sample
 
@@ -137,21 +141,21 @@ def build_serve_fns(arch: Arch, sc: ServeConfig, shard=None):
     def prefill(params, caches, batch, true_len, rng):
         h_last, caches = prefill_last_hidden(arch, params, caches, batch,
                                              true_len, shard=shard)
-        return sampler(h_last, params["lm_head"], rng,
-                       sc.temperature), caches
+        return sampler(h_last, params["lm_head"], rng, sc.temperature,
+                       w_scale=params.get("lm_head_scale")), caches
 
     def prefill_ext(params, caches, batch, true_len, rng):
         h_last, caches = prefill_last_hidden(arch, params, caches, batch,
                                              true_len, shard=shard,
                                              decode=True)
-        return sampler(h_last, params["lm_head"], rng,
-                       sc.temperature), caches
+        return sampler(h_last, params["lm_head"], rng, sc.temperature,
+                       w_scale=params.get("lm_head_scale")), caches
 
     def decode_step(params, caches, tokens, rng):
         h, _, caches = forward_hidden(arch, params, {"tokens": tokens},
                                       caches=caches, shard=shard)
-        return sampler(h[:, -1, :], params["lm_head"], rng,
-                       sc.temperature), caches
+        return sampler(h[:, -1, :], params["lm_head"], rng, sc.temperature,
+                       w_scale=params.get("lm_head_scale")), caches
 
     return prefill, prefill_ext, decode_step
 
@@ -175,7 +179,24 @@ class Engine:
         self.sc = sc
         self._jit = jit
         self._cdt = jnp.dtype(sc.cache_dtype)
-        self._quant = sc.quantize_cache and arch.family == "transformer"
+        if sc.quantize_cache and arch.family != "transformer":
+            # never silently fall back to bf16: the caller asked for the
+            # halved-footprint cache and would get full-size slabs
+            raise NotImplementedError(
+                "quantize_cache is only implemented for the transformer "
+                f"KV cache; arch family '{arch.family}' would silently "
+                "serve full-precision state — set quantize_cache=False")
+        self._quant = sc.quantize_cache
+        # quantized lm_head (DESIGN.md §10.2): swap the serving params'
+        # head for the 1-byte copy + per-row scales once, at init — every
+        # closure below reads params["lm_head"]/["lm_head_scale"]
+        from repro.kernels.quant import head_quant_dtype, quantize_weight
+        self._head_dtype = head_quant_dtype(sc.head_dtype)
+        if self._head_dtype is not None:
+            wq, ws = quantize_weight(params["lm_head"], self._head_dtype)
+            self.params = dict(params)
+            self.params["lm_head"] = wq
+            self.params["lm_head_scale"] = ws
         self._bucketed = sc.bucket_prefill
         # bucket pads in a griffin ring buffer must never WRAP the ring
         # (a wrapped pad write destroys an in-window real entry); prompts
@@ -258,7 +279,8 @@ class Engine:
             autotune_topk_plan(
                 n, v, d, k, dtype,
                 trial_budget=self.sc.tune_trial_budget,
-                logit_softcap=resolve_logit_softcap(self.arch, self.sc))
+                logit_softcap=resolve_logit_softcap(self.arch, self.sc),
+                wdtype=self._head_dtype)
 
     # -- slot operations ----------------------------------------------------
 

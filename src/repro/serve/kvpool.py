@@ -30,11 +30,13 @@ The pool is pure HOST-side bookkeeping (ints and numpy); the device side
 is the paged cache *tree* built by `paged_tree` below: every pageable
 slab leaf-group ``{'k', 'v', 'len'}`` becomes ``{'kp', 'vp', 'table',
 'len'}`` where the pools have NO batch axis (they are shared across
-slots) and the table/len rows are per-slot.  Ring-buffer caches
-(``'pos'``) are already O(window) and int8-quantized caches keep their
-scale slabs — both stay dense; recurrent state has nothing to page.
-`models/attention.py` recognizes the paged dict by its ``'table'`` key,
-so the four model families need no paging-specific code at all.
+slots) and the table/len rows are per-slot.  An int8-quantized slab's
+per-token scale slabs page too, as ``kp_scale``/``vp_scale`` pools
+riding the same block table (DESIGN.md §10.1).  Ring-buffer caches
+(``'pos'``) are already O(window) and stay dense; recurrent state has
+nothing to page.  `models/attention.py` recognizes the paged dict by
+its ``'table'`` key (quantized paging by ``'kp_scale'``), so the four
+model families need no paging-specific code at all.
 """
 
 from __future__ import annotations
@@ -312,13 +314,15 @@ class PrefixCache:
 
 
 def is_pageable(sub: Any) -> bool:
-    """True for a plain slab KV-cache dict ``{'k','v','len'}``.
+    """True for a slab KV-cache dict ``{'k','v','len'}`` — plain bf16 or
+    int8-quantized (``{'k','v','k_scale','v_scale','len'}``, whose
+    per-token scale slabs page right alongside the values as
+    ``kp_scale``/``vp_scale`` pools, DESIGN.md §10.1).
 
-    Ring buffers (``'pos'``) are already window-bounded and quantized
-    caches (``'k_scale'``) carry per-token scale slabs — both stay dense.
+    Ring buffers (``'pos'``) are already window-bounded and stay dense.
     """
     return (isinstance(sub, dict) and "k" in sub and "v" in sub
-            and "len" in sub and "pos" not in sub and "k_scale" not in sub)
+            and "len" in sub and "pos" not in sub)
 
 
 def is_paged(sub: Any) -> bool:
@@ -335,6 +339,12 @@ def paged_tree(tree: Any, pc: PagedConfig):
         table: (L?, B, max_blocks_per_slot) int32     -- null-filled
         len:   (L?, B)                                -- unchanged
 
+    An int8-quantized slab additionally carries per-token scale slabs
+    ``k_scale/v_scale: (L?, B, S, nkv, 1)`` — these page into matching
+    ``kp_scale/vp_scale: (L?, n_blocks, block_size, nkv, 1)`` pools
+    indexed by the SAME block table (one chain per request covers values
+    and scales; COW/fork/eviction need no scale-specific bookkeeping).
+
     Works on concrete arrays and (under `jax.eval_shape`) on
     ShapeDtypeStructs; trees with no pageable subtree pass through
     unchanged (recurrent families page nothing).
@@ -346,12 +356,17 @@ def paged_tree(tree: Any, pc: PagedConfig):
         b = k.shape[-4]
         pool_shape = lead + (pc.n_blocks, pc.block_size, nkv, hd)
         tab_shape = lead + (b, pc.max_blocks_per_slot)
-        return {
+        out = {
             "kp": jnp.zeros(pool_shape, k.dtype),
             "vp": jnp.zeros(pool_shape, sub["v"].dtype),
             "table": jnp.full(tab_shape, NULL_BLOCK, jnp.int32),
             "len": jnp.zeros(sub["len"].shape, jnp.int32),
         }
+        if "k_scale" in sub:
+            sshape = lead + (pc.n_blocks, pc.block_size, nkv, 1)
+            out["kp_scale"] = jnp.zeros(sshape, sub["k_scale"].dtype)
+            out["vp_scale"] = jnp.zeros(sshape, sub["v_scale"].dtype)
+        return out
 
     def walk(sub):
         if is_pageable(sub):
@@ -439,13 +454,13 @@ def slice_tables(tree: Any, n_cols: int):
 
 def copy_block(tree: Any, dst: int, src: int):
     """Device-side copy-on-write payload move: pool entry `src` -> `dst`
-    in every kp/vp leaf (all layers).  Host refcounts moved separately
-    (`BlockPool.writable_block`)."""
+    in every kp/vp (and quantized kp_scale/vp_scale) leaf, all layers.
+    Host refcounts moved separately (`BlockPool.writable_block`)."""
     def walk(sub):
         if isinstance(sub, dict):
             out = {}
             for key, val in sub.items():
-                if key in ("kp", "vp"):
+                if key in ("kp", "vp", "kp_scale", "vp_scale"):
                     out[key] = val.at[..., dst, :, :, :].set(
                         val[..., src, :, :, :])
                 else:

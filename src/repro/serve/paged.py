@@ -55,10 +55,6 @@ class _PagedMixin:
     advances through `decode_step` / `decode_step_multi`."""
 
     def __init__(self, arch, params, sc: ServeConfig, *args, **kwargs):
-        if sc.quantize_cache:
-            raise NotImplementedError(
-                "paged + int8-quantized KV is not supported (the scale "
-                "slabs would need their own pools); pick one")
         if getattr(arch.cfg, "frontend_len", 0):
             raise NotImplementedError(
                 "paged serving does not support frontend-embedding "
@@ -114,14 +110,19 @@ class _PagedMixin:
     # -- host-side chain accounting ------------------------------------------
 
     def _per_block_bytes(self) -> int:
-        """HBM bytes one pool block costs across every layer's pools."""
+        """HBM bytes one pool block costs across every layer's pools —
+        including the scale pools of a quantized cache (blocks are
+        allocated as (kp, vp, kp_scale, vp_scale) units, so the scale
+        bytes are part of what one allocation pins)."""
         total = 0
 
         def walk(sub):
             nonlocal total
             if kvpool.is_paged(sub):
-                for key in ("kp", "vp"):
-                    leaf = sub[key]
+                for key in ("kp", "vp", "kp_scale", "vp_scale"):
+                    leaf = sub.get(key)
+                    if leaf is None:
+                        continue
                     total += leaf.size * leaf.dtype.itemsize
             elif isinstance(sub, dict):
                 for v in sub.values():
@@ -326,7 +327,8 @@ class _PagedMixin:
                 self.sc.batch_size, tq, cfg.num_heads, nkv, hd,
                 self._pc.max_blocks_per_slot, self._pc.block_size,
                 jnp.dtype(getattr(cfg, "compute_dtype", "float32")),
-                trial_budget=self.sc.tune_trial_budget)
+                trial_budget=self.sc.tune_trial_budget,
+                wdtype="int8" if self._quant else None)
 
     def paged_stats(self) -> Dict[str, Any]:
         out: Dict[str, Any] = {"enabled": bool(self._n_paged)}

@@ -37,10 +37,14 @@ def streaming_topk(
     h: jax.Array, w: jax.Array, k: int, *,
     block_v: int = 8192, valid_vocab: Optional[int] = None,
     logit_softcap: Optional[float] = None,
+    w_scale: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Top-k of h @ w.T per row, streamed over vocab chunks.
 
     h: (B, d); w: (V, d).  Returns (values (B, k) f32, indices (B, k)).
+    `w_scale` (V,) marks `w` as row-quantized (`kernels/quant`): each
+    chunk's logits are rescaled after the dot, so only one (B, bv)
+    chunk of dequantized math lives at a time.
     """
     b, d = h.shape
     v = w.shape[0]
@@ -51,13 +55,19 @@ def streaming_topk(
         w = jnp.pad(w, ((0, pad), (0, 0)))
     n_chunks = w.shape[0] // bv
     w_chunks = w.reshape(n_chunks, bv, d)
+    s_chunks = None
+    if w_scale is not None:
+        s_chunks = jnp.pad(w_scale.astype(jnp.float32),
+                           (0, pad)).reshape(n_chunks, bv)
     h32 = h.astype(jnp.float32)
 
     def body(carry, inputs):
         best_v, best_i = carry
-        w_chunk, idx = inputs
+        w_chunk, s_chunk, idx = inputs
         z = jnp.dot(h32, w_chunk.T.astype(jnp.float32),
                     preferred_element_type=jnp.float32)   # (B, bv)
+        if s_chunk is not None:
+            z = z * s_chunk[None, :]
         if logit_softcap is not None:
             cap = jnp.float32(logit_softcap)
             z = cap * jnp.tanh(z / cap)
@@ -75,8 +85,14 @@ def streaming_topk(
 
     init = (jnp.full((b, k), -jnp.inf, jnp.float32),
             jnp.zeros((b, k), jnp.int32))
-    (vals, idxs), _ = jax.lax.scan(
-        body, init, (w_chunks, jnp.arange(n_chunks, dtype=jnp.int32)))
+    chunk_ids = jnp.arange(n_chunks, dtype=jnp.int32)
+    if s_chunks is None:
+        (vals, idxs), _ = jax.lax.scan(
+            lambda c, xs: body(c, (xs[0], None, xs[1])), init,
+            (w_chunks, chunk_ids))
+    else:
+        (vals, idxs), _ = jax.lax.scan(
+            body, init, (w_chunks, s_chunks, chunk_ids))
     return vals, idxs
 
 
@@ -106,22 +122,26 @@ def sample_tokens(
     block_v: int = 8192, valid_vocab: Optional[int] = None,
     logit_softcap: Optional[float] = None,
     impl: str = "pallas", plan: Optional[BlockPlan] = None,
+    w_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Next-token ids (B,) — greedy when temperature == 0.
 
     impl: 'pallas' (streaming Pallas kernel, interpret mode off-TPU) or
     'jax' (the pure-JAX `streaming_topk` oracle).  `plan` pins the kernel
-    tiling; None resolves it through the tuning cache.
+    tiling; None resolves it through the tuning cache.  `w_scale` marks
+    `w` as a row-quantized lm_head (`ServeConfig.head_dtype`).
     """
     k = 1 if temperature == 0.0 else top_k
     if impl == "pallas":
         from repro.kernels.sample_topk import pallas_topk
         vals, idxs = pallas_topk(h, w, k, valid_vocab=valid_vocab,
-                                 logit_softcap=logit_softcap, plan=plan)
+                                 logit_softcap=logit_softcap, plan=plan,
+                                 w_scale=w_scale)
     elif impl == "jax":
         vals, idxs = streaming_topk(h, w, k, block_v=block_v,
                                     valid_vocab=valid_vocab,
-                                    logit_softcap=logit_softcap)
+                                    logit_softcap=logit_softcap,
+                                    w_scale=w_scale)
     else:
         raise ValueError(f"unknown sampler impl {impl!r}")
     if temperature == 0.0:

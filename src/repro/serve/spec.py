@@ -141,19 +141,19 @@ def build_spec_step(arch: Arch, draft_arch: Arch, sc: ServeConfig,
     t_strat = spec_cache_strategy(arch)
     d_strat = spec_cache_strategy(draft_arch)
 
-    def _score(h2, w, ids, cap, temp):
+    def _score(h2, w, ids, cap, temp, ws=None):
         # scored at the model's SAMPLING temperature, so the rejection
         # ratio compares the distributions actually drawn from (temp <= 0
         # scores unscaled — the degenerate greedy-proposal corner)
         if spec.score_impl == "pallas":
             logp, _ = pallas_score_tokens(h2, w, ids, valid_vocab=valid,
                                           logit_softcap=cap,
-                                          temperature=temp)
+                                          temperature=temp, w_scale=ws)
         elif spec.score_impl == "jax":
             logp, _ = streaming_score(h2, w, ids,
                                       block_v=spec.score_block_v,
                                       valid_vocab=valid, logit_softcap=cap,
-                                      temperature=temp)
+                                      temperature=temp, w_scale=ws)
         else:
             raise ValueError(f"unknown score impl {spec.score_impl!r}")
         return logp
@@ -164,6 +164,10 @@ def build_spec_step(arch: Arch, draft_arch: Arch, sc: ServeConfig,
     def spec_step(params, dparams, caches, dcaches, cur, rng):
         b = cur.shape[0]
         rngs = jax.random.split(rng, k_spec + 2)
+        # quantized-head serving: both engines carry the per-row scales
+        # next to their 1-byte lm_head (engine.Engine.__init__)
+        t_ws = params.get("lm_head_scale")
+        d_ws = dparams.get("lm_head_scale")
 
         # ---- 1. draft proposal: K sampled tokens + one catch-up step so
         # the draft cache consumes d_K too (kept only if all K accepted)
@@ -180,7 +184,7 @@ def build_spec_step(arch: Arch, draft_arch: Arch, sc: ServeConfig,
                 break
             h_last = h[:, -1, :]
             nxt = sampler_d(h_last, dparams["lm_head"], rngs[i],
-                            draft_temp)                  # (B,)
+                            draft_temp, w_scale=d_ws)    # (B,)
             d_hidden.append(h_last)
             d_tokens.append(nxt)
             tok = nxt[:, None]
@@ -190,7 +194,8 @@ def build_spec_step(arch: Arch, draft_arch: Arch, sc: ServeConfig,
             dh = jnp.stack(d_hidden, axis=1)             # (B, K, d)
             d_lp = _score(dh.reshape(b * k_spec, -1), dparams["lm_head"],
                           draft_tokens.reshape(b * k_spec, 1),
-                          draft_cap, draft_temp).reshape(b, k_spec)
+                          draft_cap, draft_temp,
+                          ws=d_ws).reshape(b, k_spec)
 
         # ---- 2. target verification over [cur, d_1..d_K]
         seq = jnp.concatenate([cur, draft_tokens], axis=1)   # (B, K+1)
@@ -200,8 +205,8 @@ def build_spec_step(arch: Arch, draft_arch: Arch, sc: ServeConfig,
 
         # the target's own choice at every position (argmax when greedy)
         choice = sampler_t(h.reshape(b * (k_spec + 1), d_model),
-                           params["lm_head"], rngs[-1],
-                           sc.temperature).reshape(b, k_spec + 1)
+                           params["lm_head"], rngs[-1], sc.temperature,
+                           w_scale=t_ws).reshape(b, k_spec + 1)
 
         # ---- 3. acceptance
         if greedy:
@@ -213,7 +218,8 @@ def build_spec_step(arch: Arch, draft_arch: Arch, sc: ServeConfig,
             t_logps = _score(h[:, :k_spec, :].reshape(b * k_spec, d_model),
                              params["lm_head"],
                              draft_tokens.reshape(b * k_spec, 1),
-                             target_cap, sc.temperature).reshape(b, k_spec)
+                             target_cap, sc.temperature,
+                             ws=t_ws).reshape(b, k_spec)
             u = jax.random.uniform(rngs[-2], (b, k_spec),
                                    minval=1e-20, maxval=1.0)
             acc = jnp.log(u) <= (t_logps - d_lp)         # min(1, pt/pd)
@@ -294,11 +300,12 @@ class SpecEngine(Engine):
         topk = 1 if self.sc.temperature == 0.0 else self.sc.top_k
         autotune_topk_plan(b * (kk + 1), v, d, topk, dtype,
                            trial_budget=self.sc.tune_trial_budget,
-                           logit_softcap=cap)
+                           logit_softcap=cap, wdtype=self._head_dtype)
         if self.sc.temperature != 0.0:
             autotune_score_plan(b * kk, v, d, 1, dtype,
                                 trial_budget=self.sc.tune_trial_budget,
-                                logit_softcap=cap)
+                                logit_softcap=cap,
+                                wdtype=self._head_dtype)
 
     # -- lifecycle (both cache trees) ---------------------------------------
 
@@ -343,15 +350,16 @@ class SpecEngine(Engine):
 # ---------------------------------------------------------------------------
 
 
-def _score_lp(h2, w, ids, *, valid, cap, temp, spec: SpecConfig):
+def _score_lp(h2, w, ids, *, valid, cap, temp, spec: SpecConfig, ws=None):
     """log p(ids | h2) under the shared lm_head via the score kernels."""
     if spec.score_impl == "pallas":
         logp, _ = pallas_score_tokens(h2, w, ids, valid_vocab=valid,
-                                      logit_softcap=cap, temperature=temp)
+                                      logit_softcap=cap, temperature=temp,
+                                      w_scale=ws)
     elif spec.score_impl == "jax":
         logp, _ = streaming_score(h2, w, ids, block_v=spec.score_block_v,
                                   valid_vocab=valid, logit_softcap=cap,
-                                  temperature=temp)
+                                  temperature=temp, w_scale=ws)
     else:
         raise ValueError(f"unknown score impl {spec.score_impl!r}")
     return logp
@@ -384,15 +392,17 @@ def build_self_prefill(arch: Arch, sc: ServeConfig, spec: SpecConfig,
                                              decode=extend)
         r_tok, r_draft = jax.random.split(rng)
         w = params["lm_head"]
-        tok = sampler(h_last, w, r_tok, sc.temperature)          # (1,)
+        ws = params.get("lm_head_scale")
+        tok = sampler(h_last, w, r_tok, sc.temperature,
+                      w_scale=ws)                                # (1,)
         heads = apply_mtp_heads(arch, params, h_last)            # (1, n, d)
         hh = heads[0, :k_spec]                                   # (K, d)
-        draft = sampler(hh, w, r_draft, draft_temp)              # (K,)
+        draft = sampler(hh, w, r_draft, draft_temp, w_scale=ws)  # (K,)
         if greedy:
             d_lp = jnp.zeros((k_spec,), jnp.float32)
         else:
             d_lp = _score_lp(hh, w, draft[:, None], valid=valid, cap=cap,
-                             temp=draft_temp, spec=spec)[:, 0]
+                             temp=draft_temp, spec=spec, ws=ws)[:, 0]
         return tok, draft, d_lp, caches
 
     return prefill
@@ -443,15 +453,16 @@ def build_self_spec_step(arch: Arch, sc: ServeConfig, spec: SpecConfig,
                   else spec.draft_temperature)
     strat = spec_cache_strategy(arch)
 
-    def _score(h2, w, ids, temp):
+    def _score(h2, w, ids, temp, ws=None):
         return _score_lp(h2, w, ids, valid=valid, cap=cap, temp=temp,
-                         spec=spec)
+                         spec=spec, ws=ws)
 
     sampler = make_sampler(arch, sc)
 
     def self_spec_step(params, caches, cur, draft, draft_lp, rng):
         b = cur.shape[0]
         w = params["lm_head"]
+        ws = params.get("lm_head_scale")
         r_choice, r_acc, r_draft = jax.random.split(rng, 3)
 
         # ---- 1. ONE target forward verifies the pending drafts
@@ -462,7 +473,8 @@ def build_self_spec_step(arch: Arch, sc: ServeConfig, spec: SpecConfig,
 
         # the target's own choice at every position
         choice = sampler(h.reshape(b * (k_spec + 1), d_model), w,
-                         r_choice, sc.temperature).reshape(b, k_spec + 1)
+                         r_choice, sc.temperature,
+                         w_scale=ws).reshape(b, k_spec + 1)
 
         # ---- 2. acceptance
         if greedy:
@@ -470,7 +482,7 @@ def build_self_spec_step(arch: Arch, sc: ServeConfig, spec: SpecConfig,
         else:
             t_lp = _score(h[:, :k_spec, :].reshape(b * k_spec, d_model),
                           w, draft.reshape(b * k_spec, 1),
-                          sc.temperature).reshape(b, k_spec)
+                          sc.temperature, ws=ws).reshape(b, k_spec)
             u = jax.random.uniform(r_acc, (b, k_spec),
                                    minval=1e-20, maxval=1.0)
             acc = jnp.log(u) <= (t_lp - draft_lp)    # min(1, pt/ph)
@@ -492,13 +504,13 @@ def build_self_spec_step(arch: Arch, sc: ServeConfig, spec: SpecConfig,
             h, n_acc[:, None, None], axis=1)[:, 0]           # (B, d)
         heads = apply_mtp_heads(arch, params, h_a)           # (B, n, d)
         hh = heads[:, :k_spec].reshape(b * k_spec, d_model)
-        new_draft = sampler(hh, w, r_draft,
-                            draft_temp).reshape(b, k_spec)
+        new_draft = sampler(hh, w, r_draft, draft_temp,
+                            w_scale=ws).reshape(b, k_spec)
         if greedy:
             new_lp = jnp.zeros((b, k_spec), jnp.float32)
         else:
             new_lp = _score(hh, w, new_draft.reshape(b * k_spec, 1),
-                            draft_temp).reshape(b, k_spec)
+                            draft_temp, ws=ws).reshape(b, k_spec)
 
         # ---- 4. roll back the K - n_acc rejected positions
         if strat == "len":
@@ -566,11 +578,12 @@ class SelfSpecEngine(Engine):
         for n in sorted({b * (kk + 1), b * kk}):
             autotune_topk_plan(n, v, d, topk, dtype,
                                trial_budget=self.sc.tune_trial_budget,
-                               logit_softcap=cap)
+                               logit_softcap=cap, wdtype=self._head_dtype)
         if self.sc.temperature != 0.0:
             autotune_score_plan(b * kk, v, d, 1, dtype,
                                 trial_budget=self.sc.tune_trial_budget,
-                                logit_softcap=cap)
+                                logit_softcap=cap,
+                                wdtype=self._head_dtype)
 
     # -- lifecycle (adds the per-slot pending-draft state) -------------------
 

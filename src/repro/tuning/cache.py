@@ -32,15 +32,25 @@ _MEMORY_KEY = ":memory:"
 
 
 def plan_key(n_rows: int, vocab: int, d: int, dtype: str,
-             backend: str, op: str = "ce") -> str:
-    """Canonical cache key: ``"<n>x<V>x<d>:<dtype>:<backend>[:<op>]"``.
+             backend: str, op: str = "ce",
+             wdtype: Optional[str] = None) -> str:
+    """Canonical cache key: ``"<n>x<V>x<d>:<dtype>[+<wdtype>]:<backend>[:<op>]"``.
 
     ``op`` namespaces entries per kernel family so the fused-CE winner for
     a shape never shadows e.g. the decode top-k winner for the same shape
     (the two kernels have different VPU/MXU balance).  The default
     ``"ce"`` is elided to keep existing fused-CE cache files valid.
+
+    ``wdtype`` names the STREAMED-OPERAND dtype when it differs from the
+    activation dtype — an int8/fp8 lm_head or KV pool halves the kernel's
+    bytes-per-tile, shifting the tile-size optimum, so a plan tuned at
+    one precision must never resolve for another (DESIGN.md §10.3).  The
+    default ``None`` elides the component, keeping existing keys valid.
     """
-    base = f"{int(n_rows)}x{int(vocab)}x{int(d)}:{dtype}:{backend}"
+    base = f"{int(n_rows)}x{int(vocab)}x{int(d)}:{dtype}"
+    if wdtype is not None:
+        base += f"+{wdtype}"
+    base += f":{backend}"
     return base if op == "ce" else f"{base}:{op}"
 
 

@@ -210,3 +210,54 @@ def test_fill_tables_and_copy_block():
 def test_cache_tree_bytes():
     tree = _slab(0, 1, 8, 1, 4, dtype=jnp.float32)
     assert kvpool.cache_tree_bytes(tree) == 2 * 8 * 4 * 4 + 1 * 4
+
+
+def _quant_slab(l, b, s, nkv, hd):
+    lead = (l,) if l else ()
+    return {"k": jnp.zeros(lead + (b, s, nkv, hd), jnp.int8),
+            "v": jnp.zeros(lead + (b, s, nkv, hd), jnp.int8),
+            "k_scale": jnp.zeros(lead + (b, s, nkv, 1), jnp.float32),
+            "v_scale": jnp.zeros(lead + (b, s, nkv, 1), jnp.float32),
+            "len": jnp.zeros(lead + (b,), jnp.int32)}
+
+
+@pytest.mark.parametrize("lead", [0, 3])
+def test_paged_tree_rewrites_quantized_slab(lead):
+    """A quantized slab pages into int8 payload pools PLUS per-block
+    f32 scale pools riding the same block ids."""
+    pc = PagedConfig(block_size=4, n_blocks=9, max_blocks_per_slot=4)
+    tree = {"self": _quant_slab(lead, 2, 16, 2, 8)}
+    assert kvpool.count_pageable(tree) == 1
+    out = kvpool.paged_tree(tree, pc)
+    sub = out["self"]
+    prefix = (3,) if lead else ()
+    assert sub["kp"].shape == prefix + (9, 4, 2, 8)
+    assert sub["kp"].dtype == jnp.int8
+    assert sub["kp_scale"].shape == prefix + (9, 4, 2, 1)
+    assert sub["kp_scale"].dtype == jnp.float32
+    assert sub["vp_scale"].shape == prefix + (9, 4, 2, 1)
+    # structural discovery still works under eval_shape
+    specs = jax.eval_shape(lambda t: kvpool.paged_tree(t, pc), tree)
+    assert specs["self"]["vp_scale"].shape == prefix + (9, 4, 2, 1)
+
+
+def test_copy_block_moves_scale_pools():
+    pc = PagedConfig(block_size=2, n_blocks=4, max_blocks_per_slot=3)
+    tree = kvpool.paged_tree({"a": _quant_slab(2, 2, 6, 1, 4)}, pc)
+    tree["a"]["kp"] = tree["a"]["kp"].at[:, 3].set(7)
+    tree["a"]["kp_scale"] = tree["a"]["kp_scale"].at[:, 3].set(0.5)
+    copied = kvpool.copy_block(tree, dst=1, src=3)
+    np.testing.assert_array_equal(np.asarray(copied["a"]["kp"][:, 1]),
+                                  np.asarray(tree["a"]["kp"][:, 3]))
+    np.testing.assert_array_equal(
+        np.asarray(copied["a"]["kp_scale"][:, 1]),
+        np.asarray(tree["a"]["kp_scale"][:, 3]))
+
+
+def test_cache_tree_bytes_counts_scale_tensors():
+    pc = PagedConfig(block_size=4, n_blocks=5, max_blocks_per_slot=2)
+    plain = kvpool.paged_tree({"a": _slab(0, 1, 8, 1, 4, jnp.int8)}, pc)
+    quant = kvpool.paged_tree({"a": _quant_slab(0, 1, 8, 1, 4)}, pc)
+    extra = kvpool.cache_tree_bytes(quant) - kvpool.cache_tree_bytes(plain)
+    # exactly the two f32 scale pools: 2 * n_blocks * bs * nkv * 1 * 4
+    assert extra == 2 * 5 * 4 * 1 * 4

@@ -134,3 +134,83 @@ def test_autotune_and_lookup(tmp_path, monkeypatch):
 def test_plan_pages_per_step_bounds():
     assert plan_pages_per_step(BlockPlan(8, 128, 0), 16, 4) == 4   # capped
     assert plan_pages_per_step(BlockPlan(8, 128, 0), 256, 8) == 1  # floor
+
+
+# ---------------------------------------------------------------------------
+# quantized pools: in-register dequant vs the slab _decode_quantized oracle
+# ---------------------------------------------------------------------------
+
+
+def _quant_case(rng, b, tq, nq, nkv, hd, bs, nb):
+    """Quantized pools built by scattering quantize_kv slabs block-wise,
+    so the pool content is bit-identical to a quantized slab cache."""
+    from repro.models.attention import quantize_kv
+    n_pool = b * nb + 1
+    s = nb * bs
+    k = jnp.asarray(rng.standard_normal((b, s, nkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, nkv, hd)), jnp.float32)
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    perm = rng.permutation(n_pool - 1)[:b * nb] + 1
+    table = jnp.asarray(perm.reshape(b, nb), jnp.int32)
+    pools = [jnp.zeros((n_pool, bs, nkv, hd), jnp.int8),
+             jnp.zeros((n_pool, bs, nkv, hd), jnp.int8),
+             jnp.zeros((n_pool, bs, nkv, 1), jnp.float32),
+             jnp.zeros((n_pool, bs, nkv, 1), jnp.float32)]
+    for bi in range(b):
+        for j in range(nb):
+            pb = int(table[bi, j])
+            for pi, slab in enumerate((kq, vq, ks, vs)):
+                pools[pi] = pools[pi].at[pb].set(
+                    slab[bi, j * bs:(j + 1) * bs])
+    lens = jnp.asarray(rng.integers(tq, s + 1, (b,)), jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, tq, nq, hd)), jnp.bfloat16)
+    dense = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs, "len": lens}
+    return q, pools, table, lens, dense
+
+
+@pytest.mark.parametrize("b,tq,nq,nkv,hd,bs,nb,ppb,cap", [
+    (3, 1, 4, 2, 16, 4, 6, 1, None),       # GQA single-token decode
+    (2, 3, 4, 1, 8, 8, 4, 2, 30.0),        # spec verify (Tq>1) + softcap
+    (1, 1, 2, 2, 32, 16, 3, 3, None),      # ppb > 1 with ragged last step
+])
+def test_quantized_kernel_matches_slab_decode(b, tq, nq, nkv, hd, bs, nb,
+                                              ppb, cap):
+    """Bit-for-bit against `_decode_quantized` on the dense slab view:
+    at nb*bs <= the oracle's chunk the slab decode is a single online-
+    softmax chunk, the same math the kernel runs per page."""
+    from repro.models.attention import _decode_quantized
+    rng = np.random.default_rng(b * 10 + tq)
+    q, (kp, vp, kps, vps), table, lens, dense = _quant_case(
+        rng, b, tq, nq, nkv, hd, bs, nb)
+    cfg = AttnConfig(d_model=nq * hd, num_heads=nq, num_kv_heads=nkv,
+                     head_dim=hd, attn_softcap=cap)
+    ref = _decode_quantized(q, dense, cfg)
+    out = pallas_paged_attention(q, kp, vp, table, lens,
+                                 kp_scale=kps, vp_scale=vps,
+                                 softcap=cap, pages_per_step=ppb)
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(ref, np.float32))
+
+
+def test_quantized_kernel_requires_both_scales():
+    rng = np.random.default_rng(0)
+    q, (kp, vp, kps, _), table, lens, _ = _quant_case(
+        rng, 1, 1, 2, 1, 8, 4, 2)
+    with pytest.raises(ValueError, match="vp_scale"):
+        pallas_paged_attention(q, kp, vp, table, lens, kp_scale=kps)
+
+
+def test_quantized_autotune_keys_do_not_shadow_bf16(tmp_path, monkeypatch):
+    """int8 and bf16 winners are memoized under distinct keys; a lookup
+    for one precision never returns the other's plan."""
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "plans.json"))
+    kw = dict(trial_budget=2, trial_iters=1)
+    autotune_paged_plan(2, 1, 4, 2, 16, 4, 8, jnp.float32,
+                        wdtype="int8", **kw)
+    assert lookup_paged_plan(2, 1, 2, 16, 4, 8, jnp.float32) == 1  # miss
+    ppb_q = lookup_paged_plan(2, 1, 2, 16, 4, 8, jnp.float32,
+                              wdtype="int8")
+    assert ppb_q >= 1
+    ppb_f = autotune_paged_plan(2, 1, 4, 2, 16, 4, 8, jnp.float32, **kw)
+    assert lookup_paged_plan(2, 1, 2, 16, 4, 8, jnp.float32) == ppb_f

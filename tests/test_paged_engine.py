@@ -251,11 +251,68 @@ def test_copy_on_write_on_externally_forked_chain():
     np.testing.assert_array_equal(res, ref[0])
 
 
-def test_paged_rejects_quantized_cache():
+@pytest.mark.parametrize("impl", ["jax", "pallas"])
+def test_quantized_paged_identical_to_quantized_slab(impl):
+    """int8 paging must reproduce the int8 slab engine token for token:
+    the pallas kernel's in-register dequant and the gather-oracle's
+    dense slab view both replay `_decode_quantized`'s math exactly."""
     arch, params = _arch_params()
-    with pytest.raises(NotImplementedError):
-        PagedEngine(arch, params, ServeConfig(
-            batch_size=1, max_len=32, paged=True, quantize_cache=True))
+    prompts = _prompts(arch.vocab_size, (3, 11, 7, 5, 9))
+    ref, _ = _serve(Engine(arch, params,
+                           ServeConfig(batch_size=3, max_len=64,
+                                       quantize_cache=True)), prompts)
+    eng = PagedEngine(arch, params, ServeConfig(
+        batch_size=3, max_len=64, paged=True, block_size=8,
+        paged_impl=impl, quantize_cache=True))
+    out, sched = _serve(eng, prompts)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+    assert sched.stats()["paged"]["enabled"]
+
+
+def test_quantized_paged_self_spec_identical():
+    arch, params = _arch_params(mtp=2)
+    prompts = _prompts(arch.vocab_size, (9, 5, 13))
+    sc = dict(batch_size=2, max_len=64, quantize_cache=True)
+    ref, _ = _serve(SelfSpecEngine(arch, params, ServeConfig(**sc),
+                                   SpecConfig(k=2)), prompts)
+    out, _ = _serve(PagedSelfSpecEngine(
+        arch, params, ServeConfig(paged=True, block_size=8,
+                                  paged_impl="pallas",
+                                  prefix_cache=False, **sc),
+        SpecConfig(k=2)), prompts)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_quantized_block_bytes_count_scale_pools():
+    """Reported per-block bytes == actual pool-leaf nbytes per block,
+    scale pools included — and the quant/bf16 ratio is exactly the
+    int8-plus-scales arithmetic (hd + 4) / (2 * hd)."""
+    arch, params = _arch_params()
+
+    def build(quant):
+        return PagedEngine(arch, params, ServeConfig(
+            batch_size=2, max_len=32, paged=True, block_size=8,
+            paged_impl="jax", quantize_cache=quant))
+
+    def pool_nbytes(caches):
+        total = 0
+        for leaf in jax.tree.leaves(
+                caches, is_leaf=lambda x: isinstance(x, dict)):
+            if isinstance(leaf, dict) and "kp" in leaf:
+                for key in ("kp", "vp", "kp_scale", "vp_scale"):
+                    if key in leaf:
+                        arr = leaf[key]
+                        total += arr.size * arr.dtype.itemsize
+        return total
+
+    bf16, quant = build(False), build(True)
+    for eng in (bf16, quant):
+        n_blocks = eng._pc.n_blocks
+        assert eng._block_bytes == pool_nbytes(eng.caches) // n_blocks
+    hd = arch.cfg.head_dim
+    assert quant._block_bytes / bf16._block_bytes == (hd + 4) / (2 * hd)
 
 
 def test_generate_convenience_runs_paged():

@@ -254,3 +254,23 @@ def test_filter_ignored_rows_never_touch_dw(n, seed, scale, eps):
     dw = jax.grad(lambda w: streaming_loss(h, w, y, cfg))(w)
     dw2 = jax.grad(lambda w: streaming_loss(h2, w, y, cfg))(w)
     np.testing.assert_array_equal(np.asarray(dw), np.asarray(dw2))
+
+
+@given(seed=st.integers(0, 500), scale=st.floats(1e-6, 1e4),
+       t=st.integers(1, 24))
+@settings(**_SETTINGS)
+def test_quantize_kv_roundtrip_error_bound(seed, scale, t):
+    """|x - q*s| <= s/2 (+eps) elementwise: symmetric round-to-nearest
+    int8 with per-(token, head) max-abs scales can be off by at most
+    half a quantization step, at any input magnitude."""
+    from repro.models.attention import quantize_kv
+    k = jax.random.normal(jax.random.PRNGKey(seed), (2, t, 2, 8)) * scale
+    q, s = quantize_kv(k)
+    assert q.dtype == jnp.int8
+    assert s.shape == (2, t, 2, 1)
+    err = jnp.abs(k - q.astype(jnp.float32) * s)
+    bound = 0.5 * s + 1e-6 * scale
+    assert bool(jnp.all(err <= bound))
+    # max-abs scaling saturates the grid: some |q| reaches 127 per slice
+    assert int(jnp.max(jnp.abs(q))) == 127 or float(
+        jnp.max(jnp.abs(k))) < 1e-7

@@ -251,3 +251,42 @@ def test_compiled_decode_step_is_logits_free():
     dense_txt = (jax.jit(dense).lower(params, eng.caches, cur)
                  .compile().as_text())
     assert logits_intermediates(dense_txt, 4, arch.padded_vocab)
+
+
+@pytest.mark.parametrize("arch_id,kw", [
+    ("recurrentgemma-9b", {}),
+    ("xlstm-125m", {}),
+    ("seamless-m4t-medium", {"enc_len": 8}),
+])
+def test_quantize_cache_rejected_for_non_transformer(arch_id, kw):
+    """quantize_cache on a family with no int8 cache path must raise at
+    construction, not silently serve full-precision state (the old
+    behavior dropped the flag on the floor — memory budgets sized for
+    int8 then OOM'd at 2x)."""
+    arch = get_arch(arch_id, reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError, match="quantize_cache"):
+        Engine(arch, params, ServeConfig(batch_size=1, max_len=32,
+                                         quantize_cache=True, **kw))
+
+
+def test_quantized_cache_specs_match_actual_bytes():
+    """`serve_cache_specs(quantize=True)` (the dry-run accounting input)
+    and the engine's real cache tree agree byte-for-byte — the scale
+    slabs are counted on both sides."""
+    from repro.models.registry import serve_cache_specs
+    from repro.serve.kvpool import cache_tree_bytes
+
+    arch = get_arch("qwen3-0.6b", reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    specs = serve_cache_specs(arch, 2, 32, quantize=True)
+    spec_bytes = sum(s.size * s.dtype.itemsize
+                     for s in jax.tree.leaves(specs))
+    eng = Engine(arch, params, ServeConfig(batch_size=2, max_len=32,
+                                           quantize_cache=True))
+    actual = sum(x.size * x.dtype.itemsize
+                 for x in jax.tree.leaves(eng.caches))
+    assert spec_bytes == actual == cache_tree_bytes(eng.caches)
+    # the quantized tree really is smaller than bf16, scales included
+    bf16 = Engine(arch, params, ServeConfig(batch_size=2, max_len=32))
+    assert actual < cache_tree_bytes(bf16.caches)
