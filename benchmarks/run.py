@@ -23,9 +23,12 @@ so CI and notebooks consume results without re-parsing the CSV.
   §9 grad filter   -> bench_backward.bench_backward (skipped-tile
                                                      fraction, backward
                                                      wall-clock)
+  §11 obs          -> bench_obs.bench_obs (Zipf+Poisson load replay;
+                                           obs overhead + span coverage;
+                                           writes BENCH_serve.json)
 
 Run:  PYTHONPATH=src python -m benchmarks.run \
-          [--only lat,mem,train,topk,roof,tune,serve,spec,mtp,paged,bwd] \
+          [--only lat,mem,train,topk,roof,tune,serve,spec,mtp,paged,bwd,obs] \
           [--json-dir DIR]
 """
 
@@ -36,7 +39,7 @@ import json
 import os
 import sys
 
-ALL_PARTS = "lat,mem,train,topk,roof,tune,serve,spec,mtp,paged,quant,bwd"
+ALL_PARTS = "lat,mem,train,topk,roof,tune,serve,spec,mtp,paged,quant,bwd,obs"
 
 
 def _runner(part):
@@ -79,10 +82,15 @@ def _runner(part):
     if part == "bwd":
         from benchmarks.bench_backward import bench_backward
         return [bench_backward]
+    if part == "obs":
+        from benchmarks.bench_obs import bench_obs
+        return [bench_obs]
     raise ValueError(f"unknown bench part {part!r}")
 
-# JSON filenames keep a stable human-facing alias per part
-_JSON_NAME = {"bwd": "backward"}
+# JSON filenames keep a stable human-facing alias per part.  "serve"
+# maps to serve_modes because the canonical BENCH_serve.json is the
+# regression-tracked load-replay trajectory written by bench_obs.
+_JSON_NAME = {"bwd": "backward", "serve": "serve_modes"}
 
 
 def write_part_json(json_dir, part, records) -> str:

@@ -21,6 +21,7 @@ from typing import Callable, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.windows import (BlockPlan, choose_blocks, tile_bytes,
                                 _DEFAULT_BUDGET, _LANE, _SUBLANE)
 from repro.tuning import TuningCache, get_cache, plan_key
@@ -114,6 +115,9 @@ def run_plan_trials(
         cands.append(heur)
 
     trials = []
+    m_trial = obs.get_registry().histogram(
+        "tune.trial_us", help="per-candidate plan trial time (us)",
+        bounds=obs.geometric_bounds(1.0, 1e7))
     for plan in cands:
         try:
             us = measure(plan)
@@ -121,6 +125,8 @@ def run_plan_trials(
             log.warning("%strial failed for plan %s at %dx%dx%d",
                         tag, plan.shape, n_rows, vocab, d, exc_info=True)
             us = float("inf")
+        if us != float("inf"):
+            m_trial.observe(us)
         trials.append((plan, us))
         log.debug("%splan %s: %.1f us", tag, plan.shape, us)
 
@@ -164,7 +170,10 @@ def autotune_cached(
             return hit
     if trial_budget <= 0:
         return choose_blocks(n_rows, vocab, d, in_bytes=dtype.itemsize)
-    result = run()
+    obs.get_registry().counter(
+        "tune.sweeps_total", help="empirical plan sweeps executed").inc()
+    with obs.get_tracer().span("tune.sweep", cat="tune", key=key):
+        result = run()
     if result.best_us == float("inf"):
         log.warning("all trials failed for %s; using heuristic %s "
                     "uncached", key, result.best.shape)

@@ -15,17 +15,25 @@ no sidecar model, no second cache tree; ``--mtp-heads`` sets the head
 count (default: spec-k).  ``--stats-json [PATH]`` dumps the scheduler's
 run report (per-request TTFT/latency, tokens-per-step, acceptance rate,
 spec mode) as JSON to PATH, or to stdout when no PATH is given.
+
+Observability (DESIGN.md §11): ``--metrics-json [PATH]`` enables the
+`repro.obs` registry before engine construction and dumps every
+counter/gauge/histogram snapshot; ``--trace-out PATH`` additionally
+records per-request lifecycle spans (``req.queue → req.prefill →
+req.decode``) and engine/scheduler spans, exported as Chrome
+``trace_event`` JSON (open in chrome://tracing / Perfetto) or JSONL
+via ``--trace-format``.
 """
 
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs.base import with_mtp
 from repro.models.registry import get_arch, init_params
 from repro.serve import (ServeConfig, Engine, ContinuousScheduler,
@@ -86,8 +94,23 @@ def main(argv=None):
                     metavar="PATH",
                     help="dump the scheduler stats report as JSON "
                          "(to stdout when PATH is omitted)")
+    ap.add_argument("--metrics-json", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="enable the repro.obs registry and dump every "
+                         "instrument's snapshot as JSON (stdout when "
+                         "PATH is omitted)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable per-request span tracing and write the "
+                         "trace to PATH")
+    ap.add_argument("--trace-format", default="chrome",
+                    choices=("chrome", "jsonl"),
+                    help="trace export format for --trace-out")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    # obs must be live BEFORE engines/schedulers bind their instruments
+    if args.metrics_json is not None or args.trace_out is not None:
+        obs.enable(trace=args.trace_out is not None)
 
     if args.spec_self and args.spec_draft:
         ap.error("--spec-self and --spec-draft are mutually exclusive")
@@ -170,13 +193,17 @@ def main(argv=None):
             print(f"[serve] paged: family {arch.family!r} has no "
                   "pageable caches (dense-slab behavior)")
     if args.stats_json is not None:
-        report = json.dumps(sched.stats(), indent=1, sort_keys=True)
-        if args.stats_json == "-":
-            print(report)
-        else:
-            with open(args.stats_json, "w", encoding="utf-8") as f:
-                f.write(report + "\n")
-            print(f"[serve] stats written to {args.stats_json}")
+        obs.export.dump_json(sched.stats(), args.stats_json,
+                             label="stats", tag="serve")
+    if args.metrics_json is not None:
+        obs.export.dump_json(
+            obs.export.metrics_report(obs.get_registry(),
+                                      extra={"mode": mode,
+                                             "arch": arch.arch_id}),
+            args.metrics_json, label="metrics", tag="serve")
+    if args.trace_out is not None:
+        obs.export.write_trace(obs.get_tracer(), args.trace_out,
+                               fmt=args.trace_format, tag="serve")
     out = np.stack([np.pad(results[r], (0, args.max_new - len(results[r])))
                     for r in rids])
     print("[serve] sample row:", out[0][:16])

@@ -6,6 +6,12 @@
 Use --devices D,M to force a local (data, model) mesh over
 --xla_force_host_platform_device_count devices (set XLA_FLAGS yourself for
 that case); by default runs single-device.
+
+``--stats-json [PATH]`` dumps the logged step history as JSON;
+``--metrics-json [PATH]`` enables `repro.obs` and dumps step-time /
+tokens-per-sec / loss instruments; ``--trace-out PATH`` records a
+``train.step`` span per step (bridged to ``StepTraceAnnotation`` so
+host spans line up with device profiles) — see DESIGN.md §11.
 """
 
 from __future__ import annotations
@@ -17,6 +23,7 @@ import logging
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.checkpoint import Checkpointer
 from repro.configs.base import TuningConfig, with_mtp
 from repro.data import DataConfig, SyntheticLM, ShardedLoader
@@ -68,11 +75,32 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--devices", default=None,
                     help="D,M local mesh (needs forced host devices)")
+    ap.add_argument("--stats-json", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="dump the logged step history (loss, step time) "
+                         "as JSON (stdout when PATH is omitted)")
+    ap.add_argument("--metrics-json", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="enable the repro.obs registry and dump every "
+                         "instrument's snapshot as JSON (stdout when "
+                         "PATH is omitted)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable train.step span tracing (with "
+                         "StepTraceAnnotation bridging) and write the "
+                         "trace to PATH")
+    ap.add_argument("--trace-format", default="chrome",
+                    choices=("chrome", "jsonl"),
+                    help="trace export format for --trace-out")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     logging.basicConfig(
         level=logging.INFO,
         format="%(asctime)s %(name)s %(levelname)s %(message)s")
+
+    # obs must be live before train_loop binds its instruments
+    if args.metrics_json is not None or args.trace_out is not None:
+        obs.enable(trace=args.trace_out is not None,
+                   jax_annotate=args.trace_out is not None)
 
     arch = get_arch(args.arch, reduced=args.reduced)
     if args.mtp_heads:
@@ -133,6 +161,19 @@ def main(argv=None):
         last = history[-1][1]["loss"]
         print(f"[train] loss {first:.4f} -> {last:.4f} over "
               f"{len(history)} logged steps")
+    if args.stats_json is not None:
+        obs.export.dump_json(
+            {"arch": arch.arch_id, "steps": args.steps,
+             "history": [{"step": i, **m} for i, m in history]},
+            args.stats_json, label="stats", tag="train")
+    if args.metrics_json is not None:
+        obs.export.dump_json(
+            obs.export.metrics_report(obs.get_registry(),
+                                      extra={"arch": arch.arch_id}),
+            args.metrics_json, label="metrics", tag="train")
+    if args.trace_out is not None:
+        obs.export.write_trace(obs.get_tracer(), args.trace_out,
+                               fmt=args.trace_format, tag="train")
     return state, history
 
 

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import Arch, ENCDEC_SERVE_ENC_LEN
 from repro.models.registry import (cache_batch_axes, empty_serve_caches,
                                    forward_hidden, init_serve_caches,
@@ -205,6 +206,15 @@ class Engine:
         if arch.family == "griffin":
             self._bucket_cap = min(sc.max_len, arch.cfg.window)
         self._enc_len = sc.enc_len or ENCDEC_SERVE_ENC_LEN
+        # observability (repro.obs): bound at construction — free no-ops
+        # unless `obs.enable()` ran first (DESIGN.md §11)
+        self._tracer = obs.get_tracer()
+        _reg = obs.get_registry()
+        self._m_prefills = _reg.counter("engine.prefills_total")
+        self._m_prefill_tokens = _reg.counter(
+            "engine.prefill_tokens_total",
+            "prompt tokens prefilled (bucket pad included)")
+        self._m_decode_steps = _reg.counter("engine.decode_steps_total")
         self._axes = self._cache_axes()
         axes = self._axes
 
@@ -364,12 +374,17 @@ class Engine:
         pass real frames for conditioned generation."""
         batch, slot_caches, true_len, ctx = self._slot_prefill_view(
             slot, prompt, frontend_embeds)
-        fn = self._prefill_ext if ctx.get("ext") else self._prefill
-        tok, slot_caches = fn(
-            self.params, slot_caches, batch, jnp.int32(true_len),
-            self._split())
-        self._commit_slot(slot, slot_caches, ctx)
-        tok = int(jax.device_get(tok)[0])
+        t_b = batch["tokens"].shape[1]
+        with self._tracer.span("engine.prefill", cat="engine", slot=slot,
+                               tokens=t_b, ext=bool(ctx.get("ext"))):
+            fn = self._prefill_ext if ctx.get("ext") else self._prefill
+            tok, slot_caches = fn(
+                self.params, slot_caches, batch, jnp.int32(true_len),
+                self._split())
+            self._commit_slot(slot, slot_caches, ctx)
+            tok = int(jax.device_get(tok)[0])
+        self._m_prefills.inc()
+        self._m_prefill_tokens.inc(t_b)
         self.cur[slot] = tok
         return tok
 
@@ -377,10 +392,12 @@ class Engine:
         """Advance every slot one token; returns (B,) sampled ids.
 
         Rows of free slots are dead compute — callers ignore them."""
-        tok, self.caches = self._decode(
-            self.params, self.caches, jnp.asarray(self.cur[:, None]),
-            self._split())
-        toks = np.asarray(jax.device_get(tok), np.int32)
+        with self._tracer.span("engine.decode_step", cat="engine"):
+            tok, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(self.cur[:, None]),
+                self._split())
+            toks = np.asarray(jax.device_get(tok), np.int32)
+        self._m_decode_steps.inc()
         self.cur = toks.copy()
         return toks
 

@@ -48,6 +48,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 # block id 0 is the reserved NULL block: free slots' table rows point at
 # it, ghost/pad writes land in it, and the allocator never hands it out.
 NULL_BLOCK = 0
@@ -107,6 +109,18 @@ class BlockPool:
         self._refs = np.zeros((cfg.n_blocks,), np.int64)
         self._refs[NULL_BLOCK] = 1                     # pinned forever
         self._free: List[int] = list(range(cfg.n_blocks - 1, 0, -1))
+        # observability (repro.obs): no-ops unless obs.enable() ran first
+        reg = obs.get_registry()
+        self._m_in_use = reg.gauge("kvpool.blocks_in_use",
+                                   "pool blocks currently allocated")
+        self._m_free = reg.gauge("kvpool.free_blocks")
+        self._m_alloc = reg.counter("kvpool.blocks_allocated_total")
+        self._m_cow = reg.counter("kvpool.cow_copies_total",
+                                  "shared blocks un-shared before a write")
+
+    def _track(self):
+        self._m_in_use.set(self.used_blocks)
+        self._m_free.set(len(self._free))
 
     # -- accounting ----------------------------------------------------------
 
@@ -132,6 +146,8 @@ class BlockPool:
                 f"(pool: {self.cfg.n_blocks}, block {self.cfg.block_size})")
         out = [self._free.pop() for _ in range(n)]
         self._refs[out] += 1
+        self._m_alloc.inc(n)
+        self._track()
         return out
 
     def fork(self, chain: Sequence[int]) -> List[int]:
@@ -157,6 +173,8 @@ class BlockPool:
             if self._refs[b] == 0:
                 self._free.append(b)
                 recycled.append(b)
+        if recycled:
+            self._track()
         return recycled
 
     def writable_block(self, chain: List[int], idx: int
@@ -176,6 +194,7 @@ class BlockPool:
         new = self.alloc(1)[0]
         self._refs[old] -= 1            # shared: never hits 0 here
         chain[idx] = new
+        self._m_cow.inc()
         return new, old
 
 
@@ -204,9 +223,20 @@ class PrefixCache:
         self._root = self._Node(None, NULL_BLOCK, None)
         self._tick = 0
         # counters for scheduler stats / benches
+        self.lookups = 0
         self.hits = 0
         self.hit_blocks = 0
         self.evicted_blocks = 0
+        self.resident_blocks = 0        # trie nodes == pinned pool blocks
+        # observability (repro.obs)
+        reg = obs.get_registry()
+        self._m_lookups = reg.counter("kvpool.trie_lookups_total")
+        self._m_hits = reg.counter("kvpool.trie_hits_total",
+                                   "prompts matching >= 1 cached block")
+        self._m_hit_blocks = reg.counter("kvpool.trie_hit_blocks_total")
+        self._m_evicted = reg.counter("kvpool.trie_evicted_blocks_total")
+        self._m_resident = reg.gauge("kvpool.trie_resident_blocks",
+                                     "pool blocks pinned by the trie")
 
     def _keys(self, prompt: np.ndarray, n_blocks: int, scope):
         """One key per full block; the first level additionally carries
@@ -237,6 +267,8 @@ class PrefixCache:
         """
         full = (len(prompt) - 1) // self.block_size
         node, chain = self._root, []
+        self.lookups += 1
+        self._m_lookups.inc()
         for key in self._keys(prompt, full, scope):
             child = node.children.get(key)
             if child is None:
@@ -246,6 +278,8 @@ class PrefixCache:
         if chain:
             self.hits += 1
             self.hit_blocks += len(chain)
+            self._m_hits.inc()
+            self._m_hit_blocks.inc(len(chain))
             self._touch(node)
         return chain
 
@@ -264,6 +298,8 @@ class PrefixCache:
                 child = self._Node(key, chain[i], node)
                 self.pool.fork([chain[i]])
                 node.children[key] = child
+                self.resident_blocks += 1
+                self._m_resident.set(self.resident_blocks)
             node = child
         self._touch(node)
 
@@ -293,6 +329,9 @@ class PrefixCache:
             victim = min(leaves, key=lambda n: n.tick)
             recycled += len(self.pool.free([victim.block]))
             self.evicted_blocks += 1
+            self.resident_blocks -= 1
+            self._m_evicted.inc()
+            self._m_resident.set(self.resident_blocks)
             del victim.parent.children[victim.key]
         return recycled
 
@@ -306,6 +345,8 @@ class PrefixCache:
         for c in self._root.children.values():
             walk(c)
         self._root.children.clear()
+        self.resident_blocks = 0
+        self._m_resident.set(0)
 
 
 # ---------------------------------------------------------------------------

@@ -202,8 +202,10 @@ class _PagedMixin:
         scope = self._prefix_scope(frontend_embeds)
         shared: List[int] = []
         if self.prefix is not None:
-            shared = self.pool.fork(self.prefix.match(prompt_np,
-                                                      scope=scope))
+            with self._tracer.span("paged.prefix_match", cat="paged",
+                                   slot=slot):
+                shared = self.pool.fork(self.prefix.match(prompt_np,
+                                                          scope=scope))
         shared_len = len(shared) * self._pc.block_size
         try:
             # a hit pads the SUFFIX so that shared + padded equals the
@@ -345,10 +347,14 @@ class _PagedMixin:
         })
         if self.prefix is not None:
             out["prefix"] = {
+                "lookups": self.prefix.lookups,
                 "hits": self.prefix.hits,
+                "hit_rate": round(self.prefix.hits
+                                  / max(self.prefix.lookups, 1), 4),
                 "hit_blocks": self.prefix.hit_blocks,
                 "hit_tokens": self.prefix_hit_tokens,
                 "evicted_blocks": self.prefix.evicted_blocks,
+                "resident_blocks": self.prefix.resident_blocks,
             }
         return out
 

@@ -24,10 +24,15 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import logging
 import time
 from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
+
+from repro import obs
+
+log = logging.getLogger("repro.serve")
 
 _UNSET = object()
 
@@ -64,7 +69,8 @@ class ContinuousScheduler:
     def __init__(self, engine, max_new_tokens: int = 32,
                  eos_id: Optional[int] = None,
                  on_token: Optional[Callable[[int, int, bool], None]] = None,
-                 max_admits_per_step: Optional[int] = None):
+                 max_admits_per_step: Optional[int] = None,
+                 tracer=None, registry=None):
         if max_admits_per_step is not None and max_admits_per_step < 1:
             raise ValueError("max_admits_per_step must be >= 1 or None")
         self.engine = engine
@@ -85,10 +91,42 @@ class ContinuousScheduler:
         self.ttft: Dict[int, float] = {}      # submit -> first token
         self.latency: Dict[int, float] = {}   # submit -> completion
         self.queue_wait: Dict[int, float] = {}  # submit -> admission
+        self.tpot: Dict[int, float] = {}  # per-token time after the first
         self._submit_t: Dict[int, float] = {}
+        self._first_t: Dict[int, float] = {}
         # speculative-decoding counters (stay 0 for plain engines)
         self.spec_drafted = 0
         self.spec_accepted = 0
+        # observability (repro.obs, DESIGN.md §11): per-request lifecycle
+        # spans (req.queue -> req.prefill -> req.decode under one `req`
+        # envelope) + the serve metric set.  Defaults are the process
+        # globals, which are free no-ops until `obs.enable()`.
+        self.tracer = tracer if tracer is not None else obs.get_tracer()
+        reg = registry if registry is not None else obs.get_registry()
+        self._m_qdepth = reg.gauge("serve.queue_depth",
+                                   "requests waiting for a slot")
+        self._m_active = reg.gauge("serve.active_slots",
+                                   "slots decoding a live request")
+        self._m_ttft = reg.histogram("serve.ttft_s",
+                                     "submit -> first token (queue incl.)")
+        self._m_tpot = reg.histogram("serve.tpot_s",
+                                     "per-token time after the first")
+        self._m_qwait = reg.histogram("serve.queue_wait_s",
+                                      "submit -> admission")
+        self._m_latency = reg.histogram("serve.latency_s",
+                                        "submit -> completion")
+        self._m_tps = reg.histogram("serve.tokens_per_slot_step",
+                                    "decode emissions per busy slot-step")
+        self._m_tokens = reg.counter("serve.tokens_total",
+                                     "decode tokens emitted")
+        self._m_admitted = reg.counter("serve.requests_admitted_total")
+        self._m_finished = reg.counter("serve.requests_finished_total")
+        self._m_exhausted = reg.counter(
+            "serve.pool_exhausted_total",
+            "admissions requeued because the block pool ran dry")
+        self._m_drafted = reg.counter("spec.drafted_total")
+        self._m_accepted = reg.counter("spec.accepted_total")
+        self._exhausted_streak = 0
 
     # -- submission ---------------------------------------------------------
 
@@ -122,6 +160,7 @@ class ContinuousScheduler:
             rid, prompt, max_new,
             self.default_eos if eos_id is _UNSET else eos_id,
             frontend_embeds))
+        self._m_qdepth.set(len(self.queue))
         return rid
 
     # -- state machine ------------------------------------------------------
@@ -144,7 +183,20 @@ class ContinuousScheduler:
         slot = self.slots[idx]
         rid = slot.req.rid
         self.results[rid] = np.asarray(slot.tokens, np.int32)
-        self.latency[rid] = time.perf_counter() - self._submit_t[rid]
+        t_end = time.perf_counter()
+        t_sub = self._submit_t[rid]
+        self.latency[rid] = t_end - t_sub
+        n_tok = len(slot.tokens)
+        if n_tok > 1:
+            self.tpot[rid] = ((self.latency[rid] - self.ttft[rid])
+                              / (n_tok - 1))
+            self._m_tpot.observe(self.tpot[rid])
+        self._m_latency.observe(self.latency[rid])
+        self._m_finished.inc()
+        t_first = self._first_t.get(rid, t_end)
+        self.tracer.add_span("req.decode", t_first, t_end, cat="request",
+                             rid=rid, tokens=n_tok)
+        self.tracer.add_span("req", t_sub, t_end, rid=rid, tokens=n_tok)
         self.slots[idx] = None
         self.engine.reset_slot(idx)
 
@@ -180,23 +232,59 @@ class ContinuousScheduler:
                         and admitted >= self.max_admits_per_step):
                     return
                 req = self.queue.popleft()
-                self.queue_wait[req.rid] = (time.perf_counter()
-                                            - self._submit_t[req.rid])
+                t_admit = time.perf_counter()
+                self.queue_wait[req.rid] = t_admit - self._submit_t[req.rid]
                 try:
                     first = self.engine.prefill_into_slot(
                         idx, req.prompt,
                         frontend_embeds=req.frontend_embeds)
                 except PoolExhausted:
+                    self._note_pool_exhausted(req)
                     if self.active == 0:
                         raise
                     self.queue.appendleft(req)
                     return
+                self._exhausted_streak = 0
                 admitted += 1
                 self.admit_order.append(req.rid)
-                self.ttft[req.rid] = (time.perf_counter()
-                                      - self._submit_t[req.rid])
+                t_first = time.perf_counter()
+                self.ttft[req.rid] = t_first - self._submit_t[req.rid]
+                self._first_t[req.rid] = t_first
+                self._m_qdepth.set(len(self.queue))
+                self._m_admitted.inc()
+                self._m_qwait.observe(self.queue_wait[req.rid])
+                self._m_ttft.observe(self.ttft[req.rid])
+                self.tracer.add_span("req.queue", self._submit_t[req.rid],
+                                     t_admit, cat="request", rid=req.rid)
+                self.tracer.add_span("req.prefill", t_admit, t_first,
+                                     cat="request", rid=req.rid,
+                                     prompt_len=len(req.prompt))
                 self.slots[idx] = _Slot(req, [])
                 self._token_arrived(idx, first)
+
+    def _note_pool_exhausted(self, req: Request):
+        """Count + contextualize silent paged backpressure: which request
+        bounced, and what the pool/trie held at that moment (satellite:
+        `PoolExhausted` requeues used to vanish without a trace)."""
+        self._m_exhausted.inc()
+        self._exhausted_streak += 1
+        if self._exhausted_streak > 1:       # one warning per dry spell
+            return
+        ctx = ""
+        paged = getattr(self.engine, "paged_stats", None)
+        if paged is not None:
+            ps = paged()
+            pre = ps.get("prefix", {})
+            ctx = (f"; pool {ps.get('used_blocks')}/"
+                   f"{ps.get('pool_blocks')} blocks in use, "
+                   f"{ps.get('free_blocks')} free, trie holds "
+                   f"{pre.get('resident_blocks', 0)} resident blocks "
+                   f"({pre.get('evicted_blocks', 0)} evicted so far)")
+        log.warning(
+            "pool exhausted admitting request %d (%d prompt tokens): "
+            "requeued at queue head, %d running / %d queued%s",
+            req.rid, len(req.prompt), self.active, len(self.queue) + 1,
+            ctx)
 
     def step(self) -> int:
         """One scheduler tick: admit, then advance every busy slot by one
@@ -208,16 +296,20 @@ class ContinuousScheduler:
         self._admit()
         self.peak_active = max(self.peak_active, self.active)
         busy = [i for i, s in enumerate(self.slots) if s is not None]
+        self._m_active.set(len(busy))
         if not busy:
             return 0
-        if hasattr(self.engine, "decode_step_multi"):
-            toks, counts = self.engine.decode_step_multi()
-        else:                         # engine-shaped test doubles
-            toks = np.asarray(self.engine.decode_step())[:, None]
-            counts = np.ones(len(toks), np.int32)
+        with self.tracer.span("sched.decode_step", cat="sched",
+                              step=self.decode_steps, busy=len(busy)):
+            if hasattr(self.engine, "decode_step_multi"):
+                toks, counts = self.engine.decode_step_multi()
+            else:                     # engine-shaped test doubles
+                toks = np.asarray(self.engine.decode_step())[:, None]
+                counts = np.ones(len(toks), np.int32)
         self.decode_steps += 1
         self.slot_busy_steps += len(busy)
         spec_k = int(getattr(self.engine, "spec_k", 0))
+        emitted0 = self.tokens_emitted
         for idx in busy:
             n = int(counts[idx])
             for j in range(n):
@@ -227,6 +319,11 @@ class ContinuousScheduler:
             if spec_k:
                 self.spec_drafted += spec_k
                 self.spec_accepted += n - 1   # bonus token is not a draft
+                self._m_drafted.inc(spec_k)
+                self._m_accepted.inc(n - 1)
+        step_toks = self.tokens_emitted - emitted0
+        self._m_tokens.inc(step_toks)
+        self._m_tps.observe(step_toks / len(busy))
         return len(busy)
 
     def run(self) -> Dict[int, np.ndarray]:
@@ -253,11 +350,25 @@ class ContinuousScheduler:
 
     def stats(self) -> Dict[str, Any]:
         """JSON-serializable run report (bench trajectories across PRs:
-        `launch/serve.py --stats-json`)."""
+        `launch/serve.py --stats-json`).
+
+        Latency summaries report p50/p95/p99 — fed through the
+        `repro.obs` histogram type, exact at these population sizes —
+        alongside the pre-existing mean/max keys (kept for older
+        trajectory consumers)."""
         def _summ(d):
             vals = list(d.values())
-            return {"mean": float(np.mean(vals)) if vals else 0.0,
-                    "max": float(np.max(vals)) if vals else 0.0}
+            if not vals:
+                return {"mean": 0.0, "max": 0.0,
+                        "p50": 0.0, "p95": 0.0, "p99": 0.0}
+            h = obs.Histogram("summ")
+            for v in vals:
+                h.observe(v)
+            return {"mean": float(np.mean(vals)),
+                    "max": float(np.max(vals)),
+                    "p50": round(h.quantile(0.50), 6),
+                    "p95": round(h.quantile(0.95), 6),
+                    "p99": round(h.quantile(0.99), 6)}
 
         out: Dict[str, Any] = {
             "requests": len(self.results),
@@ -269,6 +380,7 @@ class ContinuousScheduler:
             "ttft_s": _summ(self.ttft),
             "latency_s": _summ(self.latency),
             "queue_wait_s": _summ(self.queue_wait),
+            "tpot_s": _summ(self.tpot),
             "per_request": {
                 str(rid): {
                     "tokens": int(len(self.results[rid])),
@@ -276,6 +388,7 @@ class ContinuousScheduler:
                     "latency_s": round(self.latency.get(rid, 0.0), 6),
                     "queue_wait_s": round(self.queue_wait.get(rid, 0.0),
                                           6),
+                    "tpot_s": round(self.tpot.get(rid, 0.0), 6),
                 } for rid in sorted(self.results)},
         }
         paged = getattr(self.engine, "paged_stats", None)

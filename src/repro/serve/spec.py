@@ -336,11 +336,15 @@ class SpecEngine(Engine):
 
         Returns (tokens (B, K+1), counts (B,)): per slot the first
         ``counts`` tokens are this step's emissions, in order."""
-        out, counts, self.caches, self.draft.caches, _ = self._spec_step(
-            self.params, self.draft.params, self.caches, self.draft.caches,
-            jnp.asarray(self.cur[:, None]), self._split())
-        out = np.asarray(jax.device_get(out), np.int32)
-        counts = np.asarray(jax.device_get(counts), np.int32)
+        with self._tracer.span("spec.step", cat="spec", mode=self.spec_mode,
+                               k=self.spec.k):
+            out, counts, self.caches, self.draft.caches, _ = \
+                self._spec_step(
+                    self.params, self.draft.params, self.caches,
+                    self.draft.caches, jnp.asarray(self.cur[:, None]),
+                    self._split())
+            out = np.asarray(jax.device_get(out), np.int32)
+            counts = np.asarray(jax.device_get(counts), np.int32)
         self.cur = out[np.arange(out.shape[0]), counts - 1].copy()
         return out, counts
 
@@ -604,15 +608,20 @@ class SelfSpecEngine(Engine):
                           ) -> int:
         batch, slot_caches, true_len, ctx = self._slot_prefill_view(
             slot, prompt, frontend_embeds)
-        fn = (self._prefill_mtp_ext if ctx.get("ext")
-              else self._prefill_mtp)
-        tok, draft, d_lp, slot_caches = fn(
-            self.params, slot_caches, batch, jnp.int32(true_len),
-            self._split())
-        self._commit_slot(slot, slot_caches, ctx)
-        self._draft = self._draft.at[slot].set(draft)
-        self._draft_lp = self._draft_lp.at[slot].set(d_lp)
-        tok = int(jax.device_get(tok)[0])
+        t_b = batch["tokens"].shape[1]
+        with self._tracer.span("engine.prefill", cat="engine", slot=slot,
+                               tokens=t_b, ext=bool(ctx.get("ext"))):
+            fn = (self._prefill_mtp_ext if ctx.get("ext")
+                  else self._prefill_mtp)
+            tok, draft, d_lp, slot_caches = fn(
+                self.params, slot_caches, batch, jnp.int32(true_len),
+                self._split())
+            self._commit_slot(slot, slot_caches, ctx)
+            self._draft = self._draft.at[slot].set(draft)
+            self._draft_lp = self._draft_lp.at[slot].set(d_lp)
+            tok = int(jax.device_get(tok)[0])
+        self._m_prefills.inc()
+        self._m_prefill_tokens.inc(t_b)
         self.cur[slot] = tok
         return tok
 
@@ -620,11 +629,14 @@ class SelfSpecEngine(Engine):
 
     def decode_step_multi(self) -> Tuple[np.ndarray, np.ndarray]:
         """One verify→accept→redraft→rollback cycle for every slot."""
-        (out, counts, self.caches, self._draft, self._draft_lp, _) = \
-            self._spec_step(self.params, self.caches,
-                            jnp.asarray(self.cur[:, None]), self._draft,
-                            self._draft_lp, self._split())
-        out = np.asarray(jax.device_get(out), np.int32)
-        counts = np.asarray(jax.device_get(counts), np.int32)
+        with self._tracer.span("spec.step", cat="spec", mode=self.spec_mode,
+                               k=self.spec.k):
+            (out, counts, self.caches, self._draft, self._draft_lp, _) = \
+                self._spec_step(self.params, self.caches,
+                                jnp.asarray(self.cur[:, None]),
+                                self._draft, self._draft_lp,
+                                self._split())
+            out = np.asarray(jax.device_get(out), np.int32)
+            counts = np.asarray(jax.device_get(counts), np.int32)
         self.cur = out[np.arange(out.shape[0]), counts - 1].copy()
         return out, counts

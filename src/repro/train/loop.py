@@ -15,6 +15,7 @@ from typing import Any, Callable, Dict, Iterable, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import Checkpointer
 from repro.distributed.fault import PreemptionHandler, StragglerMonitor
 
@@ -47,6 +48,17 @@ def train_loop(
     history = []
     start_step = int(jax.device_get(state["step"]))
 
+    reg = obs.get_registry()
+    tracer = obs.get_tracer()
+    m_step_t = reg.histogram("train.step_time_s",
+                             help="wall-clock per optimizer step")
+    m_tps = reg.gauge("train.tokens_per_sec",
+                      help="tokens consumed per second, last step")
+    m_loss = reg.gauge("train.loss", help="loss at last logged step")
+    m_steps = reg.counter("train.steps_total", help="optimizer steps run")
+    m_tokens = reg.counter("train.tokens_total",
+                           help="tokens consumed by training")
+
     if on_start is not None:
         t0 = time.perf_counter()
         on_start()
@@ -56,17 +68,28 @@ def train_loop(
     it = iter(data)
     for i in range(start_step, num_steps):
         t0 = time.perf_counter()
-        batch = next(it)
-        state, metrics = step_fn(state, batch)
-        # block for accurate step timing (and to surface async errors here)
-        jax.block_until_ready(metrics["loss"])
+        with tracer.step_span("train.step", i):
+            batch = next(it)
+            state, metrics = step_fn(state, batch)
+            # block for accurate step timing (and to surface async
+            # errors here)
+            jax.block_until_ready(metrics["loss"])
         dt = time.perf_counter() - t0
         straggler.record(i, dt)
+        m_step_t.observe(dt)
+        m_steps.inc()
+        n_tok = getattr(batch.get("tokens"), "size", 0) \
+            if isinstance(batch, dict) else 0
+        if n_tok:
+            m_tokens.inc(n_tok)
+            m_tps.set(n_tok / dt if dt > 0 else 0.0)
 
         if (i + 1) % log_every == 0 or i == start_step:
             m = {k: float(np.asarray(jax.device_get(v)))
                  for k, v in metrics.items()}
             m["step_time_s"] = dt
+            if "loss" in m:
+                m_loss.set(m["loss"])
             history.append((i, m))
             log.info("step %d: %s", i,
                      {k: round(v, 5) for k, v in m.items()})

@@ -23,6 +23,7 @@ import tempfile
 import threading
 from typing import Dict, Optional
 
+from repro import obs
 from repro.core.windows import BlockPlan
 
 _VERSION = 1
@@ -142,13 +143,21 @@ class TuningCache:
         with self._lock:
             self._load_locked()
             e = self._entries.get(key)
+        reg = obs.get_registry()
         if not isinstance(e, dict):
+            reg.counter("tuning_cache.misses_total",
+                        help="plan-cache lookups with no entry").inc()
             return None
         try:
-            return BlockPlan(int(e["block_rows"]), int(e["block_v"]),
+            plan = BlockPlan(int(e["block_rows"]), int(e["block_v"]),
                              int(e.get("vmem_bytes", 0)))
         except (KeyError, TypeError, ValueError):
+            reg.counter("tuning_cache.misses_total",
+                        help="plan-cache lookups with no entry").inc()
             return None
+        reg.counter("tuning_cache.hits_total",
+                    help="plan-cache lookups served from memo").inc()
+        return plan
 
     def put(self, key: str, plan: BlockPlan,
             us: Optional[float] = None) -> None:

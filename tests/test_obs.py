@@ -1,0 +1,308 @@
+"""repro.obs: fake-clock span semantics, histogram quantiles vs numpy,
+the disabled no-op identity (same scheduler tokens, zero instruments),
+JSONL / Chrome trace round-trips, and the export formats."""
+
+import json
+
+import numpy as np
+import pytest
+
+import repro.serve.scheduler as sched_mod
+from repro import obs
+from repro.obs.metrics import NULL_METRIC
+from tests.test_scheduler import FakeClock, FakeEngine
+
+
+# -- tracer ---------------------------------------------------------------
+
+def make_ticker(step=1.0):
+    """A clock that advances `step` every call (deterministic spans)."""
+    t = [0.0]
+
+    def clock():
+        t[0] += step
+        return t[0]
+    return clock
+
+
+def test_span_nesting_and_completion_order():
+    tr = obs.Tracer(clock=make_ticker())
+    with tr.span("outer", cat="t", a=1):
+        with tr.span("inner", cat="t"):
+            pass
+    # inner completes first; depth records the nesting
+    assert [s.name for s in tr.spans] == ["inner", "outer"]
+    inner, outer = tr.spans
+    assert inner.depth == 1 and outer.depth == 0
+    # ticker: outer.start=1, inner.start=2, inner.end=3, outer.end=4
+    assert (outer.start, inner.start, inner.end, outer.end) == \
+        (1.0, 2.0, 3.0, 4.0)
+    assert outer.args == {"a": 1}
+    assert inner.duration == 1.0
+
+
+def test_add_span_and_step_span():
+    tr = obs.Tracer(clock=make_ticker())
+    tr.add_span("req.queue", 0.5, 1.5, cat="request", rid=3)
+    with tr.step_span("train.step", 7):
+        pass
+    assert tr.spans[0].args == {"rid": 3}
+    assert tr.spans[0].duration == 1.0
+    assert tr.spans[1].cat == "step"
+    assert tr.spans[1].args == {"step": 7}
+
+
+def test_null_tracer_is_free_and_shared():
+    ctx1 = obs.NULL_TRACER.span("anything", x=1)
+    ctx2 = obs.NULL_TRACER.step_span("s", 0)
+    assert ctx1 is ctx2                    # one shared no-op ctx manager
+    with ctx1:
+        pass
+    obs.NULL_TRACER.add_span("n", 0.0, 1.0)
+    assert obs.NULL_TRACER.spans == ()
+
+
+def test_jsonl_round_trip(tmp_path):
+    tr = obs.Tracer(clock=make_ticker())
+    with tr.span("a", cat="c", k="v"):
+        pass
+    tr.add_span("b", 1.0, 2.5, rid=1)
+    p = str(tmp_path / "t.jsonl")
+    assert tr.export_jsonl(p) == 2
+    back = obs.read_jsonl(p)
+    assert back == tr.spans                # Span.__eq__ round-trip exact
+
+
+def test_chrome_trace_events(tmp_path):
+    tr = obs.Tracer(clock=make_ticker())
+    with tr.span("outer"):
+        with tr.span("inner"):
+            pass
+    p = str(tmp_path / "t.json")
+    assert tr.export_chrome(p) == 2
+    with open(p) as f:
+        doc = json.load(f)
+    evs = {e["name"]: e for e in doc["traceEvents"]}
+    assert evs["outer"]["ph"] == "X"
+    assert evs["inner"]["tid"] == 1        # one track per depth
+    assert evs["outer"]["tid"] == 0
+    # microsecond complete events: inner lies inside outer
+    assert evs["outer"]["ts"] < evs["inner"]["ts"]
+    assert evs["inner"]["dur"] < evs["outer"]["dur"]
+
+
+def test_request_coverage_math():
+    tr = obs.Tracer()
+    tr.add_span("req", 0.0, 10.0, rid=1)
+    tr.add_span("req.queue", 0.0, 2.0, cat="request", rid=1)
+    tr.add_span("req.prefill", 2.0, 3.0, cat="request", rid=1)
+    tr.add_span("req.decode", 3.0, 9.0, cat="request", rid=1)
+    cov = obs.request_coverage(tr.spans)
+    assert cov == {1: pytest.approx(0.9)}
+
+
+# -- histogram ------------------------------------------------------------
+
+def test_histogram_exact_quantiles_match_numpy():
+    rng = np.random.default_rng(0)
+    xs = rng.lognormal(mean=-4.0, sigma=1.5, size=1000)
+    h = obs.Histogram("x")
+    for v in xs:
+        h.observe(v)
+    for q in (0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0):
+        assert h.quantile(q) == pytest.approx(
+            float(np.percentile(xs, 100 * q)), rel=1e-12)
+    assert h.count == 1000
+    assert h.mean == pytest.approx(float(xs.mean()))
+    assert h.min == xs.min() and h.max == xs.max()
+
+
+def test_histogram_bucket_estimate_bounded_error():
+    rng = np.random.default_rng(1)
+    xs = rng.lognormal(mean=-4.0, sigma=1.5, size=5000)
+    h = obs.Histogram("x", exact_cap=100)     # force stream mode
+    for v in xs:
+        h.observe(v)
+    assert h._exact is None                   # reservoir dropped
+    for q in (0.5, 0.95, 0.99):
+        exact = float(np.percentile(xs, 100 * q))
+        est = h.quantile(q)
+        # geometric buckets at 20/decade: ~12% relative bound in-range
+        assert abs(est - exact) / exact < 0.15, (q, est, exact)
+    assert h.min <= h.quantile(0.0) <= h.quantile(1.0) <= h.max
+
+
+def test_histogram_empty_and_validation():
+    h = obs.Histogram("x")
+    assert h.quantile(0.5) == 0.0
+    assert h.snapshot() == {"count": 0, "sum": 0.0}
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+    with pytest.raises(ValueError):
+        obs.Histogram("y", bounds=[2.0, 1.0])
+    with pytest.raises(ValueError):
+        obs.geometric_bounds(lo=-1.0)
+
+
+# -- registry -------------------------------------------------------------
+
+def test_disabled_registry_is_noop_identity():
+    reg = obs.Registry(enabled=False)
+    c = reg.counter("a.b_total")
+    g = reg.gauge("a.level")
+    h = reg.histogram("a.t_s")
+    assert c is NULL_METRIC and g is NULL_METRIC and h is NULL_METRIC
+    c.inc()
+    g.set(3)
+    h.observe(0.5)
+    assert len(reg) == 0                   # nothing was ever allocated
+    assert reg.snapshot() == {}
+
+
+def test_enabled_registry_shares_and_type_checks():
+    reg = obs.Registry()
+    c1 = reg.counter("x_total", "help text")
+    c2 = reg.counter("x_total")
+    assert c1 is c2                        # one series per name
+    c1.inc(2)
+    c2.inc()
+    assert reg.snapshot()["x_total"] == {"kind": "counter", "value": 3.0}
+    with pytest.raises(TypeError):
+        reg.gauge("x_total")
+    with pytest.raises(TypeError):
+        reg.histogram("x_total")
+
+
+def test_capture_restores_process_defaults():
+    before_reg, before_tr = obs.get_registry(), obs.get_tracer()
+    with obs.capture(trace=True) as (reg, tracer):
+        assert obs.get_registry() is reg and reg.enabled
+        assert obs.get_tracer() is tracer and tracer.enabled
+    assert obs.get_registry() is before_reg
+    assert obs.get_tracer() is before_tr
+
+
+# -- scheduler integration ------------------------------------------------
+
+def _run_sched(n_req=5, batch_size=2, max_new=3):
+    eng = FakeEngine(batch_size=batch_size)
+    sched = sched_mod.ContinuousScheduler(eng, max_new_tokens=max_new)
+    rids = [sched.submit(np.arange(2 + i)) for i in range(n_req)]
+    res = sched.run()
+    return {r: list(res[r]) for r in rids}
+
+
+def test_scheduler_tokens_identical_disabled_vs_enabled(monkeypatch):
+    clock = FakeClock()
+    monkeypatch.setattr(sched_mod, "time", clock)
+    obs.disable()
+    base = _run_sched()
+    with obs.capture(trace=True):
+        instrumented = _run_sched()
+    assert instrumented == base            # observation changes nothing
+
+
+def test_scheduler_spans_cover_requests(monkeypatch):
+    clock = FakeClock()
+
+    def tick():
+        clock.t += 0.25
+        return clock.t
+    monkeypatch.setattr(clock, "perf_counter", tick)
+    monkeypatch.setattr(sched_mod, "time", clock)
+
+    with obs.capture(trace=True) as (reg, tracer):
+        eng = FakeEngine(batch_size=2)
+        sched = sched_mod.ContinuousScheduler(eng, max_new_tokens=3)
+        rids = [sched.submit(np.arange(3)) for _ in range(4)]
+        sched.run()
+        cov = obs.request_coverage(tracer.spans)
+        assert sorted(cov) == sorted(rids)
+        for rid, frac in cov.items():
+            assert frac == pytest.approx(1.0), (rid, frac)
+        # lifecycle phases abut: queue end == prefill start, etc.
+        by_req = {}
+        for s in tracer.spans:
+            if s.cat == "request":
+                by_req.setdefault(s.args["rid"], {})[s.name] = s
+        for rid, phases in by_req.items():
+            assert set(phases) == {"req.queue", "req.prefill",
+                                   "req.decode"}
+            assert phases["req.queue"].end == phases["req.prefill"].start
+            assert phases["req.prefill"].end == \
+                phases["req.decode"].start
+        # serve metrics recorded real populations
+        snap = reg.snapshot()
+        assert snap["serve.requests_finished_total"]["value"] == 4
+        assert snap["serve.ttft_s"]["count"] == 4
+        assert snap["serve.ttft_s"]["p95"] >= snap["serve.ttft_s"]["p50"]
+
+
+def test_scheduler_stats_quantiles(monkeypatch):
+    clock = FakeClock()
+
+    def tick():
+        clock.t += 0.125
+        return clock.t
+    monkeypatch.setattr(clock, "perf_counter", tick)
+    monkeypatch.setattr(sched_mod, "time", clock)
+    eng = FakeEngine(batch_size=2)
+    sched = sched_mod.ContinuousScheduler(eng, max_new_tokens=4)
+    for i in range(6):
+        sched.submit(np.arange(2 + i))
+    sched.run()
+    st = sched.stats()
+    for key in ("ttft_s", "latency_s", "queue_wait_s", "tpot_s"):
+        summ = st[key]
+        # pre-existing keys survive; quantile keys are new
+        assert set(summ) == {"mean", "max", "p50", "p95", "p99"}
+        assert summ["p50"] <= summ["p95"] <= summ["p99"] <= summ["max"]
+    vals = [v["ttft_s"] for v in st["per_request"].values()]
+    assert st["ttft_s"]["p50"] == pytest.approx(
+        float(np.percentile(vals, 50)), abs=1e-6)
+
+
+# -- export ---------------------------------------------------------------
+
+def test_metrics_report_and_dump_json(tmp_path, capsys):
+    reg = obs.Registry()
+    reg.counter("a_total").inc(2)
+    reg.histogram("b_s").observe(0.5)
+    rep = obs.export.metrics_report(reg, extra={"mode": "test"})
+    assert rep["schema"] == "repro.obs/1"
+    assert rep["mode"] == "test"
+    assert rep["metrics"]["a_total"]["value"] == 2.0
+    p = str(tmp_path / "m.json")
+    obs.export.dump_json(rep, p)
+    with open(p) as f:
+        assert json.load(f) == rep
+    obs.export.dump_json({"x": 1}, "-")
+    assert '"x": 1' in capsys.readouterr().out
+
+
+def test_prometheus_format():
+    reg = obs.Registry()
+    reg.counter("serve.tokens_total", "tokens").inc(7)
+    reg.gauge("kvpool.blocks_in_use").set(3)
+    h = reg.histogram("serve.ttft_s", bounds=[0.1, 1.0])
+    for v in (0.05, 0.5, 2.0):
+        h.observe(v)
+    text = obs.export.to_prometheus(reg)
+    assert "# TYPE repro_serve_tokens_total counter" in text
+    assert "repro_serve_tokens_total 7" in text
+    assert "repro_kvpool_blocks_in_use 3" in text
+    assert 'repro_serve_ttft_s_bucket{le="0.1"} 1' in text
+    assert 'repro_serve_ttft_s_bucket{le="1"} 2' in text
+    assert 'repro_serve_ttft_s_bucket{le="+Inf"} 3' in text
+    assert "repro_serve_ttft_s_count 3" in text
+
+
+def test_write_trace_formats(tmp_path):
+    with obs.capture(trace=True) as (_, tracer):
+        with tracer.span("s"):
+            pass
+    assert obs.export.write_trace(tracer, str(tmp_path / "a.json")) == 1
+    assert obs.export.write_trace(tracer, str(tmp_path / "a.jsonl"),
+                                  fmt="jsonl") == 1
+    with pytest.raises(ValueError):
+        obs.export.write_trace(tracer, str(tmp_path / "x"), fmt="nope")
