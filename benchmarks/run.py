@@ -26,9 +26,13 @@ so CI and notebooks consume results without re-parsing the CSV.
   §11 obs          -> bench_obs.bench_obs (Zipf+Poisson load replay;
                                            obs overhead + span coverage;
                                            writes BENCH_serve.json)
+  §12 modes        -> bench_modes.bench_modes (loglikelihood eval vs
+                                               dense oracle, beam COW
+                                               fork accounting,
+                                               constrained decoding)
 
 Run:  PYTHONPATH=src python -m benchmarks.run \
-          [--only lat,mem,train,topk,roof,tune,serve,spec,mtp,paged,bwd,obs] \
+          [--only lat,mem,train,topk,roof,tune,serve,spec,mtp,paged,bwd,obs,modes] \
           [--json-dir DIR]
 """
 
@@ -39,7 +43,8 @@ import json
 import os
 import sys
 
-ALL_PARTS = "lat,mem,train,topk,roof,tune,serve,spec,mtp,paged,quant,bwd,obs"
+ALL_PARTS = ("lat,mem,train,topk,roof,tune,serve,spec,mtp,paged,quant,"
+             "bwd,obs,modes")
 
 
 def _runner(part):
@@ -85,6 +90,9 @@ def _runner(part):
     if part == "obs":
         from benchmarks.bench_obs import bench_obs
         return [bench_obs]
+    if part == "modes":
+        from benchmarks.bench_modes import bench_modes
+        return [bench_modes]
     raise ValueError(f"unknown bench part {part!r}")
 
 # JSON filenames keep a stable human-facing alias per part.  "serve"

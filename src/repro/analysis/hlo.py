@@ -128,8 +128,15 @@ def logits_intermediates(hlo_text: str, batch: int, vocab: int,
 
     Only result types are inspected, so weights like the `(V, d)` lm_head
     never match; callers should check both the raw and the padded
-    vocabulary.  Returns the offending lines (empty == logits-free).
+    vocabulary.  One-byte INTEGER dtypes (``pred``/``s8``/``u8``) are
+    exempt: no logits tensor is ever stored at 1-byte integer precision,
+    but the constrained-decoding allowed-token mask (DESIGN.md §12.3) is
+    exactly an s8 ``(B, V)`` tensor and must not trip the detector
+    (1-byte FLOAT ``f8*`` results still match).  Returns the offending
+    lines (empty == logits-free).
     """
+    _NON_LOGIT_DTYPES = ("pred", "s8", "u8")
+
     def nonunit(dims):
         return tuple(sorted(d for d in dims if d != 1))
 
@@ -149,7 +156,9 @@ def logits_intermediates(hlo_text: str, batch: int, vocab: int,
         m = _DEF_RE.search(line)
         if not m:
             continue
-        for _, dims in _SHAPE_RE.findall(m.group(1)):
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            if dt in _NON_LOGIT_DTYPES:
+                continue
             ds = [int(x) for x in dims.split(",") if x]
             if nonunit(ds) in targets:
                 hits.append(line.strip())

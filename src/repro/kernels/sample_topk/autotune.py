@@ -28,19 +28,24 @@ from repro.kernels.sample_topk import kernel as K
 from repro.tuning import TuningCache
 
 
-def _op(k: int) -> str:
-    return f"topk{int(k)}"
+def _op(k: int, masked: bool = False) -> str:
+    """``topk<k>`` cache-key namespace; constrained-decoding plans append
+    ``+mask`` — the extra (bm, bv) mask tile changes the kernel's bytes
+    per vocab step, so masked and unmasked winners must never mix."""
+    return f"topk{int(k)}" + ("+mask" if masked else "")
 
 
 def measure_topk_plan(
     h: jax.Array, w: jax.Array, k: int, plan: BlockPlan, *,
     iters: int = 2, logit_softcap: Optional[float] = None,
     interpret: Optional[bool] = None, w_scale=None,
+    allowed_mask=None,
 ) -> float:
     """Min-of-`iters` wall time (µs) of one `topk_scores` call."""
     fn = jax.jit(functools.partial(K.topk_scores, k=k, plan=plan,
                                    logit_softcap=logit_softcap,
-                                   interpret=interpret, w_scale=w_scale))
+                                   interpret=interpret, w_scale=w_scale,
+                                   allowed_mask=allowed_mask))
     jax.block_until_ready(fn(h, w))        # compile, excluded from timing
     best = float("inf")
     for _ in range(max(iters, 1)):
@@ -63,11 +68,14 @@ def run_topk_trials(
     interpret: Optional[bool] = None,
     seed: int = 0,
     wdtype: Optional[str] = None,
+    masked: bool = False,
 ) -> TuneResult:
     """Time candidate plans for the decode top-k shape; heuristic always in
     the timed set, so ``best_us <= heuristic_us`` within one sweep.
     ``wdtype`` times the QUANTIZED kernel variant (int8/fp8 W tiles with
-    per-row scales) so the plan reflects the halved bytes-per-tile."""
+    per-row scales) so the plan reflects the halved bytes-per-tile.
+    ``masked`` times the CONSTRAINED variant (a synthetic half-ones
+    allowed mask streams through the extra tile input)."""
     dtype = jnp.dtype(dtype)
     k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
     h = (jax.random.normal(k1, (n_rows, d)) * 0.5).astype(dtype)
@@ -76,13 +84,19 @@ def run_topk_trials(
     if wdtype is not None:
         from repro.kernels.quant import quantize_weight
         w, w_scale = quantize_weight(w, wdtype)
+    allowed_mask = None
+    if masked:
+        allowed_mask = (jnp.arange(vocab, dtype=jnp.int32)[None, :]
+                        % 2 == 0).astype(jnp.int8)
+        allowed_mask = jnp.broadcast_to(allowed_mask, (n_rows, vocab))
     return run_plan_trials(
         lambda plan: measure_topk_plan(h, w, k, plan, iters=trial_iters,
                                        logit_softcap=logit_softcap,
                                        interpret=interpret,
-                                       w_scale=w_scale),
+                                       w_scale=w_scale,
+                                       allowed_mask=allowed_mask),
         n_rows, vocab, d, dtype, trial_budget=trial_budget,
-        tag=f"topk{k} ")
+        tag=_op(k, masked) + " ")
 
 
 def autotune_topk_plan(
@@ -99,16 +113,19 @@ def autotune_topk_plan(
     interpret: Optional[bool] = None,
     refresh: bool = False,
     wdtype: Optional[str] = None,
+    masked: bool = False,
 ) -> BlockPlan:
     """Memoized empirical plan for the decode top-k kernel.  ``wdtype``
-    (e.g. "int8") tunes — and keys — the quantized-lm_head variant."""
+    (e.g. "int8") tunes — and keys — the quantized-lm_head variant;
+    ``masked`` the constrained-decoding variant (``+mask`` op key)."""
     return autotune_cached(
-        _op(k),
+        _op(k, masked),
         lambda: run_topk_trials(n_rows, vocab, d, k, dtype,
                                 trial_budget=trial_budget,
                                 trial_iters=trial_iters,
                                 logit_softcap=logit_softcap,
-                                interpret=interpret, wdtype=wdtype),
+                                interpret=interpret, wdtype=wdtype,
+                                masked=masked),
         n_rows, vocab, d, dtype, cache=cache, trial_budget=trial_budget,
         refresh=refresh, wdtype=wdtype)
 
@@ -122,7 +139,8 @@ def lookup_topk_plan(
     *,
     cache: Optional[TuningCache] = None,
     wdtype: Optional[str] = None,
+    masked: bool = False,
 ) -> BlockPlan:
     """Zero-cost plan resolution for the decode hot path (never measures)."""
-    return lookup_cached(_op(k), n_rows, vocab, d, dtype, cache=cache,
-                         wdtype=wdtype)
+    return lookup_cached(_op(k, masked), n_rows, vocab, d, dtype,
+                         cache=cache, wdtype=wdtype)

@@ -50,21 +50,27 @@ _NEG_INF = float("-inf")
 _BIG_IDX = 2 ** 30
 
 
-def _topk_kernel(off_ref, h_ref, w_ref,          # inputs (+ opt. w scale)
-                 *rest,                          # [ws_ref,] outs, scratch
+def _topk_kernel(off_ref, h_ref, w_ref,          # inputs (+ opt. extras)
+                 *rest,                          # [ws,][mask,] outs, scratch
                  k: int, valid: int, v_orig: int, bv: int, num_v: int,
-                 softcap: Optional[float], quantized: bool):
-    if quantized:
-        ws_ref, vals_ref, idx_ref, vals_sc, idx_sc = rest
-    else:
-        vals_ref, idx_ref, vals_sc, idx_sc = rest
-        ws_ref = None
+                 softcap: Optional[float], quantized: bool,
+                 masked: bool, want_lse: bool):
+    rest = list(rest)
+    ws_ref = rest.pop(0) if quantized else None
+    mask_ref = rest.pop(0) if masked else None
+    vals_ref, idx_ref = rest.pop(0), rest.pop(0)
+    lse_ref = rest.pop(0) if want_lse else None
+    vals_sc, idx_sc = rest.pop(0), rest.pop(0)
+    m_sc, a_sc = (rest.pop(0), rest.pop(0)) if want_lse else (None, None)
     v = pl.program_id(1)
 
     @pl.when(v == 0)
     def _init():
         vals_sc[...] = jnp.full_like(vals_sc[...], _NEG_INF)
         idx_sc[...] = jnp.zeros_like(idx_sc[...])
+        if want_lse:
+            m_sc[...] = jnp.full_like(m_sc[...], _NEG_INF)
+            a_sc[...] = jnp.zeros_like(a_sc[...])
 
     # (bm, bv) logits tile on the MXU, f32 accumulate; softcap in-tile.
     # A quantized W tile is cast in-register (int8/fp8 grids are exact in
@@ -88,6 +94,24 @@ def _topk_kernel(off_ref, h_ref, w_ref,          # inputs (+ opt. w scale)
     local_col = v * bv + jax.lax.broadcasted_iota(jnp.int32, (bm, bv), 1)
     col = local_col + off_ref[0, 0]                        # global vocab id
     z = jnp.where((local_col < v_orig) & (col < valid), z, _NEG_INF)
+    if masked:
+        # constrained decoding: the (bm, bv) allowed-token tile zeroes
+        # out disallowed columns before the top-k merge AND the softmax
+        # accumulator — the scored distribution is the renormalized
+        # allowed-set distribution (DESIGN.md §12.3)
+        z = jnp.where(mask_ref[...] != 0, z, _NEG_INF)
+
+    if want_lse:
+        # online-softmax fold (fused-CE Alg. 1): lse over the same masked
+        # candidate set the top-k selection sees
+        m_prev = m_sc[...]                                   # (bm, 1)
+        m_new = jnp.maximum(m_prev,
+                            jnp.max(z, axis=1, keepdims=True))
+        safe_m = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        a_sc[...] = (a_sc[...] * jnp.exp(m_prev - safe_m)
+                     + jnp.sum(jnp.exp(z - safe_m), axis=1,
+                               keepdims=True))
+        m_sc[...] = m_new
 
     kp = vals_sc.shape[1]
     slot = jax.lax.broadcasted_iota(jnp.int32, (bm, kp), 1)
@@ -130,6 +154,8 @@ def _topk_kernel(off_ref, h_ref, w_ref,          # inputs (+ opt. w scale)
     def _epilogue():
         vals_ref[...] = new_v
         idx_ref[...] = new_i
+        if want_lse:
+            lse_ref[...] = m_sc[...] + jnp.log(a_sc[...])
 
 
 def topk_scores(
@@ -140,7 +166,9 @@ def topk_scores(
     interpret: Optional[bool] = None,
     col_offset=0,
     w_scale: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, jax.Array]:
+    allowed_mask: Optional[jax.Array] = None,
+    return_lse: bool = False,
+):
     """Per-row top-k of ``h @ w.T`` via the streaming Pallas kernel.
 
     h: (B, d); w: (V, d).  Returns (values (B, k) f32, global indices
@@ -158,6 +186,15 @@ def topk_scores(
     Tensor-parallel shards pass `col_offset` (global id of w's first row)
     and a global `valid_vocab`; per-shard (k-best values, ids) then merge
     with one small all-gather + host-side top-k — never the logits.
+
+    `allowed_mask` (B, V) int8/bool constrains the candidate set: columns
+    whose mask entry is 0 score -inf before both the top-k merge and the
+    softmax accumulator (constrained/JSON decoding, DESIGN.md §12.3) —
+    an all-ones mask is value-identical to no mask.  `return_lse=True`
+    additionally returns the per-row logsumexp (B,) f32 over the same
+    (validity- and mask-) filtered logits — one vocab scan yields both
+    the candidates and their normalizer, so beam-search logprobs
+    (``vals - lse[:, None]``) stay logits-free.
     """
     if k < 1:
         raise ValueError(f"top-k needs k >= 1, got {k}")
@@ -169,6 +206,7 @@ def topk_scores(
     interpret = interpret_default() if interpret is None else interpret
     kp = -(-k // _LANE) * _LANE                     # lane-aligned state
     quantized = w_scale is not None
+    masked = allowed_mask is not None
 
     n_pad = (-n) % bm
     v_pad = (-v_orig) % bv
@@ -182,7 +220,8 @@ def topk_scores(
     off = jnp.asarray(col_offset, jnp.int32).reshape(1, 1)
     kern = functools.partial(_topk_kernel, k=k, valid=valid, v_orig=v_orig,
                              bv=bv, num_v=num_v, softcap=logit_softcap,
-                             quantized=quantized)
+                             quantized=quantized, masked=masked,
+                             want_lse=return_lse)
     in_specs = [
         pl.BlockSpec((1, 1), lambda r, v: (0, 0)),      # col offset
         pl.BlockSpec((bm, d), lambda r, v: (r, 0)),     # h
@@ -193,17 +232,36 @@ def topk_scores(
         ws = jnp.pad(w_scale.astype(jnp.float32), (0, v_pad))[None, :]
         in_specs.append(pl.BlockSpec((1, bv), lambda r, v: (0, v)))
         inputs.append(ws)
+    if masked:
+        if allowed_mask.shape != (n, v_orig):
+            raise ValueError(f"allowed_mask shape {allowed_mask.shape} "
+                             f"!= (rows, vocab) ({n}, {v_orig})")
+        am = jnp.pad(allowed_mask.astype(jnp.int8),
+                     ((0, n_pad), (0, v_pad)))
+        in_specs.append(pl.BlockSpec((bm, bv), lambda r, v: (r, v)))
+        inputs.append(am)
     out_spec = pl.BlockSpec((bm, kp), lambda r, v: (r, 0))
-    vals, idxs = pl.pallas_call(
+    out_specs = [out_spec, out_spec]
+    out_shape = [jax.ShapeDtypeStruct((np_, kp), jnp.float32),
+                 jax.ShapeDtypeStruct((np_, kp), jnp.int32)]
+    scratch = [pltpu.VMEM((bm, kp), jnp.float32),
+               pltpu.VMEM((bm, kp), jnp.int32)]
+    if return_lse:
+        out_specs.append(pl.BlockSpec((bm, 1), lambda r, v: (r, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((np_, 1), jnp.float32))
+        scratch += [pltpu.VMEM((bm, 1), jnp.float32),
+                    pltpu.VMEM((bm, 1), jnp.float32)]
+    out = pl.pallas_call(
         kern,
         grid=(num_r, num_v),
         in_specs=in_specs,
-        out_specs=[out_spec, out_spec],
-        out_shape=[jax.ShapeDtypeStruct((np_, kp), jnp.float32),
-                   jax.ShapeDtypeStruct((np_, kp), jnp.int32)],
-        scratch_shapes=[pltpu.VMEM((bm, kp), jnp.float32),
-                        pltpu.VMEM((bm, kp), jnp.int32)],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
         compiler_params=compiler_params(),
         interpret=interpret,
     )(*inputs)
-    return vals[:n, :k], idxs[:n, :k]
+    vals, idxs = out[0][:n, :k], out[1][:n, :k]
+    if return_lse:
+        return vals, idxs, out[2][:n, 0]
+    return vals, idxs

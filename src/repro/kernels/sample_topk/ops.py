@@ -11,7 +11,7 @@ No custom VJP: sampling is not differentiated through.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 
@@ -31,7 +31,9 @@ def pallas_topk(
     interpret: Optional[bool] = None,
     col_offset=0,
     w_scale: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, jax.Array]:
+    allowed_mask: Optional[jax.Array] = None,
+    return_lse: bool = False,
+):
     """Top-k (values, global indices) of ``h @ w.T`` per row, logits-free.
 
     On non-TPU backends the kernel runs in interpret mode — bit-for-bit
@@ -42,12 +44,21 @@ def pallas_topk(
     `w_scale` (V,) marks `w` as row-quantized (`quantize_weight`); plans
     then resolve under the wdtype-namespaced cache key so int8 and bf16
     winners never shadow each other.
+
+    `allowed_mask` (B, V) constrains candidates to the nonzero-mask set
+    (constrained decoding, DESIGN.md §12.3); plans then resolve under the
+    ``+mask``-suffixed op key — streaming the extra (bm, bv) mask tile
+    shifts the tile-size optimum, so masked and unmasked winners never
+    mix.  `return_lse=True` appends the per-row logsumexp (B,) over the
+    same filtered logits (beam-search logprobs from one vocab scan).
     """
     if plan is None:
         wdtype = w.dtype.name if w_scale is not None else None
         plan = lookup_topk_plan(h.shape[0], w.shape[0], h.shape[-1], k,
-                                h.dtype, wdtype=wdtype)
+                                h.dtype, wdtype=wdtype,
+                                masked=allowed_mask is not None)
     return K.topk_scores(h, w, k, valid_vocab=valid_vocab,
                          logit_softcap=logit_softcap, plan=plan,
                          interpret=interpret, col_offset=col_offset,
-                         w_scale=w_scale)
+                         w_scale=w_scale, allowed_mask=allowed_mask,
+                         return_lse=return_lse)

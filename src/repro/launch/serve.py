@@ -105,6 +105,26 @@ def main(argv=None):
     ap.add_argument("--trace-format", default="chrome",
                     choices=("chrome", "jsonl"),
                     help="trace export format for --trace-out")
+    ap.add_argument("--mode", default="generate",
+                    choices=("generate", "eval"),
+                    help="'eval': score --eval-conts continuations per "
+                         "prompt (batched loglikelihood, logits-free) "
+                         "instead of generating")
+    ap.add_argument("--eval-conts", type=int, default=4,
+                    help="eval mode: continuations per prompt")
+    ap.add_argument("--cont-len", type=int, default=8,
+                    help="eval mode: tokens per continuation")
+    ap.add_argument("--beams", type=int, default=0,
+                    help="beam search width per request (COW slot forks "
+                         "on --paged; 0: plain greedy/sampled decode)")
+    ap.add_argument("--best-of", type=int, default=0,
+                    help="best-of-n sampling width per request")
+    ap.add_argument("--best-of-temp", type=float, default=1.0,
+                    help="best-of-n sampling temperature")
+    ap.add_argument("--grammar-mask", default=None, metavar="SPEC",
+                    help="constrained decoding: allowed-token spec "
+                         "('3,7,42' | 'range:lo-hi' | 'even' | 'odd'); "
+                         "disallowed tokens can never be sampled")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -117,6 +137,18 @@ def main(argv=None):
     if args.paged and args.spec_draft:
         ap.error("--paged supports plain and --spec-self decoding; the "
                  "sidecar draft engine keeps its dense slabs")
+    modes_used = (args.mode == "eval" or args.beams or args.best_of
+                  or args.grammar_mask)
+    if modes_used and (args.spec_draft or args.spec_self):
+        ap.error("--mode eval / --beams / --best-of / --grammar-mask "
+                 "need the plain one-token engines (no --spec-*)")
+    if args.beams and args.best_of:
+        ap.error("--beams and --best-of are mutually exclusive")
+    if (args.beams or args.best_of) and args.temperature != 0.0:
+        ap.error("--beams/--best-of require --temperature 0 (best-of "
+                 "sampling temperature is --best-of-temp)")
+    if args.grammar_mask and (args.beams or args.best_of):
+        ap.error("--grammar-mask cannot combine with --beams/--best-of")
     arch = get_arch(args.arch, reduced=args.reduced)
     if args.mtp_heads or args.spec_self:
         arch = with_mtp(arch, args.mtp_heads or args.spec_k)
@@ -168,17 +200,59 @@ def main(argv=None):
 
     sched = ContinuousScheduler(eng, max_new_tokens=args.max_new)
     t0 = time.perf_counter()
-    rids = [sched.submit(p, frontend_embeds=fe) for p in prompts]
+    if args.mode == "eval":
+        mode = "eval+" + mode
+        conts = [rng.integers(1, arch.vocab_size,
+                              (args.eval_conts, args.cont_len)
+                              ).astype(np.int32) for _ in prompts]
+        rids = [sched.submit_eval(p, list(c), frontend_embeds=fe)
+                for p, c in zip(prompts, conts)]
+    elif args.beams:
+        mode = f"beam{args.beams}+" + mode
+        rids = [sched.submit_beam(p, n_beams=args.beams,
+                                  frontend_embeds=fe) for p in prompts]
+    elif args.best_of:
+        mode = f"best_of{args.best_of}+" + mode
+        rids = [sched.submit_best_of(p, n=args.best_of,
+                                     temperature=args.best_of_temp,
+                                     top_p=args.top_p,
+                                     seed=args.seed + i,
+                                     frontend_embeds=fe)
+                for i, p in enumerate(prompts)]
+    else:
+        mask = None
+        if args.grammar_mask:
+            from repro.serve import parse_mask_spec
+            mask = parse_mask_spec(args.grammar_mask,
+                                   arch.vocab_size).astype(bool)
+            mode = "constrained+" + mode
+        rids = [sched.submit(p, frontend_embeds=fe, token_mask=mask)
+                for p in prompts]
     results = sched.run()
     dt = time.perf_counter() - t0
-    total = sum(len(results[r]) for r in rids)
-    print(f"[serve] arch={arch.arch_id} mode={mode} served {len(rids)} "
-          f"requests ({total} tokens) in {dt:.2f}s ({total / dt:.1f} tok/s "
-          f"incl. compile; occupancy {sched.occupancy:.2f}, "
-          f"{sched.decode_steps} decode steps, "
-          f"{sched.tokens_per_step:.2f} tok/slot-step"
-          + (f", acceptance {sched.acceptance_rate:.2f}"
-             if args.spec_draft or args.spec_self else "") + ")")
+    if args.mode == "eval":
+        total = sum(sum(len(s) for s in results[r]) for r in rids)
+        lls = [float(sum(s.sum() for s in results[r])) for r in rids]
+        print(f"[serve] arch={arch.arch_id} mode={mode} scored "
+              f"{len(rids)} prompts x {args.eval_conts} continuations "
+              f"({total} tokens) in {dt:.2f}s ({total / dt:.1f} tok/s "
+              f"incl. compile); mean loglikelihood "
+              f"{np.mean(lls) / max(args.eval_conts, 1):.3f}")
+    else:
+        total = sum(len(results[r]) for r in rids)
+        print(f"[serve] arch={arch.arch_id} mode={mode} served "
+              f"{len(rids)} requests ({total} tokens) in {dt:.2f}s "
+              f"({total / dt:.1f} tok/s "
+              f"incl. compile; occupancy {sched.occupancy:.2f}, "
+              f"{sched.decode_steps} decode steps, "
+              f"{sched.tokens_per_step:.2f} tok/slot-step"
+              + (f", acceptance {sched.acceptance_rate:.2f}"
+                 if args.spec_draft or args.spec_self else "") + ")")
+    if args.beams or args.best_of:
+        hyp = sched.hypotheses[rids[0]]
+        print(f"[serve] group[0]: {len(hyp)} hypotheses, best logp "
+              f"{hyp[0].logp:.3f}, forks {sched.group_forks}, "
+              f"pruned {sched.group_pruned}")
     if args.paged:
         ps = eng.paged_stats()
         if ps["enabled"]:
@@ -204,9 +278,16 @@ def main(argv=None):
     if args.trace_out is not None:
         obs.export.write_trace(obs.get_tracer(), args.trace_out,
                                fmt=args.trace_format, tag="serve")
-    out = np.stack([np.pad(results[r], (0, args.max_new - len(results[r])))
-                    for r in rids])
-    print("[serve] sample row:", out[0][:16])
+    if args.mode == "eval":
+        out = np.stack([np.concatenate(
+            [np.asarray(s, np.float32) for s in results[r]])
+            for r in rids])
+        print("[serve] sample scores:", np.round(out[0][:8], 3))
+    else:
+        out = np.stack([np.pad(np.asarray(results[r], np.int32),
+                               (0, args.max_new - len(results[r])))
+                        for r in rids])
+        print("[serve] sample row:", out[0][:16])
     return out
 
 

@@ -7,6 +7,9 @@ from repro.serve.spec import (SpecConfig, SpecEngine, SelfSpecEngine,
 from repro.serve.kvpool import (PagedConfig, BlockPool, PrefixCache,
                                 PoolExhausted)
 from repro.serve.paged import PagedEngine, PagedSelfSpecEngine
+from repro.serve.modes import (ModeFns, Hypothesis, BeamGroup,
+                               BestOfGroup, allowed_ids_mask,
+                               parse_mask_spec)
 
 __all__ = ["ServeConfig", "Engine", "ContinuousScheduler", "Request",
            "build_serve_fns", "resolve_logit_softcap",
@@ -14,4 +17,6 @@ __all__ = ["ServeConfig", "Engine", "ContinuousScheduler", "Request",
            "SpecConfig", "SpecEngine", "SelfSpecEngine",
            "build_spec_step", "build_self_spec_step",
            "PagedConfig", "BlockPool", "PrefixCache", "PoolExhausted",
-           "PagedEngine", "PagedSelfSpecEngine"]
+           "PagedEngine", "PagedSelfSpecEngine",
+           "ModeFns", "Hypothesis", "BeamGroup", "BestOfGroup",
+           "allowed_ids_mask", "parse_mask_spec"]

@@ -173,6 +173,11 @@ class Engine:
     """Slot-level serving engine over the model registry (one batched
     cache tree; rows are independently prefilled/recycled slots)."""
 
+    # the request modes of serve/modes.py (eval scoring, beam/best-of
+    # groups, constrained masks) need the single-token decode contract;
+    # the speculative engines flip this off (serve/spec.py)
+    supports_modes = True
+
     def __init__(self, arch: Arch, params, sc: ServeConfig,
                  jit: bool = True):
         self.arch = arch
@@ -217,6 +222,12 @@ class Engine:
         self._m_decode_steps = _reg.counter("engine.decode_steps_total")
         self._axes = self._cache_axes()
         axes = self._axes
+        # request modes (serve/modes.py): per-slot constrained-decoding
+        # masks + the lazily-built mode closures (eval scoring, top-k
+        # decode for beam groups) — engines without mode traffic never
+        # trace them
+        self._slot_masks: Dict[int, np.ndarray] = {}
+        self._modefns = None
 
         if sc.autotune:
             self._tune_plans()
@@ -276,6 +287,8 @@ class Engine:
         self._template = take_slot_caches(self.caches, 0, self._axes)
         self.cur = np.zeros((self.sc.batch_size,), np.int32)
         self._rng = jax.random.PRNGKey(seed)
+        if getattr(self, "_slot_masks", None):
+            self._slot_masks.clear()
 
     def _tune_plans(self):
         """Populate the tuning cache for the decode/prefill sample shapes
@@ -347,13 +360,18 @@ class Engine:
                 batch["frontend_embeds"] = jnp.asarray(frontend_embeds)
         return batch, slot_caches, true_len
 
-    def _slot_prefill_view(self, slot: int, prompt, frontend_embeds):
+    def _slot_prefill_view(self, slot: int, prompt, frontend_embeds,
+                           match_len: Optional[int] = None):
         """(batch, slot_caches, true_len, ctx) for one slot prefill.
 
         `ctx` is opaque state threaded to `_commit_slot`; its ``'ext'``
         key selects the cache-extension prefill variant (always False
         for the slab engine — the paged engine flips it on prefix-cache
-        hits, serve/paged.py)."""
+        hits, serve/paged.py).  `match_len` caps how much of `prompt`
+        the paged prefix cache may match (eval scoring must keep the
+        whole continuation — and the token before it — in the suffix
+        forward); slab engines have no prefix reuse and ignore it."""
+        del match_len
         batch, slot_caches, true_len = self._prefill_inputs(
             prompt, frontend_embeds)
         return batch, slot_caches, true_len, {"ext": False}
@@ -377,10 +395,18 @@ class Engine:
         t_b = batch["tokens"].shape[1]
         with self._tracer.span("engine.prefill", cat="engine", slot=slot,
                                tokens=t_b, ext=bool(ctx.get("ext"))):
-            fn = self._prefill_ext if ctx.get("ext") else self._prefill
-            tok, slot_caches = fn(
-                self.params, slot_caches, batch, jnp.int32(true_len),
-                self._split())
+            if slot in self._slot_masks:
+                pf = self._mode_fns().prefill_masked(bool(ctx.get("ext")))
+                tok, slot_caches = pf(
+                    self.params, slot_caches, batch, jnp.int32(true_len),
+                    self._split(),
+                    jnp.asarray(self._mask_row(slot)[None, :]))
+            else:
+                fn = (self._prefill_ext if ctx.get("ext")
+                      else self._prefill)
+                tok, slot_caches = fn(
+                    self.params, slot_caches, batch, jnp.int32(true_len),
+                    self._split())
             self._commit_slot(slot, slot_caches, ctx)
             tok = int(jax.device_get(tok)[0])
         self._m_prefills.inc()
@@ -391,11 +417,21 @@ class Engine:
     def decode_step(self) -> np.ndarray:
         """Advance every slot one token; returns (B,) sampled ids.
 
-        Rows of free slots are dead compute — callers ignore them."""
-        with self._tracer.span("engine.decode_step", cat="engine"):
-            tok, self.caches = self._decode(
-                self.params, self.caches, jnp.asarray(self.cur[:, None]),
-                self._split())
+        Rows of free slots are dead compute — callers ignore them.
+        When any slot carries a constrained-decoding mask the whole
+        batch routes through the masked sampler variant (unconstrained
+        rows stream an all-ones mask — token-identical to no mask)."""
+        with self._tracer.span("engine.decode_step", cat="engine",
+                               masked=bool(self._slot_masks)):
+            if self._slot_masks:
+                tok, self.caches = self._mode_fns().decode_masked()(
+                    self.params, self.caches,
+                    jnp.asarray(self.cur[:, None]), self._split(),
+                    jnp.asarray(self._mask_matrix()))
+            else:
+                tok, self.caches = self._decode(
+                    self.params, self.caches,
+                    jnp.asarray(self.cur[:, None]), self._split())
             toks = np.asarray(jax.device_get(tok), np.int32)
         self._m_decode_steps.inc()
         self.cur = toks.copy()
@@ -415,6 +451,155 @@ class Engine:
         self.caches = self._reset(self.caches, self._template,
                                   jnp.int32(slot))
         self.cur[slot] = 0
+        self._slot_masks.pop(slot, None)
+
+    # -- request modes (serve/modes.py, DESIGN.md §12) -----------------------
+
+    def _mode_fns(self):
+        """The lazily-built mode closures (compiled on first use)."""
+        if self._modefns is None:
+            from repro.serve.modes import ModeFns
+            self._modefns = ModeFns(self)
+        return self._modefns
+
+    def set_slot_mask(self, slot: int, allowed) -> None:
+        """Constrain slot `slot` to an allowed-token set (None clears).
+
+        `allowed` is either a (vocab_size,) BOOL mask or an integer id
+        list; disallowed tokens score -inf inside the sampling kernels'
+        vocab scan (`sample_topk` `allowed_mask`), so they can never be
+        drawn at any temperature/top-p.  The set must be non-empty."""
+        if not self.supports_modes:
+            raise NotImplementedError(
+                f"{type(self).__name__} does not support per-slot "
+                "token masks (speculative drafting would need masked "
+                "verification) — serve constrained requests on a "
+                "non-speculative engine")
+        if allowed is None:
+            self._slot_masks.pop(slot, None)
+            return
+        v = self.arch.vocab_size
+        a = np.asarray(allowed)
+        if a.dtype == np.bool_:
+            if a.shape != (v,):
+                raise ValueError(f"bool mask shape {a.shape} != ({v},)")
+            mask = a.astype(np.uint8)
+        else:
+            from repro.serve.modes import allowed_ids_mask
+            mask = allowed_ids_mask(a, v)
+        if not mask.any():
+            raise ValueError("empty allowed-token set")
+        self._slot_masks[slot] = mask
+
+    def _mask_row(self, slot: int) -> np.ndarray:
+        """Slot mask padded to the lm_head's (possibly padded) vocab
+        width — pad columns stay 1, the kernels' validity clamp already
+        kills them."""
+        vw = self.params["lm_head"].shape[0]
+        row = np.ones((vw,), np.uint8)
+        row[:self.arch.vocab_size] = self._slot_masks[slot]
+        return row
+
+    def _mask_matrix(self) -> np.ndarray:
+        """(B, V_head) uint8 batch mask: all-ones rows (identity) except
+        the slots with an active constraint."""
+        m = np.ones((self.sc.batch_size, self.params["lm_head"].shape[0]),
+                    np.uint8)
+        for s in self._slot_masks:
+            m[s] = self._mask_row(s)
+        return m
+
+    def decode_topk_step(self, n_cand: int):
+        """Advance every slot one step, returning the top-`n_cand`
+        candidate scores instead of sampling: (vals (B, k) f32,
+        idxs (B, k) i32, lse (B,) f32) — ``vals - lse[:, None]`` are the
+        candidate log-probabilities, from ONE logits-free vocab scan
+        (`pallas_topk` `return_lse`).  Does NOT update `self.cur`: the
+        caller (a beam/best-of group) chooses each slot's next token."""
+        with self._tracer.span("engine.decode_step", cat="engine",
+                               topk=n_cand):
+            (vals, idxs, lse), self.caches = \
+                self._mode_fns().decode_topk(n_cand)(
+                    self.params, self.caches,
+                    jnp.asarray(self.cur[:, None]))
+            vals = np.asarray(jax.device_get(vals), np.float32)
+            idxs = np.asarray(jax.device_get(idxs), np.int32)
+            lse = np.asarray(jax.device_get(lse), np.float32)
+        self._m_decode_steps.inc()
+        return vals, idxs, lse
+
+    def prefill_topk_into_slot(self, slot: int, prompt, n_cand: int,
+                               frontend_embeds=None):
+        """Prefill one prompt into `slot`, returning the first-step
+        top-`n_cand` candidates (vals (k,), idxs (k,), lse scalar)
+        instead of a sampled token — the admit half of a beam/best-of
+        group.  Does NOT set `self.cur[slot]`; the group does."""
+        batch, slot_caches, true_len, ctx = self._slot_prefill_view(
+            slot, prompt, frontend_embeds)
+        t_b = batch["tokens"].shape[1]
+        with self._tracer.span("engine.prefill", cat="engine", slot=slot,
+                               tokens=t_b, ext=bool(ctx.get("ext")),
+                               topk=n_cand):
+            pf = self._mode_fns().prefill_topk(n_cand,
+                                               bool(ctx.get("ext")))
+            (vals, idxs, lse), slot_caches = pf(
+                self.params, slot_caches, batch, jnp.int32(true_len))
+            self._commit_slot(slot, slot_caches, ctx)
+            vals = np.asarray(jax.device_get(vals), np.float32)[0]
+            idxs = np.asarray(jax.device_get(idxs), np.int32)[0]
+            lse = float(np.asarray(jax.device_get(lse))[0])
+        self._m_prefills.inc()
+        self._m_prefill_tokens.inc(t_b)
+        return vals, idxs, lse
+
+    def score_in_slot(self, slot: int, prompt, continuation,
+                      frontend_embeds=None) -> np.ndarray:
+        """Per-token ``log p(continuation | prompt)`` — (len(cont),)
+        f32 — in ONE batch=1 forward over prompt+continuation through
+        slot `slot` (the loglikelihood/perplexity eval primitive).
+
+        The hidden state at each continuation position feeds
+        `kernels/score_tokens` (candidate logit + lse per row, never a
+        logits row).  On paged engines the prompt prefix replays through
+        the prefix-cache trie (`match_len` caps the match at the prompt
+        so the scored positions stay inside the suffix forward), making
+        N continuations of one prompt N cheap suffix extensions.  The
+        slot's cache is left holding prompt+continuation — the caller
+        resets (or reuses) the slot."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        cont = np.asarray(continuation, np.int32).reshape(-1)
+        if cont.size == 0:
+            return np.zeros((0,), np.float32)
+        seq = np.concatenate([prompt, cont])
+        batch, slot_caches, true_len, ctx = self._slot_prefill_view(
+            slot, seq, frontend_embeds, match_len=len(prompt))
+        t_b = batch["tokens"].shape[1]
+        p_pad = max(8, _bucket_len(len(cont), 1 << 30))
+        ids = np.full((p_pad,), -1, np.int32)
+        ids[:len(cont)] = cont
+        with self._tracer.span("engine.prefill", cat="engine", slot=slot,
+                               tokens=t_b, ext=bool(ctx.get("ext")),
+                               mode="eval"):
+            fn = self._mode_fns().eval_score(p_pad,
+                                             bool(ctx.get("ext")))
+            logp, slot_caches = fn(
+                self.params, slot_caches, batch, jnp.int32(true_len),
+                jnp.int32(len(cont)), jnp.asarray(ids))
+            self._commit_slot(slot, slot_caches, ctx)
+            logp = np.asarray(jax.device_get(logp), np.float32)
+        self._m_prefills.inc()
+        self._m_prefill_tokens.inc(t_b)
+        return logp[:len(cont)]
+
+    def fork_slot(self, dst: int, src: int) -> None:
+        """Duplicate slot `src`'s decode state into free slot `dst`
+        (beam / best-of-n forking).  The slab engine copies the cache
+        row; `PagedEngine` overrides this with a `BlockPool.fork`
+        refcount bump — sibling beams share every block copy-on-write
+        until they diverge (serve/paged.py)."""
+        view = take_slot_caches(self.caches, jnp.int32(src), self._axes)
+        self.caches = self._insert(self.caches, view, jnp.int32(dst))
+        self.cur[dst] = self.cur[src]
 
     # -- fixed-batch convenience -------------------------------------------
 

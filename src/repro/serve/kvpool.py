@@ -117,6 +117,8 @@ class BlockPool:
         self._m_alloc = reg.counter("kvpool.blocks_allocated_total")
         self._m_cow = reg.counter("kvpool.cow_copies_total",
                                   "shared blocks un-shared before a write")
+        self._m_fork = reg.counter("kvpool.forks_total",
+                                   "chains shared via fork (beam/prefix)")
 
     def _track(self):
         self._m_in_use.set(self.used_blocks)
@@ -145,7 +147,7 @@ class BlockPool:
                 f"need {n} blocks, {len(self._free)} free "
                 f"(pool: {self.cfg.n_blocks}, block {self.cfg.block_size})")
         out = [self._free.pop() for _ in range(n)]
-        self._refs[out] += 1
+        np.add.at(self._refs, out, 1)
         self._m_alloc.inc(n)
         self._track()
         return out
@@ -157,7 +159,12 @@ class BlockPool:
         for b in ids:
             if b == NULL_BLOCK or self._refs[b] < 1:
                 raise ValueError(f"fork of unallocated block {b}")
-        self._refs[ids] += 1
+        # np.add.at, NOT fancy-index +=: a chain with a repeated id must
+        # gain one reference per occurrence, or the matching free() later
+        # drops the block while a sibling still points at it.
+        np.add.at(self._refs, ids, 1)
+        self._m_fork.inc()
+        self._track()
         return ids
 
     def free(self, chain: Sequence[int]) -> List[int]:

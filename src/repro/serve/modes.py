@@ -1,0 +1,531 @@
+"""Logits-free request modes on the serving primitives (DESIGN.md §12).
+
+Three request shapes beyond plain generation, all built on the same
+streaming vocab-scan kernels — none ever materializes a (B, V) logits
+tensor:
+
+  * **Loglikelihood eval** — `Engine.score_in_slot` scores a
+    continuation under a prompt in ONE suffix prefill: the forward runs
+    over prompt+continuation, and `kernels/score_tokens` reads
+    ``log p(cont[t] | ...)`` at each continuation position from the
+    hidden states directly (lse + candidate logit per row, never the
+    row).  On paged engines the prompt prefix replays through the
+    prefix-cache trie, so lm-eval-style N-way multiple choice pays the
+    prompt forward once and N cheap suffix extensions.
+  * **Best-of-n / beam search** — `BeamGroup` / `BestOfGroup` drive n
+    sibling slots through the batched decode.  Per-step candidate
+    logprobs come from the top-k kernel's `return_lse` output
+    (``logp = vals - lse`` from one vocab scan); beam forks duplicate a
+    slot via `Engine.fork_slot`, which on paged engines is a
+    `BlockPool.fork` refcount bump — sibling beams share every prompt
+    block copy-on-write until they diverge.
+  * **Constrained decoding** — `Engine.set_slot_mask` pins a per-slot
+    allowed-token set; the mask streams through the sampling kernels as
+    an s8 (B, V) tile input (`sample_topk` `allowed_mask`), scoring
+    disallowed tokens -inf INSIDE the vocab scan, so no temperature or
+    top-p setting can ever emit one.
+
+`ModeFns` owns the extra jitted closures these modes need, compiled
+lazily and memoized per static signature — engines without mode traffic
+never trace them.  Beam bookkeeping (cumulative logprobs, hypothesis
+sets, slot forking/pruning) is host-side numpy on the (B, k) kernel
+outputs: k is tiny, the vocab dimension never leaves the kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import forward_hidden, shift_cache_lens
+from repro.serve.sampler import sample_tokens, streaming_topk
+
+
+# ---------------------------------------------------------------------------
+# traced closures (jit cache keyed by static signature)
+# ---------------------------------------------------------------------------
+
+
+class ModeFns:
+    """Lazily-jitted mode closures over one engine's (arch, sc, params
+    layout).  Mirrors `build_serve_fns` but for the mode entry points:
+    masked decode/prefill, top-k+lse decode/prefill, continuation
+    scoring.  Each getter memoizes on its static arguments so repeat
+    calls are dict lookups."""
+
+    def __init__(self, engine):
+        self.arch = engine.arch
+        self.sc = engine.sc
+        from repro.serve.engine import resolve_logit_softcap
+        self._softcap = resolve_logit_softcap(engine.arch, engine.sc)
+        self._wrap = jax.jit if engine._jit else (lambda f, **kw: f)
+        # donate the batched caches on decode-shaped fns (same rule as
+        # Engine.__init__: donation warns on CPU, so only ask off-CPU)
+        self._dn = (lambda n: {"donate_argnums": (n,)}) \
+            if engine._jit and jax.default_backend() != "cpu" \
+            else (lambda n: {})
+        self._fns: Dict[tuple, Callable] = {}
+
+    # -- kernel dispatch ----------------------------------------------------
+
+    def _topk_lse(self, h, params, k):
+        """(vals (N, k), idxs (N, k), lse (N,)) from one vocab scan."""
+        w = params["lm_head"]
+        ws = params.get("lm_head_scale")
+        if self.sc.sampler_impl == "pallas":
+            from repro.kernels.sample_topk import pallas_topk
+            return pallas_topk(h, w, k, valid_vocab=self.arch.vocab_size,
+                               logit_softcap=self._softcap, w_scale=ws,
+                               return_lse=True)
+        return streaming_topk(h, w, k, block_v=self.sc.sample_block_v,
+                              valid_vocab=self.arch.vocab_size,
+                              logit_softcap=self._softcap, w_scale=ws,
+                              return_lse=True)
+
+    def _score(self, hs, params, ids):
+        """(N,) log p(ids | hs) under the full-vocab softmax."""
+        w = params["lm_head"]
+        ws = params.get("lm_head_scale")
+        if self.sc.sampler_impl == "pallas":
+            from repro.kernels.score_tokens import pallas_score_tokens
+            logp, _ = pallas_score_tokens(
+                hs, w, ids, valid_vocab=self.arch.vocab_size,
+                logit_softcap=self._softcap, w_scale=ws)
+        else:
+            from repro.kernels.score_tokens import streaming_score
+            logp, _ = streaming_score(
+                hs, w, ids, block_v=self.sc.sample_block_v,
+                valid_vocab=self.arch.vocab_size,
+                logit_softcap=self._softcap, w_scale=ws)
+            logp = logp[:, 0]       # 1-D ids: (N, 1) -> (N,) like the op
+        return logp
+
+    def _masked_sample(self, h, params, rng, mask):
+        return sample_tokens(
+            h, params["lm_head"], rng, temperature=self.sc.temperature,
+            top_k=self.sc.top_k, top_p=self.sc.top_p,
+            block_v=self.sc.sample_block_v,
+            valid_vocab=self.arch.vocab_size,
+            logit_softcap=self._softcap, impl=self.sc.sampler_impl,
+            w_scale=params.get("lm_head_scale"), allowed_mask=mask)
+
+    def _prefill_h(self, params, caches, batch, true_len, ext):
+        """Forward + pad-shift; returns (h (1, T_h, d), caches)."""
+        h, _, caches = forward_hidden(self.arch, params, batch,
+                                      caches=caches, decode=ext,
+                                      prefill_ext=ext, true_len=true_len)
+        pad = batch["tokens"].shape[1] - true_len
+        caches = shift_cache_lens(caches, pad)
+        return h, caches
+
+    def _last_h(self, h, batch, true_len):
+        last = h.shape[1] - batch["tokens"].shape[1] + true_len - 1
+        return jax.lax.dynamic_index_in_dim(h, last, axis=1,
+                                            keepdims=False)     # (1, d)
+
+    # -- traced entry points ------------------------------------------------
+
+    def _get(self, key, builder):
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._fns[key] = builder()
+        return fn
+
+    def decode_masked(self):
+        """(params, caches, tokens (B,1), rng, mask (B,V) s8)
+        -> (tok (B,), caches)."""
+        def build():
+            def fn(params, caches, tokens, rng, mask):
+                h, _, caches = forward_hidden(self.arch, params,
+                                              {"tokens": tokens},
+                                              caches=caches)
+                tok = self._masked_sample(h[:, -1, :], params, rng, mask)
+                return tok, caches
+            return self._wrap(fn, **self._dn(1))
+        return self._get(("dec_mask",), build)
+
+    def decode_topk(self, k: int):
+        """(params, caches, tokens (B,1))
+        -> ((vals (B,k), idxs (B,k), lse (B,)), caches)."""
+        def build():
+            def fn(params, caches, tokens):
+                h, _, caches = forward_hidden(self.arch, params,
+                                              {"tokens": tokens},
+                                              caches=caches)
+                return self._topk_lse(h[:, -1, :], params, k), caches
+            return self._wrap(fn, **self._dn(1))
+        return self._get(("dec_topk", k), build)
+
+    def prefill_masked(self, ext: bool):
+        """(params, slot_caches, batch, true_len, rng, mask (1,V))
+        -> (tok (1,), caches)."""
+        def build():
+            def fn(params, caches, batch, true_len, rng, mask):
+                h, caches = self._prefill_h(params, caches, batch,
+                                            true_len, ext)
+                h_last = self._last_h(h, batch, true_len)
+                return (self._masked_sample(h_last, params, rng, mask),
+                        caches)
+            return self._wrap(fn)
+        return self._get(("pre_mask", ext), build)
+
+    def prefill_topk(self, k: int, ext: bool):
+        """(params, slot_caches, batch, true_len)
+        -> ((vals (1,k), idxs (1,k), lse (1,)), caches)."""
+        def build():
+            def fn(params, caches, batch, true_len):
+                h, caches = self._prefill_h(params, caches, batch,
+                                            true_len, ext)
+                h_last = self._last_h(h, batch, true_len)
+                return self._topk_lse(h_last, params, k), caches
+            return self._wrap(fn)
+        return self._get(("pre_topk", k, ext), build)
+
+    def eval_score(self, p_pad: int, ext: bool):
+        """(params, slot_caches, batch, true_len, cont_len, ids (p_pad,))
+        -> (logp (p_pad,), caches).
+
+        ``batch`` is a (possibly suffix-only) prefill view whose LAST
+        `cont_len` real tokens are the continuation; ``logp[t]`` is the
+        log-probability of continuation token t read from the hidden
+        state at the position BEFORE it.  Pad ids with -1 (-inf, sliced
+        off by the host caller)."""
+        def build():
+            def fn(params, caches, batch, true_len, cont_len, ids):
+                h, caches = self._prefill_h(params, caches, batch,
+                                            true_len, ext)
+                t_b = batch["tokens"].shape[1]
+                off = h.shape[1] - t_b      # frontend prefix, if any
+                pos = (true_len - cont_len - 1
+                       + jnp.arange(p_pad, dtype=jnp.int32))
+                pos = off + jnp.clip(pos, 0, t_b - 1)
+                hs = jnp.take(h[0], pos, axis=0)        # (p_pad, d)
+                return self._score(hs, params, ids), caches
+            return self._wrap(fn)
+        return self._get(("eval", p_pad, ext), build)
+
+
+# ---------------------------------------------------------------------------
+# beam / best-of-n decode groups (host-side bookkeeping)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Hypothesis:
+    """One finished beam: generated tokens + cumulative logprob."""
+    tokens: List[int]
+    logp: float
+
+
+class _DecodeGroup:
+    """n sibling slots decoding one request; the scheduler owns slot
+    accounting via the `claim`/`release` callbacks and feeds each step's
+    (vals, idxs, lse) rows from `Engine.decode_topk_step`."""
+
+    kind = "group"
+
+    def __init__(self, rid: int, prompt, n: int, max_new: int,
+                 eos_id: Optional[int], frontend_embeds=None):
+        if n < 1:
+            raise ValueError(f"group width {n} < 1")
+        self.rid = rid
+        self.prompt = np.asarray(prompt, np.int32).reshape(-1)
+        self.n = n
+        self.max_new = max_new
+        self.eos_id = eos_id
+        self.frontend_embeds = frontend_embeds
+        self.slots: List[int] = []
+        self.cum: List[float] = []
+        self.toks: List[List[int]] = []
+        self.finished: List[Hypothesis] = []
+        self.done = False
+        self.forks = 0
+        self.pruned = 0
+
+    # -- shared machinery ---------------------------------------------------
+
+    @property
+    def k_cand(self) -> int:
+        raise NotImplementedError
+
+    def _finish(self, prev: List[int], tok: int, lp: float):
+        self.finished.append(Hypothesis(prev + [tok], lp))
+
+    def _spawn(self, engine, live: List[Tuple[float, int, int]],
+               slot_of: Callable[[int], int],
+               claim: Optional[Callable[[], Optional[int]]]):
+        """Assign a slot to every selected (lp, parent, tok) candidate:
+        the first child of a parent inherits its slot, later children
+        fork.  `claim() -> slot | None`; None drops the candidate (the
+        scheduler had no free slot — graceful degradation)."""
+        new_slots, new_cum, new_toks = [], [], []
+        taken = set()
+        for lp, b, tok in live:
+            src = slot_of(b)
+            if b not in taken:
+                s = src
+                taken.add(b)
+            else:
+                s = claim() if claim is not None else None
+                if s is None:
+                    self.pruned += 1
+                    continue
+                engine.fork_slot(s, src)
+                self.forks += 1
+            engine.cur[s] = tok
+            new_slots.append(s)
+            new_cum.append(lp)
+            new_toks.append((self.toks[b] if b >= 0 else []) + [tok])
+        self.slots, self.cum, self.toks = new_slots, new_cum, new_toks
+
+    def _release_all(self, release):
+        for s in self.slots:
+            release(s)
+        self.slots, self.cum, self.toks = [], [], []
+        self.done = True
+
+    def result(self) -> List[Hypothesis]:
+        """Hypotheses sorted by cumulative logprob, best first (top n)."""
+        return sorted(self.finished, key=lambda h: -h.logp)[:self.n]
+
+    # -- interface the scheduler drives -------------------------------------
+
+    def admit(self, engine, slots: List[int]) -> List[int]:
+        """Prefill into `slots[0]`, pick the first-token candidates, fork
+        the extra beams.  Returns the slots actually occupied (a prefix
+        of `slots`; fewer than n when candidates finish immediately)."""
+        raise NotImplementedError
+
+    def step(self, engine, vals, idxs, lse, claim, release) -> int:
+        """Advance one decode step from the (B, k)/(B,) kernel outputs.
+        Returns the number of live tokens emitted; sets `self.done`."""
+        raise NotImplementedError
+
+
+class BeamGroup(_DecodeGroup):
+    """Deterministic beam search, HF-style selection: per step rank the
+    ``live x 2n`` continuation candidates by cumulative logprob; EOS (or
+    budget-capped) candidates retire to the hypothesis set, the best n
+    survivors continue.  Terminates when no live beam can beat the n-th
+    best finished hypothesis (per-token logprob increments are <= 0, so
+    cumulative scores only fall)."""
+
+    kind = "beam"
+
+    @property
+    def k_cand(self) -> int:
+        # n == 1 is greedy: k=1 keeps the decode step token-identical
+        # to the plain engine's (same kernel, same plan key)
+        return 1 if self.n == 1 else 2 * self.n
+
+    def _select(self, cand):
+        """cand: [(cum_lp, parent_idx, tok)] sorted desc (parent -1 at
+        admit time = empty prefix).  Retires EOS/budget candidates,
+        returns up to n live survivors."""
+        live = []
+        for lp, b, tok in cand:
+            if not np.isfinite(lp):
+                continue
+            prev = self.toks[b] if b >= 0 else []
+            hit_eos = self.eos_id is not None and tok == self.eos_id
+            if hit_eos or len(prev) + 1 >= self.max_new:
+                self._finish(prev, tok, lp)
+                continue
+            live.append((lp, b, tok))
+            if len(live) == self.n:
+                break
+        return live
+
+    def _beaten(self, live) -> bool:
+        """True when the best live beam can no longer enter the top-n
+        finished set (scores are non-increasing in length)."""
+        if len(self.finished) < self.n:
+            return False
+        nth = sorted((h.logp for h in self.finished), reverse=True)[
+            self.n - 1]
+        return not live or live[0][0] <= nth
+
+    def admit(self, engine, slots: List[int]) -> List[int]:
+        vals, idxs, lse = engine.prefill_topk_into_slot(
+            slots[0], self.prompt, self.k_cand,
+            frontend_embeds=self.frontend_embeds)
+        logp = vals - lse
+        cand = [(float(logp[j]), -1, int(idxs[j]))
+                for j in range(len(logp))]
+        live = self._select(cand)
+        if self._beaten(live):
+            live = []
+        # first live candidate adopts the prefilled slot directly; the
+        # rest fork its cache (COW block shares on paged engines)
+        used: List[int] = []
+        for lp, _b, tok in live:
+            s = slots[len(used)]
+            if used:
+                engine.fork_slot(s, slots[0])
+                self.forks += 1
+            engine.cur[s] = tok
+            used.append(s)
+            self.slots.append(s)
+            self.cum.append(lp)
+            self.toks.append([tok])
+        self.done = not self.slots
+        return used
+
+    def step(self, engine, vals, idxs, lse, claim, release) -> int:
+        cand = []
+        for b, s in enumerate(self.slots):
+            row_lp = vals[s] - lse[s]
+            for j in range(idxs.shape[1]):
+                cand.append((self.cum[b] + float(row_lp[j]), b,
+                             int(idxs[s, j])))
+        cand.sort(key=lambda c: -c[0])
+        live = self._select(cand)
+        if not live or self._beaten(live):
+            self.pruned += len(self.slots)
+            self._release_all(release)
+            return 0
+        old_slots = list(self.slots)
+        with_child = {b for _, b, _ in live}
+        for b, s in enumerate(old_slots):
+            if b not in with_child:
+                release(s)
+                self.pruned += 1
+        self._spawn(engine, live, lambda b: old_slots[b], claim)
+        self.done = not self.slots
+        return len(self.slots)
+
+
+class BestOfGroup(_DecodeGroup):
+    """n independent temperature samples of one prompt, scored by true
+    cumulative logprob (``vals - lse`` of each drawn token).  Sampling
+    happens HOST-side on the (k,) survivor row — a numpy mirror of
+    `sample_tokens`' top-k/top-p/temperature chain — so sibling chains
+    draw different tokens from one shared kernel row."""
+
+    kind = "best_of"
+
+    def __init__(self, rid: int, prompt, n: int, max_new: int,
+                 eos_id: Optional[int], frontend_embeds=None, *,
+                 temperature: float = 1.0, top_k: int = 40,
+                 top_p: Optional[float] = None, seed: int = 0):
+        super().__init__(rid, prompt, n, max_new, eos_id,
+                         frontend_embeds)
+        if temperature < 0.0:
+            raise ValueError("best-of-n temperature must be >= 0")
+        self.temperature = temperature
+        self.top_p = top_p
+        self._k = max(1, int(top_k)) if temperature > 0.0 else 1
+        self._rng = np.random.default_rng(seed)
+
+    @property
+    def k_cand(self) -> int:
+        return self._k
+
+    def _draw(self, row_vals) -> int:
+        """Sample a candidate index from one descending (k,) logit row."""
+        z = np.asarray(row_vals, np.float64).copy()
+        if self.temperature <= 0.0:
+            return 0
+        z /= self.temperature
+        if self.top_p is not None and self.top_p < 1.0:
+            zm = z - np.max(z[np.isfinite(z)])
+            p = np.exp(zm, where=np.isfinite(zm), out=np.zeros_like(zm))
+            p /= p.sum()
+            keep = (np.cumsum(p) - p) < self.top_p   # rows sorted desc
+            z[~keep] = -np.inf
+        z -= np.max(z[np.isfinite(z)])
+        p = np.exp(z, where=np.isfinite(z), out=np.zeros_like(z))
+        p /= p.sum()
+        return int(self._rng.choice(len(z), p=p))
+
+    def _child(self, vals, idxs, lse) -> Tuple[float, int]:
+        j = self._draw(vals)
+        return float(vals[j] - lse), int(idxs[j])
+
+    def admit(self, engine, slots: List[int]) -> List[int]:
+        vals, idxs, lse = engine.prefill_topk_into_slot(
+            slots[0], self.prompt, self.k_cand,
+            frontend_embeds=self.frontend_embeds)
+        used: List[int] = []
+        for _ in range(self.n):
+            lp, tok = self._child(vals, idxs, lse)
+            if (self.eos_id is not None and tok == self.eos_id) \
+                    or self.max_new <= 1:
+                self._finish([], tok, lp)
+                continue
+            s = slots[len(used)]
+            if used:
+                engine.fork_slot(s, slots[0])
+                self.forks += 1
+            engine.cur[s] = tok
+            used.append(s)
+            self.slots.append(s)
+            self.cum.append(lp)
+            self.toks.append([tok])
+        self.done = not self.slots
+        return used
+
+    def step(self, engine, vals, idxs, lse, claim, release) -> int:
+        del claim
+        keep_s, keep_c, keep_t = [], [], []
+        emitted = 0
+        for b, s in enumerate(self.slots):
+            lp, tok = self._child(vals[s], idxs[s], lse[s])
+            cum = self.cum[b] + lp
+            toks = self.toks[b] + [tok]
+            emitted += 1
+            if (self.eos_id is not None and tok == self.eos_id) \
+                    or len(toks) >= self.max_new:
+                self.finished.append(Hypothesis(toks, cum))
+                release(s)
+                continue
+            engine.cur[s] = tok
+            keep_s.append(s)
+            keep_c.append(cum)
+            keep_t.append(toks)
+        self.slots, self.cum, self.toks = keep_s, keep_c, keep_t
+        self.done = not self.slots
+        return emitted
+
+
+# ---------------------------------------------------------------------------
+# constrained-decoding mask helpers
+# ---------------------------------------------------------------------------
+
+
+def allowed_ids_mask(ids, vocab_size: int) -> np.ndarray:
+    """(V,) uint8 allowed-token mask from an id list."""
+    ids = np.asarray(ids, np.int64).reshape(-1)
+    if ids.size == 0:
+        raise ValueError("empty allowed-token set")
+    if (ids < 0).any() or (ids >= vocab_size).any():
+        raise ValueError(f"allowed ids outside [0, {vocab_size})")
+    mask = np.zeros((vocab_size,), np.uint8)
+    mask[ids] = 1
+    return mask
+
+
+def parse_mask_spec(spec: str, vocab_size: int) -> np.ndarray:
+    """CLI grammar-mask spec -> (V,) uint8 mask.
+
+    ``"3,7,42"`` — an explicit id list; ``"range:lo-hi"`` — ids in
+    [lo, hi); ``"even"`` / ``"odd"`` — parity subsets (toy grammars for
+    benchmarks/tests).  A real JSON-schema grammar compiles to exactly
+    such a per-step set via `ContinuousScheduler.submit`'s `mask_fn`.
+    """
+    spec = spec.strip()
+    if spec == "even":
+        ids = np.arange(0, vocab_size, 2)
+    elif spec == "odd":
+        ids = np.arange(1, vocab_size, 2)
+    elif spec.startswith("range:"):
+        lo, hi = spec[len("range:"):].split("-", 1)
+        ids = np.arange(max(int(lo), 0), min(int(hi), vocab_size))
+    else:
+        ids = np.array([int(t) for t in spec.split(",") if t.strip()],
+                       np.int64)
+    return allowed_ids_mask(ids, vocab_size)

@@ -33,7 +33,7 @@ token-identical to the slab engines.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -191,10 +191,12 @@ class _PagedMixin:
 
     # -- prefill (prefix match + suffix-only forward) ------------------------
 
-    def _slot_prefill_view(self, slot: int, prompt, frontend_embeds):
+    def _slot_prefill_view(self, slot: int, prompt, frontend_embeds,
+                           match_len: Optional[int] = None):
         if not self._n_paged:
             return super()._slot_prefill_view(slot, prompt,
-                                              frontend_embeds)
+                                              frontend_embeds,
+                                              match_len=match_len)
         prompt_np = np.asarray(prompt, np.int32).reshape(-1)
         if self._chains[slot]:
             raise RuntimeError(f"slot {slot} prefilled while occupied "
@@ -202,9 +204,14 @@ class _PagedMixin:
         scope = self._prefix_scope(frontend_embeds)
         shared: List[int] = []
         if self.prefix is not None:
+            # `match_len` caps the trie match (eval scoring: only the
+            # PROMPT may replay from cache; the continuation and the
+            # token before it must run in the suffix forward)
+            target = (prompt_np if match_len is None
+                      else prompt_np[:match_len])
             with self._tracer.span("paged.prefix_match", cat="paged",
                                    slot=slot):
-                shared = self.pool.fork(self.prefix.match(prompt_np,
+                shared = self.pool.fork(self.prefix.match(target,
                                                           scope=scope))
         shared_len = len(shared) * self._pc.block_size
         try:
@@ -304,6 +311,37 @@ class _PagedMixin:
         toks, counts = super().decode_step_multi()
         self._advance(counts)
         return toks, counts
+
+    def decode_topk_step(self, n_cand: int):
+        if self._n_paged:
+            self._reserve(1)
+            self._sync_tables()
+        out = super().decode_topk_step(n_cand)
+        if self._n_paged:
+            self._advance(np.ones((self.sc.batch_size,), np.int64))
+        return out
+
+    # -- beam forking (COW chain shares) -------------------------------------
+
+    def fork_slot(self, dst: int, src: int) -> None:
+        """Fork slot `src` into `dst` as a refcount bump on its whole
+        block chain (`BlockPool.fork`): the beams share every block —
+        prompt AND generated — until one writes, when `_make_writable`
+        copy-on-writes only the block being appended to.  No cache
+        bytes move at fork time."""
+        if not self._n_paged:
+            return super().fork_slot(dst, src)
+        if self._chains[dst]:
+            raise RuntimeError(f"fork into occupied slot {dst} "
+                               "(reset_slot it first)")
+        self._chains[dst] = self.pool.fork(self._chains[src])
+        self._host_len[dst] = self._host_len[src]
+        self._tables[dst, :] = self._tables[src, :]
+        self._tables_dirty = True
+        # per-slot device leaves (paged ``len``, any non-pooled state)
+        # still copy row src -> dst through the slab path
+        super().fork_slot(dst, src)
+        self._sync_tables()
 
     # -- recycling -----------------------------------------------------------
 

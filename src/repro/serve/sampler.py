@@ -25,7 +25,7 @@ that is ~130 MB of logits avoided per step.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,13 +38,21 @@ def streaming_topk(
     block_v: int = 8192, valid_vocab: Optional[int] = None,
     logit_softcap: Optional[float] = None,
     w_scale: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, jax.Array]:
+    allowed_mask: Optional[jax.Array] = None,
+    return_lse: bool = False,
+):
     """Top-k of h @ w.T per row, streamed over vocab chunks.
 
     h: (B, d); w: (V, d).  Returns (values (B, k) f32, indices (B, k)).
     `w_scale` (V,) marks `w` as row-quantized (`kernels/quant`): each
     chunk's logits are rescaled after the dot, so only one (B, bv)
     chunk of dequantized math lives at a time.
+
+    `allowed_mask` (B, V) restricts candidates to the nonzero-mask set
+    (constrained decoding: disallowed columns score -inf before the
+    merge); `return_lse=True` appends the per-row logsumexp (B,) over
+    the same filtered logits — the semantic oracle for the kernel's
+    masked / beam-scoring variants.
     """
     b, d = h.shape
     v = w.shape[0]
@@ -59,11 +67,16 @@ def streaming_topk(
     if w_scale is not None:
         s_chunks = jnp.pad(w_scale.astype(jnp.float32),
                            (0, pad)).reshape(n_chunks, bv)
+    m_chunks = None
+    if allowed_mask is not None:
+        m_chunks = jnp.pad(allowed_mask.astype(jnp.int8),
+                           ((0, 0), (0, pad)))
+        m_chunks = m_chunks.reshape(b, n_chunks, bv).transpose(1, 0, 2)
     h32 = h.astype(jnp.float32)
 
     def body(carry, inputs):
-        best_v, best_i = carry
-        w_chunk, s_chunk, idx = inputs
+        best_v, best_i, m, a = carry
+        w_chunk, s_chunk, m_chunk, idx = inputs
         z = jnp.dot(h32, w_chunk.T.astype(jnp.float32),
                     preferred_element_type=jnp.float32)   # (B, bv)
         if s_chunk is not None:
@@ -73,6 +86,14 @@ def streaming_topk(
             z = cap * jnp.tanh(z / cap)
         col = idx * bv + jnp.arange(bv, dtype=jnp.int32)
         z = jnp.where(col[None, :] < valid, z, -jnp.inf)
+        if m_chunk is not None:
+            z = jnp.where(m_chunk != 0, z, -jnp.inf)
+        if return_lse:
+            m_new = jnp.maximum(m, jnp.max(z, axis=1, keepdims=True))
+            safe_m = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            a = (a * jnp.exp(m - safe_m)
+                 + jnp.sum(jnp.exp(z - safe_m), axis=1, keepdims=True))
+            m = m_new
         # a chunk contributes at most bv candidates, so clamp the chunk
         # top-k there (k > block_v is legal: the merge keeps k overall)
         cv, ci = jax.lax.top_k(z, min(k, bv))
@@ -81,18 +102,30 @@ def streaming_topk(
         merged_i = jnp.concatenate([best_i, ci], axis=1)
         mv, sel = jax.lax.top_k(merged_v, k)
         mi = jnp.take_along_axis(merged_i, sel, axis=1)
-        return (mv, mi), None
+        return (mv, mi, m, a), None
 
     init = (jnp.full((b, k), -jnp.inf, jnp.float32),
-            jnp.zeros((b, k), jnp.int32))
+            jnp.zeros((b, k), jnp.int32),
+            jnp.full((b, 1), -jnp.inf, jnp.float32),
+            jnp.zeros((b, 1), jnp.float32))
     chunk_ids = jnp.arange(n_chunks, dtype=jnp.int32)
-    if s_chunks is None:
-        (vals, idxs), _ = jax.lax.scan(
-            lambda c, xs: body(c, (xs[0], None, xs[1])), init,
-            (w_chunks, chunk_ids))
-    else:
-        (vals, idxs), _ = jax.lax.scan(
-            body, init, (w_chunks, s_chunks, chunk_ids))
+
+    xs = [w_chunks, chunk_ids]
+    unpack = [0, None, None, 1]        # (w, scale, mask, idx) positions
+    if s_chunks is not None:
+        unpack[1] = len(xs)
+        xs.append(s_chunks)
+    if m_chunks is not None:
+        unpack[2] = len(xs)
+        xs.append(m_chunks)
+
+    def step(c, packed):
+        return body(c, tuple(None if i is None else packed[i]
+                             for i in unpack))
+
+    (vals, idxs, m, a), _ = jax.lax.scan(step, init, tuple(xs))
+    if return_lse:
+        return vals, idxs, (m + jnp.log(a))[:, 0]
     return vals, idxs
 
 
@@ -123,6 +156,7 @@ def sample_tokens(
     logit_softcap: Optional[float] = None,
     impl: str = "pallas", plan: Optional[BlockPlan] = None,
     w_scale: Optional[jax.Array] = None,
+    allowed_mask: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Next-token ids (B,) — greedy when temperature == 0.
 
@@ -130,18 +164,24 @@ def sample_tokens(
     'jax' (the pure-JAX `streaming_topk` oracle).  `plan` pins the kernel
     tiling; None resolves it through the tuning cache.  `w_scale` marks
     `w` as a row-quantized lm_head (`ServeConfig.head_dtype`).
+    `allowed_mask` (B, V) restricts sampling to the nonzero-mask token
+    set per row (constrained/JSON decoding): disallowed tokens score
+    -inf inside the vocab scan and can never be drawn at any temperature
+    or top_p; an all-ones mask is token-identical to no mask.
     """
     k = 1 if temperature == 0.0 else top_k
     if impl == "pallas":
         from repro.kernels.sample_topk import pallas_topk
         vals, idxs = pallas_topk(h, w, k, valid_vocab=valid_vocab,
                                  logit_softcap=logit_softcap, plan=plan,
-                                 w_scale=w_scale)
+                                 w_scale=w_scale,
+                                 allowed_mask=allowed_mask)
     elif impl == "jax":
         vals, idxs = streaming_topk(h, w, k, block_v=block_v,
                                     valid_vocab=valid_vocab,
                                     logit_softcap=logit_softcap,
-                                    w_scale=w_scale)
+                                    w_scale=w_scale,
+                                    allowed_mask=allowed_mask)
     else:
         raise ValueError(f"unknown sampler impl {impl!r}")
     if temperature == 0.0:

@@ -44,6 +44,11 @@ class Request:
     max_new_tokens: int
     eos_id: Optional[int]
     frontend_embeds: Optional[Any] = None
+    # request modes (serve/modes.py, DESIGN.md §12)
+    kind: str = "generate"          # | "eval" | "beam" | "best_of"
+    token_mask: Optional[np.ndarray] = None   # constrained decoding
+    mask_fn: Optional[Callable[[List[int]], Any]] = None
+    payload: Optional[Dict[str, Any]] = None  # kind-specific state
 
 
 @dataclasses.dataclass
@@ -127,17 +132,49 @@ class ContinuousScheduler:
         self._m_drafted = reg.counter("spec.drafted_total")
         self._m_accepted = reg.counter("spec.accepted_total")
         self._exhausted_streak = 0
+        # request modes (serve/modes.py): live beam/best-of groups by
+        # rid, their slot ownership, and finished hypothesis sets
+        self._groups: Dict[int, Any] = {}
+        self._group_slots: Dict[int, Any] = {}
+        self.hypotheses: Dict[int, List[Any]] = {}
+        self.eval_requests = 0
+        self.eval_tokens_scored = 0
+        self.group_forks = 0
+        self.group_pruned = 0
+        self._m_eval_reqs = reg.counter("serve.eval_requests_total")
+        self._m_eval_tokens = reg.counter(
+            "serve.eval_tokens_scored_total",
+            "continuation tokens loglikelihood-scored")
+        self._m_groups = reg.counter("serve.beam_groups_total",
+                                     "beam/best-of groups admitted")
+        self._m_group_forks = reg.counter(
+            "serve.beam_forks_total", "slot forks for beam/best-of")
+        self._m_group_pruned = reg.counter(
+            "serve.beam_pruned_total", "beams pruned or retired early")
+        self._m_constrained = reg.counter(
+            "serve.constrained_tokens_total",
+            "tokens decoded under an allowed-token mask")
 
     # -- submission ---------------------------------------------------------
 
     def submit(self, prompt, *, max_new_tokens: Optional[int] = None,
-               eos_id=_UNSET, frontend_embeds=None) -> int:
+               eos_id=_UNSET, frontend_embeds=None, token_mask=None,
+               mask_fn: Optional[Callable[[List[int]], Any]] = None
+               ) -> int:
         """Queue one request; returns its request id.
 
         The submit time is stamped HERE: `ttft` and `latency` measure
         from the caller handing the request over, queue wait included —
         a request admitted late reports the wait it actually suffered,
-        not the time since its prefill."""
+        not the time since its prefill.
+
+        `token_mask` constrains every sampled token to an allowed set
+        (a (vocab_size,) bool mask or an id list — see
+        `Engine.set_slot_mask`); `mask_fn(tokens_so_far) -> allowed`
+        recomputes the set after each emission (grammar/JSON decoding:
+        the grammar state advances with the generated prefix).  The
+        mask streams through the sampling kernel's vocab scan, so a
+        disallowed token can never be drawn at any temperature."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         max_new = (self.default_max_new if max_new_tokens is None
                    else max_new_tokens)
@@ -153,15 +190,123 @@ class ContinuousScheduler:
                 + (f" + spec margin ({margin})" if margin else "")
                 + f" exceeds the engine cache capacity "
                 f"max_len={self.engine.sc.max_len}")
+        if token_mask is not None or mask_fn is not None:
+            self._require_modes("constrained decoding")
+            if self._groups or any(r.kind in ("beam", "best_of")
+                                   for r in self.queue):
+                # group steps advance through the UNMASKED top-k decode
+                raise ValueError("constrained requests cannot run "
+                                 "alongside beam/best-of groups")
         rid = self._next_rid
         self._next_rid += 1
         self._submit_t[rid] = time.perf_counter()
         self.queue.append(Request(
             rid, prompt, max_new,
             self.default_eos if eos_id is _UNSET else eos_id,
-            frontend_embeds))
+            frontend_embeds, token_mask=token_mask, mask_fn=mask_fn))
         self._m_qdepth.set(len(self.queue))
         return rid
+
+    def _require_modes(self, what: str):
+        if not getattr(self.engine, "supports_modes", False):
+            raise NotImplementedError(
+                f"{what} needs the plain one-token engines "
+                f"({type(self.engine).__name__} does not support "
+                "request modes)")
+
+    def submit_eval(self, prompt, continuations, *,
+                    frontend_embeds=None) -> int:
+        """Queue one loglikelihood-eval request: score every
+        continuation under `prompt` (lm-eval-style multiple choice).
+
+        ``results[rid]`` becomes a list of per-token logprob arrays,
+        one per continuation, in order — ``sum()`` each for the
+        sequence loglikelihood.  On paged engines with the prefix cache
+        the prompt forward runs once; the other continuations replay it
+        from the trie and prefill only their suffix."""
+        self._require_modes("loglikelihood eval")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        conts = [np.asarray(c, np.int32).reshape(-1)
+                 for c in continuations]
+        if not conts:
+            raise ValueError("submit_eval needs >= 1 continuation")
+        for c in conts:
+            if c.size < 1:
+                raise ValueError("empty continuation")
+            if len(prompt) + c.size > self.engine.sc.max_len:
+                raise ValueError(
+                    f"prompt ({len(prompt)}) + continuation ({c.size}) "
+                    f"exceeds max_len={self.engine.sc.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._submit_t[rid] = time.perf_counter()
+        self.queue.append(Request(
+            rid, prompt, 1, None, frontend_embeds, kind="eval",
+            payload={"conts": conts, "scores": []}))
+        self._m_qdepth.set(len(self.queue))
+        return rid
+
+    def _submit_group(self, kind: str, prompt, n: int, payload,
+                      max_new_tokens, eos_id, frontend_embeds) -> int:
+        self._require_modes(f"{kind} decoding")
+        if self.engine.sc.temperature != 0.0:
+            # plain requests sharing a tick with a group advance via
+            # the group's top-k step, which takes the argmax candidate
+            raise ValueError(
+                "beam/best-of groups require sc.temperature == 0.0 "
+                "(concurrent plain requests stay greedy); best-of "
+                "sampling temperature is per-request")
+        if getattr(self.engine, "_slot_masks", None) or any(
+                r.token_mask is not None or r.mask_fn is not None
+                for r in self.queue):
+            raise ValueError("beam/best-of groups cannot run alongside "
+                             "constrained requests")
+        if not 1 <= n <= self.engine.batch_size:
+            raise ValueError(f"group width {n} outside "
+                             f"[1, {self.engine.batch_size}]")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        max_new = (self.default_max_new if max_new_tokens is None
+                   else max_new_tokens)
+        if max_new < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{max_new}")
+        if len(prompt) + max_new - 1 > self.engine.sc.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
+                f"max_len={self.engine.sc.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._submit_t[rid] = time.perf_counter()
+        payload = dict(payload, n=n)
+        self.queue.append(Request(
+            rid, prompt, max_new,
+            self.default_eos if eos_id is _UNSET else eos_id,
+            frontend_embeds, kind=kind, payload=payload))
+        self._m_qdepth.set(len(self.queue))
+        return rid
+
+    def submit_beam(self, prompt, *, n_beams: int,
+                    max_new_tokens: Optional[int] = None, eos_id=_UNSET,
+                    frontend_embeds=None) -> int:
+        """Queue one beam-search request (`modes.BeamGroup`): `n_beams`
+        sibling slots decode in the shared batch, forked copy-on-write
+        on paged engines.  ``results[rid]`` is the best hypothesis'
+        tokens; ``hypotheses[rid]`` the ranked top-n list."""
+        return self._submit_group("beam", prompt, n_beams, {},
+                                  max_new_tokens, eos_id,
+                                  frontend_embeds)
+
+    def submit_best_of(self, prompt, *, n: int, temperature: float = 1.0,
+                       top_p: Optional[float] = None, seed: int = 0,
+                       max_new_tokens: Optional[int] = None,
+                       eos_id=_UNSET, frontend_embeds=None) -> int:
+        """Queue one best-of-n request (`modes.BestOfGroup`): n
+        independent samples at `temperature`, ranked by cumulative
+        logprob.  ``results[rid]`` is the highest-scoring sample."""
+        return self._submit_group(
+            "best_of", prompt, n,
+            {"temperature": temperature, "top_p": top_p, "seed": seed},
+            max_new_tokens, eos_id, frontend_embeds)
 
     # -- state machine ------------------------------------------------------
 
@@ -207,60 +352,173 @@ class ContinuousScheduler:
         done = (len(slot.tokens) >= slot.req.max_new_tokens
                 or (slot.req.eos_id is not None
                     and tok == slot.req.eos_id))
+        if slot.req.token_mask is not None or slot.req.mask_fn is not None:
+            self._m_constrained.inc()
+            if not done and slot.req.mask_fn is not None:
+                # advance the grammar: the allowed set for the NEXT
+                # token depends on everything generated so far
+                self.engine.set_slot_mask(
+                    idx, slot.req.mask_fn(list(slot.tokens)))
         self._emit(slot.req.rid, tok, done)
         if done:
             self._finish(idx)
         return done
 
-    def _admit(self):
-        """Prefill queued requests into free slots (FIFO), at most
-        `max_admits_per_step` per tick.
+    def _stamp_admit(self, req: Request, t_admit: float):
+        """Admission bookkeeping shared by every request kind (the
+        prefill — or for eval, the whole scoring pass — just ran)."""
+        self._exhausted_streak = 0
+        self.admit_order.append(req.rid)
+        t_first = time.perf_counter()
+        self.ttft[req.rid] = t_first - self._submit_t[req.rid]
+        self._first_t[req.rid] = t_first
+        self._m_qdepth.set(len(self.queue))
+        self._m_admitted.inc()
+        self._m_qwait.observe(self.queue_wait[req.rid])
+        self._m_ttft.observe(self.ttft[req.rid])
+        self.tracer.add_span("req.queue", self._submit_t[req.rid],
+                             t_admit, cat="request", rid=req.rid)
+        self.tracer.add_span("req.prefill", t_admit, t_first,
+                             cat="request", rid=req.rid,
+                             prompt_len=len(req.prompt))
 
-        A paged engine whose block pool runs dry raises `PoolExhausted`
-        from the prefill: the request goes BACK to the queue head and
-        admission stops for this tick — running slots keep decoding and
-        their completions free blocks.  If nothing is running either,
-        the request can never fit and the error propagates."""
+    def _requeue_exhausted(self, req: Request):
+        """`PoolExhausted` backpressure: the request goes BACK to the
+        queue head — ahead of never-admitted submissions
+        (FIFO-with-requeue) — and admission stops for this tick;
+        running slots keep decoding and their completions free blocks.
+        If nothing is running either, the request can never fit and
+        the error re-raises (the caller sees it)."""
+        self._note_pool_exhausted(req)
+        self.queue.appendleft(req)
+        if self.active == 0:
+            raise
+
+    def _admit(self):
+        """Admit queued requests (strict FIFO), at most
+        `max_admits_per_step` per tick.  A generate/eval request needs
+        one free slot; a beam/best-of group needs its full width n —
+        the queue head BLOCKS until enough slots free up (no
+        skip-ahead, so wide groups cannot starve)."""
         from repro.serve.kvpool import PoolExhausted
 
         admitted = 0
-        for idx in range(len(self.slots)):
-            # a request that finishes at its prefill token frees the slot
-            # again, so keep admitting into it
-            while self.slots[idx] is None and self.queue:
-                if (self.max_admits_per_step is not None
-                        and admitted >= self.max_admits_per_step):
-                    return
-                req = self.queue.popleft()
-                t_admit = time.perf_counter()
-                self.queue_wait[req.rid] = t_admit - self._submit_t[req.rid]
-                try:
-                    first = self.engine.prefill_into_slot(
-                        idx, req.prompt,
-                        frontend_embeds=req.frontend_embeds)
-                except PoolExhausted:
-                    self._note_pool_exhausted(req)
-                    if self.active == 0:
-                        raise
-                    self.queue.appendleft(req)
-                    return
-                self._exhausted_streak = 0
-                admitted += 1
-                self.admit_order.append(req.rid)
-                t_first = time.perf_counter()
-                self.ttft[req.rid] = t_first - self._submit_t[req.rid]
-                self._first_t[req.rid] = t_first
-                self._m_qdepth.set(len(self.queue))
-                self._m_admitted.inc()
-                self._m_qwait.observe(self.queue_wait[req.rid])
-                self._m_ttft.observe(self.ttft[req.rid])
-                self.tracer.add_span("req.queue", self._submit_t[req.rid],
-                                     t_admit, cat="request", rid=req.rid)
-                self.tracer.add_span("req.prefill", t_admit, t_first,
-                                     cat="request", rid=req.rid,
-                                     prompt_len=len(req.prompt))
-                self.slots[idx] = _Slot(req, [])
-                self._token_arrived(idx, first)
+        while self.queue:
+            if (self.max_admits_per_step is not None
+                    and admitted >= self.max_admits_per_step):
+                return
+            req = self.queue[0]
+            free = [i for i, s in enumerate(self.slots) if s is None]
+            need = (req.payload["n"]
+                    if req.kind in ("beam", "best_of") else 1)
+            if len(free) < need:
+                return
+            self.queue.popleft()
+            t_admit = time.perf_counter()
+            self.queue_wait[req.rid] = t_admit - self._submit_t[req.rid]
+            try:
+                if req.kind == "generate":
+                    self._admit_generate(req, free[0])
+                elif req.kind == "eval":
+                    self._run_eval(req, free[0])
+                else:
+                    self._admit_group(req, free[:need])
+            except PoolExhausted:
+                self._requeue_exhausted(req)
+                return
+            self._stamp_admit(req, t_admit)
+            admitted += 1
+
+    def _admit_generate(self, req: Request, idx: int):
+        masked = (req.token_mask is not None or req.mask_fn is not None)
+        if masked:
+            self.engine.set_slot_mask(
+                idx, req.token_mask if req.token_mask is not None
+                else req.mask_fn([]))
+        try:
+            first = self.engine.prefill_into_slot(
+                idx, req.prompt, frontend_embeds=req.frontend_embeds)
+        except BaseException:
+            if masked:
+                self.engine.set_slot_mask(idx, None)
+            raise
+        self.slots[idx] = _Slot(req, [])
+        self._token_arrived(idx, first)
+
+    def _run_eval(self, req: Request, idx: int):
+        """Score every continuation of an eval request through slot
+        `idx`, synchronously (each scoring pass is a batch=1 prefill —
+        exactly the cost one admit already pays).  Partial scores
+        survive a `PoolExhausted` requeue: the retry resumes at the
+        first unscored continuation, and the earlier continuations'
+        trie insertions make the retried prompt replay cheap."""
+        conts = req.payload["conts"]
+        scores = req.payload["scores"]
+        with self.tracer.span("req.eval", cat="request", rid=req.rid,
+                              conts=len(conts)):
+            while len(scores) < len(conts):
+                cont = conts[len(scores)]
+                logp = self.engine.score_in_slot(
+                    idx, req.prompt, cont,
+                    frontend_embeds=req.frontend_embeds)
+                self.engine.reset_slot(idx)
+                scores.append(logp)
+                self.eval_tokens_scored += len(cont)
+                self._m_eval_tokens.inc(len(cont))
+        self.eval_requests += 1
+        self._m_eval_reqs.inc()
+        self.results[req.rid] = list(scores)
+        self._finish_request(req.rid, conts=len(conts))
+
+    def _admit_group(self, req: Request, slots: List[int]):
+        from repro.serve import modes
+
+        p = req.payload
+        if req.kind == "beam":
+            g = modes.BeamGroup(req.rid, req.prompt, p["n"],
+                                req.max_new_tokens, req.eos_id,
+                                req.frontend_embeds)
+        else:
+            g = modes.BestOfGroup(req.rid, req.prompt, p["n"],
+                                  req.max_new_tokens, req.eos_id,
+                                  req.frontend_embeds,
+                                  temperature=p["temperature"],
+                                  top_k=self.engine.sc.top_k,
+                                  top_p=p["top_p"], seed=p["seed"])
+        g.req = req
+        used = g.admit(self.engine, slots)
+        for s in used:
+            self.slots[s] = _Slot(req, [])
+            self._group_slots[s] = g
+        self._m_groups.inc()
+        if g.done:
+            self._finalize_group(g)
+        else:
+            self._groups[req.rid] = g
+
+    def _finish_request(self, rid: int, **span_kw):
+        """Completion bookkeeping shared by every request kind."""
+        t_end = time.perf_counter()
+        t_sub = self._submit_t[rid]
+        self.latency[rid] = t_end - t_sub
+        self._m_latency.observe(self.latency[rid])
+        self._m_finished.inc()
+        self.tracer.add_span("req", t_sub, t_end, rid=rid, **span_kw)
+
+    def _finalize_group(self, g):
+        """Record a finished group: best hypothesis under `results`,
+        the ranked top-n under `hypotheses`."""
+        hyps = g.result()
+        self.hypotheses[g.rid] = hyps
+        best = hyps[0].tokens if hyps else []
+        self.results[g.rid] = np.asarray(best, np.int32)
+        self.group_forks += g.forks
+        self.group_pruned += g.pruned
+        self._m_group_forks.inc(g.forks)
+        self._m_group_pruned.inc(g.pruned)
+        self._groups.pop(g.rid, None)
+        self._finish_request(g.rid, kind=g.kind, beams=g.n,
+                             tokens=len(best))
 
     def _note_pool_exhausted(self, req: Request):
         """Count + contextualize silent paged backpressure: which request
@@ -299,6 +557,8 @@ class ContinuousScheduler:
         self._m_active.set(len(busy))
         if not busy:
             return 0
+        if self._groups:
+            return self._step_with_groups(busy)
         with self.tracer.span("sched.decode_step", cat="sched",
                               step=self.decode_steps, busy=len(busy)):
             if hasattr(self.engine, "decode_step_multi"):
@@ -321,6 +581,52 @@ class ContinuousScheduler:
                 self.spec_accepted += n - 1   # bonus token is not a draft
                 self._m_drafted.inc(spec_k)
                 self._m_accepted.inc(n - 1)
+        step_toks = self.tokens_emitted - emitted0
+        self._m_tokens.inc(step_toks)
+        self._m_tps.observe(step_toks / len(busy))
+        return len(busy)
+
+    def _step_with_groups(self, busy: List[int]) -> int:
+        """One tick while beam/best-of groups are live: a single
+        `decode_topk_step` advances EVERY busy slot (one vocab scan per
+        row, `return_lse` supplying the candidate logprobs).  Plain
+        slots take the argmax candidate — token-identical to their
+        greedy decode; group slots hand their candidate rows to the
+        group's host-side selection (fork/prune via claim/release)."""
+        k = max(g.k_cand for g in self._groups.values())
+        with self.tracer.span("sched.decode_step", cat="sched",
+                              step=self.decode_steps, busy=len(busy),
+                              groups=len(self._groups)):
+            vals, idxs, lse = self.engine.decode_topk_step(k)
+        self.decode_steps += 1
+        self.slot_busy_steps += len(busy)
+        emitted0 = self.tokens_emitted
+        for idx in busy:
+            if idx in self._group_slots or self.slots[idx] is None:
+                continue
+            tok = int(idxs[idx, 0])
+            self.engine.cur[idx] = tok
+            self.tokens_emitted += 1
+            self._token_arrived(idx, tok)
+
+        for g in list(self._groups.values()):
+            def claim(g=g):
+                for i, s in enumerate(self.slots):
+                    if s is None:
+                        self.slots[i] = _Slot(g.req, [])
+                        self._group_slots[i] = g
+                        return i
+                return None
+
+            def release(s):
+                self.slots[s] = None
+                self._group_slots.pop(s, None)
+                self.engine.reset_slot(s)
+
+            self.tokens_emitted += g.step(self.engine, vals, idxs, lse,
+                                          claim, release)
+            if g.done:
+                self._finalize_group(g)
         step_toks = self.tokens_emitted - emitted0
         self._m_tokens.inc(step_toks)
         self._m_tps.observe(step_toks / len(busy))
@@ -391,6 +697,14 @@ class ContinuousScheduler:
                     "tpot_s": round(self.tpot.get(rid, 0.0), 6),
                 } for rid in sorted(self.results)},
         }
+        if self.eval_requests or self.hypotheses:
+            out["modes"] = {
+                "eval_requests": self.eval_requests,
+                "eval_tokens_scored": self.eval_tokens_scored,
+                "group_requests": len(self.hypotheses),
+                "group_forks": self.group_forks,
+                "group_pruned": self.group_pruned,
+            }
         paged = getattr(self.engine, "paged_stats", None)
         if paged is not None:
             out["paged"] = paged()

@@ -265,6 +265,10 @@ class SpecEngine(Engine):
     """
 
     spec_mode = "sidecar"     # scheduler stats: draft model vs self-MTP
+    # speculative steps emit multiple tokens per tick and verify drafts
+    # unmasked — the serve/modes.py request modes (constrained masks,
+    # beam groups, eval scoring) require the plain one-token engines
+    supports_modes = False
 
     def __init__(self, arch: Arch, params, sc: ServeConfig,
                  draft_arch: Arch, draft_params,
@@ -542,6 +546,7 @@ class SelfSpecEngine(Engine):
     """
 
     spec_mode = "self"
+    supports_modes = False    # see SpecEngine: multi-token emission
 
     def __init__(self, arch: Arch, params, sc: ServeConfig,
                  spec: Optional[SpecConfig] = None, jit: bool = True):

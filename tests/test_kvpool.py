@@ -58,6 +58,25 @@ def test_fork_of_unallocated_block_raises():
         pool.fork([NULL_BLOCK])
 
 
+def test_fork_with_duplicate_ids_counts_each_reference():
+    """Regression: fancy-index `refcounts[ids] += 1` collapses repeated
+    ids to ONE bump (numpy last-write-wins), undercounting a chain that
+    references a block twice — `np.add.at` must count every occurrence,
+    or the second free of the duplicate recycles a still-referenced
+    block."""
+    pool = make_pool()
+    [a] = pool.alloc(1)
+    shared = pool.fork([a, a])
+    assert shared == [a, a]
+    assert pool.refcount(a) == 3           # 1 owner + 2 fork references
+    assert pool.free([a, a]) == []         # both fork refs drop, 1 left
+    assert pool.refcount(a) == 1
+    assert pool.free([a]) == [a]           # owner's free recycles it
+    assert pool.used_blocks == 0
+    with pytest.raises(ValueError):
+        pool.free([a])
+
+
 def test_writable_block_copy_on_write():
     pool = make_pool()
     chain = pool.alloc(2)

@@ -1,0 +1,402 @@
+"""Logits-free request modes (serve/modes.py, DESIGN.md §12).
+
+Oracles are dense f32 computations over the full vocabulary: per-token
+``log_softmax`` scoring for loglikelihood eval, and a host-side replay
+of the SAME beam-selection semantics on dense next-token distributions
+for beam search — so token-level agreement checks the top-k+lse kernel
+outputs through the whole decode loop, not just one step.
+
+Replay caveat: prefix-cache hits re-read the prompt's K/V from the
+cache's storage dtype, while a cold prefill attends in-flight
+full-precision values, so trie-replay tests pin
+``cache_dtype="float32"`` for exact agreement with the dense oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import forward_hidden, get_arch, init_params
+from repro.serve import (ContinuousScheduler, Engine, PagedEngine,
+                         SelfSpecEngine, ServeConfig, SpecConfig,
+                         Hypothesis, allowed_ids_mask, parse_mask_spec)
+
+
+def _arch_params(arch_id="qwen3-0.6b"):
+    arch = get_arch(arch_id, reduced=True)
+    return arch, init_params(arch, jax.random.PRNGKey(0))
+
+
+def _prompts(vocab, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, (n,)).astype(np.int32) for n in lens]
+
+
+def _dense_next_logp(arch, params, ids, fe=None):
+    """f32 (V,) log p(next | ids) from a dense full-vocab projection."""
+    batch = {"tokens": np.asarray(ids, np.int32)[None, :]}
+    if fe is not None:
+        batch["frontend_embeds"] = fe
+    h, _, _ = forward_hidden(arch, params, batch)
+    z = (np.asarray(h[0, -1], np.float32)
+         @ np.asarray(params["lm_head"], np.float32).T)
+    return np.asarray(jax.nn.log_softmax(z[:arch.vocab_size]))
+
+
+def _dense_cont_logp(arch, params, prompt, cont):
+    """f32 per-token log p(cont[t] | prompt, cont[:t]) oracle."""
+    ids = np.concatenate([prompt, cont]).astype(np.int32)
+    h, _, _ = forward_hidden(arch, params, {"tokens": ids[None, :]})
+    z = (np.asarray(h[0], np.float32)
+         @ np.asarray(params["lm_head"], np.float32).T)
+    logp = np.asarray(jax.nn.log_softmax(z[:, :arch.vocab_size], axis=-1))
+    pos = np.arange(len(prompt) - 1, len(ids) - 1)
+    return logp[pos, cont]
+
+
+# ---------------------------------------------------------------------------
+# loglikelihood eval
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["jax", "pallas"])
+def test_score_in_slot_matches_dense_oracle(impl):
+    arch, params = _arch_params()
+    eng = Engine(arch, params, ServeConfig(batch_size=2, max_len=64,
+                                           sampler_impl=impl))
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, arch.vocab_size, (11,)).astype(np.int32)
+    for clen in (1, 5, 9):          # crosses the p_pad=8 bucket edge
+        cont = rng.integers(1, arch.vocab_size, (clen,)).astype(np.int32)
+        got = eng.score_in_slot(0, prompt, cont)
+        eng.reset_slot(0)
+        want = _dense_cont_logp(arch, params, prompt, cont)
+        assert got.shape == (clen,)
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_submit_eval_trie_replay_exact():
+    """N continuations of one prompt on the paged engine: the first
+    scores cold, the rest replay the prompt from the prefix trie — and
+    (at a precision-preserving cache dtype) score IDENTICALLY."""
+    arch, params = _arch_params()
+    eng = PagedEngine(arch, params, ServeConfig(
+        batch_size=2, max_len=64, paged=True, block_size=8,
+        cache_dtype="float32"))
+    sched = ContinuousScheduler(eng, max_new_tokens=4)
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(1, arch.vocab_size, (19,)).astype(np.int32)
+    conts = [rng.integers(1, arch.vocab_size, (6,)).astype(np.int32)
+             for _ in range(3)]
+    rid = sched.submit_eval(prompt, conts)
+    results = sched.run()
+    assert len(results[rid]) == 3
+    for got, cont in zip(results[rid], conts):
+        want = _dense_cont_logp(arch, params, prompt, cont)
+        np.testing.assert_allclose(got, want, atol=1e-4)
+    assert eng.prefix.hits >= 2, "replay continuations must hit the trie"
+    assert sched.eval_requests == 1
+    assert sched.stats()["modes"]["eval_tokens_scored"] == 18
+
+
+def test_submit_eval_mixed_with_generate():
+    """Eval and generate requests interleave through one scheduler; the
+    generate output is unchanged by the eval traffic."""
+    arch, params = _arch_params()
+    prompts = _prompts(arch.vocab_size, (7, 9))
+    ref_eng = Engine(arch, params, ServeConfig(batch_size=2, max_len=64))
+    ref_sched = ContinuousScheduler(ref_eng, max_new_tokens=4)
+    ref_ids = [ref_sched.submit(p) for p in prompts]
+    ref = ref_sched.run()
+
+    eng = Engine(arch, params, ServeConfig(batch_size=2, max_len=64))
+    sched = ContinuousScheduler(eng, max_new_tokens=4)
+    cont = _prompts(arch.vocab_size, (5,), seed=9)[0]
+    r0 = sched.submit(prompts[0])
+    re = sched.submit_eval(prompts[1], [cont])
+    r1 = sched.submit(prompts[1])
+    res = sched.run()
+    np.testing.assert_array_equal(res[r0], ref[ref_ids[0]])
+    np.testing.assert_array_equal(res[r1], ref[ref_ids[1]])
+    np.testing.assert_allclose(
+        res[re][0], _dense_cont_logp(arch, params, prompts[1], cont),
+        atol=1e-4)
+
+
+def test_submit_eval_validates():
+    arch, params = _arch_params()
+    eng = Engine(arch, params, ServeConfig(batch_size=2, max_len=32))
+    sched = ContinuousScheduler(eng)
+    with pytest.raises(ValueError):
+        sched.submit_eval(np.arange(1, 5), [])
+    with pytest.raises(ValueError):
+        sched.submit_eval(np.arange(1, 5), [np.zeros((0,), np.int32)])
+    with pytest.raises(ValueError):                  # prompt+cont > max_len
+        sched.submit_eval(np.arange(1, 30), [np.arange(1, 10)])
+
+
+# ---------------------------------------------------------------------------
+# beam search / best-of-n
+# ---------------------------------------------------------------------------
+
+
+_FAMILIES = [
+    ("qwen3-0.6b", {}),
+    ("seamless-m4t-medium", {"enc_len": 8}),
+    ("recurrentgemma-9b", {}),
+    ("xlstm-125m", {}),
+]
+
+
+@pytest.mark.parametrize("arch_id,kw", _FAMILIES)
+def test_beam1_token_identical_to_greedy(arch_id, kw):
+    """A width-1 beam is greedy decode: same kernel (k=1), same tokens."""
+    arch, params = _arch_params(arch_id)
+    fe = None
+    if arch.family == "encdec":
+        fe = jax.random.normal(jax.random.PRNGKey(1),
+                               (1, 8, arch.cfg.d_model)).astype(
+            jnp.dtype(arch.cfg.compute_dtype))
+    prompt = _prompts(arch.vocab_size, (9,))[0]
+    eng = Engine(arch, params, ServeConfig(batch_size=2, max_len=48, **kw))
+
+    sched = ContinuousScheduler(eng, max_new_tokens=5)
+    rr = sched.submit(prompt, frontend_embeds=fe)
+    ref = sched.run()[rr]
+
+    sched = ContinuousScheduler(eng, max_new_tokens=5)
+    rid = sched.submit_beam(prompt, n_beams=1, frontend_embeds=fe)
+    res = sched.run()
+    np.testing.assert_array_equal(res[rid], ref)
+    hyp = sched.hypotheses[rid]
+    assert len(hyp) == 1 and hyp[0].tokens == list(ref)
+
+
+def _oracle_beam(arch, params, prompt, n, max_new, fe=None):
+    """Host replay of BeamGroup's HF-style selection on DENSE
+    next-token distributions (top-2n per live beam, EOS-less budget
+    retirement, beaten-cutoff termination)."""
+    k = 1 if n == 1 else 2 * n
+    logp0 = _dense_next_logp(arch, params, prompt, fe)
+    order = np.argsort(-logp0)[:k]
+    cand = [(float(logp0[t]), [], int(t)) for t in order]
+
+    def select(cand):
+        finished_now, live = [], []
+        for lp, prev, tok in sorted(cand, key=lambda c: -c[0]):
+            if len(prev) + 1 >= max_new:
+                finished_now.append(Hypothesis(prev + [tok], lp))
+                continue
+            live.append((lp, prev, tok))
+            if len(live) == n:
+                break
+        return finished_now, live
+
+    finished, live = select(cand)
+    beams = [(lp, prev + [tok]) for lp, prev, tok in live]
+    while beams:
+        if len(finished) >= n:
+            nth = sorted((h.logp for h in finished), reverse=True)[n - 1]
+            if beams[0][0] <= nth:
+                break
+        cand = []
+        for lp, toks in beams:
+            row = _dense_next_logp(
+                arch, params, np.concatenate([prompt, toks]), fe)
+            for t in np.argsort(-row)[:k]:
+                cand.append((lp + float(row[t]), toks, int(t)))
+        fin, live = select(cand)
+        finished.extend(fin)
+        beams = sorted(((lp, prev + [tok]) for lp, prev, tok in live),
+                       key=lambda b: -b[0])
+    return sorted(finished, key=lambda h: -h.logp)[:n]
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_beam_matches_dense_selection_oracle(paged):
+    arch, params = _arch_params()
+    # f32 cache: the oracle attends full-precision K/V, so the engine
+    # must too for logp-level agreement (tokens already match at bf16)
+    sc = (ServeConfig(batch_size=8, max_len=64, paged=True, block_size=8,
+                      cache_dtype="float32") if paged
+          else ServeConfig(batch_size=8, max_len=64,
+                           cache_dtype="float32"))
+    eng = (PagedEngine if paged else Engine)(arch, params, sc)
+    prompt = _prompts(arch.vocab_size, (13,), seed=5)[0]
+    sched = ContinuousScheduler(eng, max_new_tokens=4)
+    rid = sched.submit_beam(prompt, n_beams=3)
+    res = sched.run()
+    got = sched.hypotheses[rid]
+    want = _oracle_beam(arch, params, prompt, 3, 4)
+    assert [h.tokens for h in got] == [h.tokens for h in want]
+    np.testing.assert_allclose([h.logp for h in got],
+                               [h.logp for h in want], atol=1e-3)
+    np.testing.assert_array_equal(res[rid], np.asarray(want[0].tokens))
+    if paged:
+        assert sched.group_forks > 0
+
+
+def test_beam_cow_fork_shares_blocks():
+    """`fork_slot` on the paged engine is a refcount bump: three forks
+    of a prefilled chain allocate ZERO new blocks, and diverging
+    appends copy-on-write only the written tail block."""
+    arch, params = _arch_params()
+    eng = PagedEngine(arch, params, ServeConfig(
+        batch_size=4, max_len=64, paged=True, block_size=8))
+    prompt = _prompts(arch.vocab_size, (17,), seed=6)[0]
+    vals, idxs, lse = eng.prefill_topk_into_slot(0, prompt, 8)
+    pb = eng.pool.used_blocks
+    assert pb > 0
+    for dst in (1, 2, 3):
+        eng.fork_slot(dst, 0)
+    assert eng.pool.used_blocks == pb          # pure sharing
+    eng.cur[:] = idxs[:4]
+    for _ in range(3):
+        v, i, l = eng.decode_topk_step(4)
+        eng.cur[:] = i[:, 0]
+    # each chain COWs its own append tail, but the shared full prompt
+    # blocks stay single-copy: strictly fewer than 4 private chains
+    assert pb < eng.pool.used_blocks < 4 * pb
+    for s in range(4):
+        eng.reset_slot(s)
+    assert eng.pool.used_blocks <= len(prompt) // 8   # trie retention
+
+
+def test_best_of_ranked_and_bounded():
+    arch, params = _arch_params()
+    eng = Engine(arch, params, ServeConfig(batch_size=4, max_len=64))
+    prompt = _prompts(arch.vocab_size, (9,), seed=7)[0]
+    sched = ContinuousScheduler(eng, max_new_tokens=5)
+    rid = sched.submit_best_of(prompt, n=3, temperature=1.0, seed=11)
+    res = sched.run()
+    hyp = sched.hypotheses[rid]
+    assert len(hyp) == 3
+    lps = [h.logp for h in hyp]
+    assert lps == sorted(lps, reverse=True)
+    assert res[rid].tolist() == hyp[0].tokens
+    for h in hyp:
+        assert len(h.tokens) == 5
+        # reported score == the dense oracle's loglikelihood
+        want = _dense_cont_logp(arch, params, prompt,
+                                np.asarray(h.tokens, np.int32)).sum()
+        np.testing.assert_allclose(h.logp, want, atol=1e-3)
+
+
+def test_best_of_temperature_zero_is_greedy():
+    arch, params = _arch_params()
+    eng = Engine(arch, params, ServeConfig(batch_size=2, max_len=48))
+    prompt = _prompts(arch.vocab_size, (8,), seed=8)[0]
+    sched = ContinuousScheduler(eng, max_new_tokens=4)
+    rr = sched.submit(prompt)
+    ref = sched.run()[rr]
+    sched = ContinuousScheduler(eng, max_new_tokens=4)
+    rid = sched.submit_best_of(prompt, n=2, temperature=0.0)
+    sched.run()
+    for h in sched.hypotheses[rid]:
+        assert h.tokens == list(ref)
+
+
+def test_group_rejects_sampling_scheduler():
+    arch, params = _arch_params()
+    eng = Engine(arch, params, ServeConfig(batch_size=2, max_len=32,
+                                           temperature=0.8))
+    sched = ContinuousScheduler(eng)
+    with pytest.raises(ValueError, match="temperature"):
+        sched.submit_beam(np.arange(1, 6), n_beams=2)
+
+
+def test_modes_rejected_on_spec_engines():
+    arch = get_arch("qwen3-0.6b", reduced=True)
+    from repro.configs.base import with_mtp
+    arch = with_mtp(arch, 2)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    eng = SelfSpecEngine(arch, params,
+                         ServeConfig(batch_size=2, max_len=32),
+                         SpecConfig(k=2))
+    sched = ContinuousScheduler(eng, max_new_tokens=4)
+    with pytest.raises(NotImplementedError):
+        sched.submit_eval(np.arange(1, 6), [np.arange(1, 4)])
+    with pytest.raises(NotImplementedError):
+        sched.submit_beam(np.arange(1, 6), n_beams=2)
+    with pytest.raises(NotImplementedError):
+        sched.submit(np.arange(1, 6), token_mask=[2, 4])
+
+
+# ---------------------------------------------------------------------------
+# constrained decoding
+# ---------------------------------------------------------------------------
+
+
+def test_constrained_static_mask_and_plain_neighbor():
+    """An even-ids mask constrains ITS request only; an unmasked request
+    in the same batch decodes exactly as it would alone."""
+    arch, params = _arch_params()
+    prompts = _prompts(arch.vocab_size, (7, 9), seed=10)
+    eng = Engine(arch, params, ServeConfig(batch_size=2, max_len=48))
+    sched = ContinuousScheduler(eng, max_new_tokens=6)
+    rr = sched.submit(prompts[1])
+    ref = sched.run()[rr]
+
+    sched = ContinuousScheduler(eng, max_new_tokens=6)
+    rm = sched.submit(prompts[0],
+                      token_mask=parse_mask_spec(
+                          "even", arch.vocab_size).astype(bool))
+    rp = sched.submit(prompts[1])
+    res = sched.run()
+    assert (res[rm] % 2 == 0).all()
+    np.testing.assert_array_equal(res[rp], ref)
+    assert sched.stats()["requests"] == 2
+
+
+def test_constrained_mask_fn_per_step():
+    """`mask_fn(tokens_so_far)` re-pins the allowed set after every
+    emission — alternating parity here (a stand-in for grammar state)."""
+    arch, params = _arch_params()
+    eng = Engine(arch, params, ServeConfig(batch_size=2, max_len=48))
+    sched = ContinuousScheduler(eng, max_new_tokens=6)
+    even = np.arange(0, arch.vocab_size, 2)
+    odd = np.arange(1, arch.vocab_size, 2)
+    rid = sched.submit(
+        _prompts(arch.vocab_size, (8,), seed=11)[0],
+        mask_fn=lambda toks: even if len(toks) % 2 == 0 else odd)
+    res = sched.run()
+    par = res[rid] % 2
+    np.testing.assert_array_equal(par, np.arange(6) % 2)
+
+
+def test_constrained_singleton_mask_is_deterministic():
+    arch, params = _arch_params()
+    eng = Engine(arch, params, ServeConfig(batch_size=2, max_len=48,
+                                           temperature=1.3))
+    sched = ContinuousScheduler(eng, max_new_tokens=4)
+    rid = sched.submit(_prompts(arch.vocab_size, (6,), seed=12)[0],
+                       token_mask=[123])
+    res = sched.run()
+    np.testing.assert_array_equal(res[rid], np.full(4, 123))
+
+
+def test_mask_validation():
+    arch, params = _arch_params()
+    eng = Engine(arch, params, ServeConfig(batch_size=2, max_len=32))
+    with pytest.raises(ValueError):
+        eng.set_slot_mask(0, [])
+    with pytest.raises(ValueError):
+        eng.set_slot_mask(0, [arch.vocab_size])     # out of range
+    with pytest.raises(ValueError):
+        eng.set_slot_mask(0, np.zeros(8, bool))     # bad shape
+    eng.set_slot_mask(0, [1, 2])
+    eng.set_slot_mask(0, None)                      # clears
+    assert not eng._slot_masks
+    with pytest.raises(ValueError):
+        allowed_ids_mask([-1], arch.vocab_size)
+    assert parse_mask_spec("range:10-20", 512).sum() == 10
+    assert parse_mask_spec("3,7,42", 512).sum() == 3
+
+
+def test_constrained_and_groups_mutually_exclusive():
+    arch, params = _arch_params()
+    eng = Engine(arch, params, ServeConfig(batch_size=4, max_len=32))
+    sched = ContinuousScheduler(eng, max_new_tokens=2)
+    sched.submit_beam(np.arange(1, 6), n_beams=2)
+    with pytest.raises(ValueError, match="constrained|beam"):
+        sched.submit(np.arange(1, 6), token_mask=[2, 4])

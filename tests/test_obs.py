@@ -306,3 +306,60 @@ def test_write_trace_formats(tmp_path):
                                   fmt="jsonl") == 1
     with pytest.raises(ValueError):
         obs.export.write_trace(tracer, str(tmp_path / "x"), fmt="nope")
+
+
+def test_kvpool_fork_updates_counter_and_gauge():
+    """Regression: `BlockPool.fork` used to skip `_track()` and the
+    forks counter — a fork-heavy beam workload showed a stale
+    `blocks_in_use` gauge and zero `forks_total`.  Every fork must tick
+    the counter, and the gauge must equal `used_blocks` after every
+    mutation (duplicate-id chains included)."""
+    from repro.serve.kvpool import BlockPool, PagedConfig
+
+    with obs.capture() as (reg, _):
+        pool = BlockPool(PagedConfig(block_size=4, n_blocks=8,
+                                     max_blocks_per_slot=8))
+        chain = pool.alloc(3)
+        for _ in range(4):
+            pool.fork(chain)
+        pool.fork([chain[0], chain[0]])          # duplicate-id chain
+        snap = reg.snapshot()
+        assert snap["kvpool.forks_total"]["value"] == 5
+        assert snap["kvpool.blocks_in_use"]["value"] == pool.used_blocks
+        # unwind every reference; the gauge follows back down to zero
+        for _ in range(4):
+            pool.free(chain)
+        pool.free([chain[0], chain[0]])
+        pool.free(chain)
+        snap = reg.snapshot()
+        assert pool.used_blocks == 0
+        assert snap["kvpool.blocks_in_use"]["value"] == 0
+        assert snap["kvpool.free_blocks"]["value"] == pool.free_blocks
+
+
+def test_beam_group_metrics_and_fork_instrumentation():
+    """A fork-heavy width-3 beam on the real paged engine: the modes
+    counters and the kvpool fork instrumentation record the run."""
+    import jax
+    from repro.models.registry import get_arch, init_params
+    from repro.serve import PagedEngine, ServeConfig
+
+    arch = get_arch("qwen3-0.6b", reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    with obs.capture() as (reg, _):
+        eng = PagedEngine(arch, params, ServeConfig(
+            batch_size=4, max_len=64, paged=True, block_size=8))
+        sched = sched_mod.ContinuousScheduler(eng, max_new_tokens=4)
+        rid = sched.submit_beam(
+            np.arange(1, 18, dtype=np.int32), n_beams=3)
+        sched.run()
+        snap = reg.snapshot()
+        assert snap["serve.beam_groups_total"]["value"] == 1
+        assert snap["serve.beam_forks_total"]["value"] == \
+            sched.group_forks > 0
+        assert snap["serve.beam_pruned_total"]["value"] == \
+            sched.group_pruned
+        assert snap["kvpool.forks_total"]["value"] >= sched.group_forks
+        assert snap["kvpool.blocks_in_use"]["value"] == \
+            eng.pool.used_blocks
+        assert len(sched.hypotheses[rid]) == 3

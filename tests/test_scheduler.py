@@ -280,3 +280,71 @@ def test_real_model_eos_recycling():
     np.testing.assert_array_equal(res[r0], free_run[:cut + 1])
     np.testing.assert_array_equal(res[r1], free_run[:cut + 1])
     assert res[r0][-1] == eos
+
+
+# ---------------------------------------------------------------------------
+# PoolExhausted backpressure (FIFO-with-requeue)
+# ---------------------------------------------------------------------------
+
+
+class CappedPoolEngine(FakeEngine):
+    """FakeEngine whose 'pool' only fits `cap` concurrent requests:
+    prefilling past that raises PoolExhausted (paged backpressure)."""
+
+    def __init__(self, cap=1, **kw):
+        super().__init__(**kw)
+        self.cap = cap
+        self.exhausted_hits = 0
+
+    def prefill_into_slot(self, slot, prompt, frontend_embeds=None):
+        from repro.serve.kvpool import PoolExhausted
+        if sum(c is not None for c in self._counters) >= self.cap:
+            self.exhausted_hits += 1
+            raise PoolExhausted("capped fake pool")
+        return super().prefill_into_slot(slot, prompt, frontend_embeds)
+
+
+def test_pool_exhausted_requeues_at_head_fifo(monkeypatch):
+    """A request bounced by PoolExhausted goes back to the queue HEAD:
+    it is retried BEFORE later submissions, so completion order stays
+    FIFO even under backpressure (regression: the bounced request used
+    to be re-appended at the tail — or lost on the re-raise path)."""
+    clock = FakeClock()
+    monkeypatch.setattr(sched_mod, "time", clock)
+    eng = CappedPoolEngine(cap=1, batch_size=2)
+    sched = ContinuousScheduler(eng, max_new_tokens=2)
+    rids = [sched.submit(np.arange(3)) for _ in range(3)]
+    while sched.queue or sched.active:
+        clock.t += 1.0
+        sched.step()
+    res = sched.results
+    # FakeEngine numbers tokens by PREFILL order: FIFO admission means
+    # request i carries the 100*i series despite the bounces
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(res[rid],
+                                      [100 * i + 1, 100 * i + 2])
+    assert eng.exhausted_hits > 0
+    # the bounced requests waited in-queue; the fake clock saw it
+    # (all submits at t=0, first admit on the t=1 tick)
+    assert sched.queue_wait[rids[0]] == 1.0
+    assert sched.queue_wait[rids[1]] > sched.queue_wait[rids[0]]
+    assert sched.queue_wait[rids[2]] > sched.queue_wait[rids[1]]
+    assert eng.exhausted_hits >= 2               # both bounced at least once
+
+
+def test_pool_exhausted_with_nothing_running_raises_but_keeps_request():
+    """When NO slot is decoding, backpressure cannot clear — the error
+    must surface.  The request stays at the queue head (appendleft runs
+    BEFORE the re-raise), so a retry after freeing pool space serves it
+    rather than dropping it."""
+    from repro.serve.kvpool import PoolExhausted
+
+    eng = CappedPoolEngine(cap=0, batch_size=2)
+    sched = ContinuousScheduler(eng, max_new_tokens=2)
+    rid = sched.submit(np.arange(4))
+    with pytest.raises(PoolExhausted):
+        sched.step()
+    assert len(sched.queue) == 1 and sched.queue[0].rid == rid
+    eng.cap = 1                                  # pool pressure clears
+    res = sched.run()
+    np.testing.assert_array_equal(res[rid], [1, 2])
