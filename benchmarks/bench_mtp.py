@@ -36,7 +36,7 @@ import numpy as np
 from repro.analysis.hlo import (assert_logits_free, logits_intermediates,
                                 memory_dict)
 from repro.configs.base import with_mtp
-from repro.models.registry import get_arch, init_params
+from repro.models.registry import get_arch
 from repro.serve import (ServeConfig, Engine, ContinuousScheduler,
                          SpecConfig, SpecEngine, SelfSpecEngine)
 from repro.train.step import TrainConfig, build_train_step

@@ -12,7 +12,6 @@ tests/test_distributed.py, which needs forced multi-device.)
 import tempfile
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer
 from repro.data import DataConfig, SyntheticLM, ShardedLoader

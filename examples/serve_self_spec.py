@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import with_mtp
-from repro.models.registry import get_arch, init_params
+from repro.models.registry import get_arch
 from repro.serve import (ServeConfig, Engine, ContinuousScheduler,
                          SpecConfig, SelfSpecEngine)
 from repro.train.step import TrainConfig, build_train_step

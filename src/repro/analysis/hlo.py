@@ -12,14 +12,9 @@ from __future__ import annotations
 import dataclasses
 import re
 from collections import defaultdict
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
-}
+from repro.analysis.lint.ir import HloShape, parse_hlo
 
 _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
@@ -33,11 +28,13 @@ _GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
 
 
 def _shape_bytes(dtype: str, dims: str) -> int:
-    n = 1
-    if dims:
-        for d in dims.split(","):
-            n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
+    """Bytes of one `dtype[dims]` result.  Unknown dtypes RAISE (via
+    `HloShape.byte_width`) instead of silently defaulting — a new
+    precision (fp8 variants, fp4...) must be added to
+    `repro.analysis.lint.ir.DTYPE_BYTES` before byte accounting will
+    touch it."""
+    shape = HloShape(dtype, tuple(int(d) for d in dims.split(",") if d))
+    return shape.size_bytes
 
 
 def _result_bytes(result_type: str) -> int:
@@ -96,74 +93,57 @@ def collective_stats(hlo_text: str) -> CollectiveStats:
 
 
 # ---------------------------------------------------------------------------
-# logits-free decode check (DESIGN.md §5.4)
+# logits-free decode check (DESIGN.md §5.4 / §13)
 # ---------------------------------------------------------------------------
-
-_DEF_RE = re.compile(
-    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s(]*))")
-_KERNEL_SRC_RE = re.compile(r'source_file="[^"]*kernels[^"]*"')
+#
+# Both checks below are thin wrappers over the instruction-graph linter
+# (`repro.analysis.lint`): the HLO text is parsed into a def-use graph
+# and the rule cores (`find_logits_defs` / `find_wide_copies`) run over
+# it.  The list-of-offending-lines return stays bit-compatible with the
+# old regex scanners for every existing caller.
 
 
 def logits_intermediates(hlo_text: str, batch: int, vocab: int,
                          seq: Optional[int] = None,
                          heads: Optional[int] = None) -> List[str]:
-    """Lines that DEFINE a logits-shaped tensor.
+    """Lines that DEFINE a logits-shaped tensor the program actually
+    materializes.
 
-    A materialized decode logits tensor shows up in HLO as a result whose
-    non-unit dims are exactly the multiset {batch, vocab} (in either
-    order, any number of size-1 dims) — for batch == 1 that degenerates
-    to {vocab} alone, so a `[1, V]` (or `[V]`) tensor is still caught.
+    Shape matching is the old contract: a result whose non-unit dims are
+    exactly the multiset {batch, vocab} (order-free, any number of
+    size-1 dims; batch == 1 degenerates to {vocab} so `[1, V]` / `[V]`
+    still trips).  `seq` adds the multi-token forms {batch, seq, vocab}
+    and {batch*seq, vocab} (speculative verification, DESIGN.md §6.5, or
+    the training sequence); `heads` adds the MTP-horizon forms
+    {batch, heads, vocab}, {batch*heads, vocab} and, with `seq`, the
+    combined ones (DESIGN.md §7).  One-byte INTEGER dtypes
+    (``pred``/``s4``/``u4``/``s8``/``u8``) are exempt — the
+    constrained-decoding allowed-token mask IS an s8 ``(B, V)`` tensor
+    by design (DESIGN.md §12.3); 1-byte FLOAT ``f8*`` results still
+    match.
 
-    With `seq` (the speculative-verification token count K+1, DESIGN.md
-    §6.5 — or the training sequence length) the detector additionally
-    flags the multi-token forms: {batch, seq, vocab} and the
-    row-flattened {batch*seq, vocab}.
+    What changed from the regex era is *why* a match counts
+    (DESIGN.md §13.2): a shape match is reported only when the value is
+    PROVENANCE-TAINTED — produced by a vocab-dim-creating op (dot /
+    convolution / opaque custom-call, or a broadcast of a V-dim operand)
+    or reachable from one along def-use edges, with taint stopped at
+    Pallas-kernel-internal instructions (``source_file=".../kernels/"``
+    metadata — interpret-mode kernel bodies leak into CPU HLO as plain
+    ops).  An in-kernel full-vocab tile that degenerately matches
+    (rows, V) — the vocab-512 false positive that once forced an
+    explicit sub-vocab BlockPlan in bench_modes — no longer trips the
+    detector, while every out-of-kernel materialization still does.
 
-    With `heads` (the multi-token-prediction horizon count, DESIGN.md §7)
-    it further flags the MTP forms a naive n-head loss materializes:
-    {batch, heads, vocab}, {batch*heads, vocab}, and — combined with
-    `seq` — {batch, seq, heads, vocab} / {batch*seq*heads, vocab}.  The
-    per-head per-position (batch*seq, vocab) rows are already covered by
-    the `seq` targets.
-
-    Only result types are inspected, so weights like the `(V, d)` lm_head
-    never match; callers should check both the raw and the padded
-    vocabulary.  One-byte INTEGER dtypes (``pred``/``s8``/``u8``) are
-    exempt: no logits tensor is ever stored at 1-byte integer precision,
-    but the constrained-decoding allowed-token mask (DESIGN.md §12.3) is
-    exactly an s8 ``(B, V)`` tensor and must not trip the detector
-    (1-byte FLOAT ``f8*`` results still match).  Returns the offending
-    lines (empty == logits-free).
+    Only result types are inspected, so weights like the `(V, d)`
+    lm_head never match; callers should check both the raw and the
+    padded vocabulary.  Returns the offending HLO lines, in program
+    order (empty == logits-free).
     """
-    _NON_LOGIT_DTYPES = ("pred", "s8", "u8")
-
-    def nonunit(dims):
-        return tuple(sorted(d for d in dims if d != 1))
-
-    b, v = int(batch), int(vocab)
-    targets = {nonunit((b, v))}
-    if seq is not None:
-        targets.add(nonunit((b, int(seq), v)))
-        targets.add(nonunit((b * int(seq), v)))
-    if heads is not None:
-        targets.add(nonunit((b, int(heads), v)))
-        targets.add(nonunit((b * int(heads), v)))
-        if seq is not None:
-            targets.add(nonunit((b, int(seq), int(heads), v)))
-            targets.add(nonunit((b * int(seq) * int(heads), v)))
-    hits: List[str] = []
-    for line in hlo_text.splitlines():
-        m = _DEF_RE.search(line)
-        if not m:
-            continue
-        for dt, dims in _SHAPE_RE.findall(m.group(1)):
-            if dt in _NON_LOGIT_DTYPES:
-                continue
-            ds = [int(x) for x in dims.split(",") if x]
-            if nonunit(ds) in targets:
-                hits.append(line.strip())
-                break
-    return hits
+    from repro.analysis.lint import (find_logits_defs, logits_targets,
+                                     parse_hlo as _parse)
+    graph = _parse(hlo_text)
+    targets = logits_targets(batch, vocab, seq=seq, heads=heads)
+    return [i.line for i in find_logits_defs(graph, targets, (vocab,))]
 
 
 def assert_logits_free(hlo_text: str, batch: int, vocabs,
@@ -172,9 +152,11 @@ def assert_logits_free(hlo_text: str, batch: int, vocabs,
     """Raise if the module materializes a (batch, V) — or, with `seq` /
     `heads`, any multi-token / multi-horizon — logits tensor for any V in
     `vocabs` (pass both `arch.vocab_size` and `arch.padded_vocab`)."""
+    from repro.analysis.lint import find_logits_defs, logits_targets
+    graph = parse_hlo(hlo_text)          # parse once, match per vocab
     for v in vocabs:
-        hits = logits_intermediates(hlo_text, batch, v, seq=seq,
-                                    heads=heads)
+        targets = logits_targets(batch, v, seq=seq, heads=heads)
+        hits = [i.line for i in find_logits_defs(graph, targets, (v,))]
         if hits:
             shapes = f"({batch}, {v})"
             if seq is not None:
@@ -211,27 +193,15 @@ def wide_dequant_intermediates(hlo_text: str, shape) -> List[str]:
     behind a custom-call and are invisible, so every surviving hit is a
     genuine out-of-kernel widening.
 
-    Returns the offending lines (empty == no wide dequant).
+    Implemented on the instruction graph (`repro.analysis.lint`);
+    returns the offending lines in program order (empty == no wide
+    dequant).  Unknown result dtypes are treated as wide — a new
+    precision cannot hide from the check by being unknown.
     """
-    def nonunit(dims):
-        return tuple(sorted(int(d) for d in dims if int(d) != 1))
-
-    target = nonunit(shape)
-    hits: List[str] = []
-    for line in hlo_text.splitlines():
-        m = _DEF_RE.search(line)
-        if not m:
-            continue
-        if " parameter(" in line or _KERNEL_SRC_RE.search(line):
-            continue
-        for dt, dims in _SHAPE_RE.findall(m.group(1)):
-            if _DTYPE_BYTES.get(dt, 4) <= 1:
-                continue
-            ds = [int(x) for x in dims.split(",") if x]
-            if nonunit(ds) == target:
-                hits.append(line.strip())
-                break
-    return hits
+    from repro.analysis.lint import find_wide_copies
+    graph = parse_hlo(hlo_text)
+    target = tuple(sorted(int(d) for d in shape if int(d) != 1))
+    return [i.line for i in find_wide_copies(graph, target)]
 
 
 def assert_no_wide_dequant(hlo_text: str, shapes) -> None:

@@ -1,0 +1,44 @@
+"""Graph-based static analysis over compiled hot paths (DESIGN.md §13).
+
+`ir` parses post-optimization HLO into an instruction graph with
+def-use edges; `rules` is the pluggable invariant-rule registry that
+runs over it (plus jaxpr- and source-level rules); `jaxpr` walks
+pre-lowering jaxprs; `pallas_ast` lints kernel Python sources.
+`launch/analyze.py` drives all of it over every canonical entry point.
+"""
+
+from repro.analysis.lint.ir import (
+    DTYPE_BYTES,
+    HloGraph,
+    HloShape,
+    Instruction,
+    parse_hlo,
+)
+from repro.analysis.lint.rules import (
+    Finding,
+    Rule,
+    RuleContext,
+    find_logits_defs,
+    find_wide_copies,
+    get_rules,
+    logits_targets,
+    register,
+    run_rules,
+)
+
+__all__ = [
+    "DTYPE_BYTES",
+    "HloGraph",
+    "HloShape",
+    "Instruction",
+    "parse_hlo",
+    "Finding",
+    "Rule",
+    "RuleContext",
+    "find_logits_defs",
+    "find_wide_copies",
+    "get_rules",
+    "logits_targets",
+    "register",
+    "run_rules",
+]

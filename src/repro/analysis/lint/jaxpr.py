@@ -1,0 +1,77 @@
+"""Pre-lowering jaxpr walker (DESIGN.md §13.1).
+
+The HLO rules see what XLA *kept*; this walker sees what the program
+*asked for*, before any fusion could hide it.  It recurses into the
+sub-jaxprs of structured primitives (pjit/closed_call, scan, while,
+cond, remat...) but treats ``pallas_call`` as opaque: kernel-internal
+tiles are the kernel's business (same exemption the HLO rules apply via
+``source_file`` metadata), and any logits-shaped *output* of the call
+would still surface as the eqn's outvar one level up.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, List, Set, Tuple
+
+# primitives whose params carry sub-jaxprs worth descending into
+_OPAQUE_PRIMITIVES = ("pallas_call",)
+
+# dtypes that can never hold logits (mirror of rules.NON_LOGIT_DTYPES,
+# spelled the numpy way since jaxpr avals carry numpy dtypes)
+_NON_LOGIT_NP = ("bool", "int8", "uint8", "int4", "uint4")
+
+
+def _sub_jaxprs(eqn) -> Iterator:
+    """Every jaxpr reachable from an eqn's params (one level)."""
+    if eqn.primitive.name in _OPAQUE_PRIMITIVES:
+        return
+    for val in eqn.params.values():
+        for j in _as_jaxprs(val):
+            yield j
+
+
+def _as_jaxprs(val) -> Iterator:
+    # ClosedJaxpr has .jaxpr; raw Jaxpr has .eqns; params may hold
+    # either, singly or in tuples/lists (e.g. cond branches)
+    if hasattr(val, "jaxpr"):
+        yield val.jaxpr
+    elif hasattr(val, "eqns"):
+        yield val
+    elif isinstance(val, (tuple, list)):
+        for v in val:
+            for j in _as_jaxprs(v):
+                yield j
+
+
+def walk(closed_jaxpr, path: str = "") -> Iterator[Tuple[str, object]]:
+    """Yield ``(path, eqn)`` for every equation, depth-first, crossing
+    into sub-jaxprs of structured primitives but not into pallas_call."""
+    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    for i, eqn in enumerate(jaxpr.eqns):
+        here = f"{path}/{eqn.primitive.name}[{i}]"
+        yield here, eqn
+        for sub in _sub_jaxprs(eqn):
+            for item in walk(sub, here):
+                yield item
+
+
+def logits_eqns(closed_jaxpr,
+                targets: Set[Tuple[int, ...]]
+                ) -> List[Tuple[str, object, object]]:
+    """Equations producing a float value whose non-unit dims match a
+    logits target.  Returns ``(path, eqn, aval)`` triples."""
+    hits = []
+    for path, eqn in walk(closed_jaxpr):
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            shape = getattr(aval, "shape", None)
+            if shape is None:
+                continue
+            dtype = str(getattr(aval, "dtype", ""))
+            if any(dtype.startswith(x) for x in _NON_LOGIT_NP):
+                continue
+            nonunit = tuple(sorted(int(d) for d in shape if int(d) != 1))
+            if nonunit in targets:
+                hits.append((path, eqn, aval))
+                break
+    return hits

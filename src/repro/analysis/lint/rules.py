@@ -1,0 +1,444 @@
+"""The pluggable invariant-rule registry (DESIGN.md §13.2).
+
+A *rule* is a named check over one compiled entry point.  Each rule
+declares what it consumes (``requires``: the parsed HLO graph, the
+pre-lowering jaxpr, or Python source files) and returns
+:class:`Finding`s; the runner (`run_rules`) hands every rule a
+:class:`RuleContext`, collects findings, and feeds the per-rule
+``lint.findings.<rule>_total`` counters in `repro.obs`.
+
+Shipped rules — each grounded in a failure this repo has actually hit:
+
+  ``logits-materialization``  (rows, V)-shaped intermediates that are
+      *provenance-tainted*: produced by a vocab-dim-creating op (dot /
+      opaque custom-call / broadcast of a V-dim operand) or downstream
+      of one, outside Pallas kernel bodies.  Kills the vocab-512 false
+      positive of the old regex detector (a full-vocab kernel tile
+      degenerately matches the shape but is kernel-internal).
+  ``wide-dequant``            >1-byte full-size copies of 1-byte
+      quantized operands (pools / quantized lm_head) outside kernels.
+  ``dtype-policy``            f64 anywhere, full-shape f32/f64 upcasts
+      of 1-byte params, and large full-shape upcasts of bf16 params.
+  ``buffer-donation``         entry points that promised donation but
+      compiled with an empty ``input_output_alias`` table (2x memory).
+  ``vocab-collectives``       all-gather / all-to-all whose result
+      carries a full-vocab dimension (a vocab-sharded operand being
+      regathered defeats the sharded fused-CE).
+  ``jaxpr-logits``            the pre-lowering twin of
+      logits-materialization over the jaxpr (pallas_call is opaque
+      there, so any (rows, V) float eqn output is a real buffer).
+  ``pallas-kernel-ast``       Python-AST lint of kernel sources
+      (`analysis/lint/pallas_ast.py`) — registered on import.
+
+Suppressions: ``(rule, entry-substring)`` pairs in
+`RuleContext.suppress` drop matching findings but are *recorded* in the
+run report; CI gates on zero suppressions in-tree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.lint.ir import HloGraph, Instruction
+
+# dtypes that can never hold logits (the s8/u8 constrained-decoding mask
+# IS a (B, V) tensor by design; pred masks likewise)
+NON_LOGIT_DTYPES = ("pred", "s4", "u4", "s8", "u8")
+
+# opcodes that create a vocab-sized dimension (taint roots).  custom-call
+# is opaque — a call returning a logits-shaped tensor is treated as
+# producing one.
+_ROOT_OPS = ("dot", "convolution", "custom-call")
+
+# value-view opcodes: they alias or index a buffer rather than writing a
+# new one, so they are never *reported* (taint still flows through them)
+_VIEW_OPS = ("parameter", "get-tuple-element", "tuple", "constant", "iota")
+
+
+def logits_targets(batch: int, vocab: int, seq: Optional[int] = None,
+                   heads: Optional[int] = None) -> Set[Tuple[int, ...]]:
+    """The non-unit dim multisets a logits tensor can take (DESIGN.md
+    §5.4): {B, V}; with `seq` the multi-token {B, S, V} / {B*S, V}; with
+    `heads` the MTP horizon forms."""
+    def nonunit(dims):
+        return tuple(sorted(d for d in dims if d != 1))
+
+    b, v = int(batch), int(vocab)
+    targets = {nonunit((b, v))}
+    if seq is not None:
+        targets.add(nonunit((b, int(seq), v)))
+        targets.add(nonunit((b * int(seq), v)))
+    if heads is not None:
+        targets.add(nonunit((b, int(heads), v)))
+        targets.add(nonunit((b * int(heads), v)))
+        if seq is not None:
+            targets.add(nonunit((b, int(seq), int(heads), v)))
+            targets.add(nonunit((b * int(seq) * int(heads), v)))
+    return targets
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    message: str
+    where: str                  # instruction line / file:line
+    entry: str = ""             # compiled entry point (runner fills in)
+
+    def to_dict(self) -> Dict[str, str]:
+        return {"rule": self.rule, "entry": self.entry,
+                "message": self.message, "where": self.where}
+
+
+@dataclasses.dataclass
+class RuleContext:
+    """Everything a rule may consume for ONE compiled entry point.
+
+    Unset fields simply disable the rules that need them: a context with
+    no `graph` runs only jaxpr/source rules, `expect_donation=None`
+    skips the donation check, etc."""
+    entry: str = ""
+    graph: Optional[HloGraph] = None
+    jaxpr: Optional[object] = None           # jax.core.ClosedJaxpr
+    sources: Sequence[str] = ()              # .py paths for AST rules
+    batch: Optional[int] = None              # logits-rule row count
+    vocabs: Tuple[int, ...] = ()             # (vocab_size, padded_vocab)
+    seq: Optional[int] = None
+    heads: Optional[int] = None
+    expect_donation: Optional[int] = None    # min alias pairs, None=skip
+    bf16_upcast_bytes: int = 1 << 20         # dtype-policy threshold
+    quant_param_bytes: int = 4096            # min 1-byte param size
+    suppress: Sequence[Tuple[str, str]] = () # (rule, entry-substring)
+
+
+class Rule:
+    """Base class: subclass, set `name`/`requires`, implement `run`."""
+
+    name: str = ""
+    requires: str = "hlo"        # 'hlo' | 'jaxpr' | 'source'
+
+    def applicable(self, ctx: RuleContext) -> bool:
+        if self.requires == "hlo":
+            return ctx.graph is not None
+        if self.requires == "jaxpr":
+            return ctx.jaxpr is not None
+        if self.requires == "source":
+            return bool(ctx.sources)
+        return False
+
+    def run(self, ctx: RuleContext) -> List[Finding]:
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(rule_cls):
+    """Class decorator: instantiate + add to the global registry."""
+    rule = rule_cls()
+    if not rule.name:
+        raise ValueError(f"rule {rule_cls.__name__} has no name")
+    _REGISTRY[rule.name] = rule
+    return rule_cls
+
+
+def get_rules(names: Optional[Iterable[str]] = None) -> List[Rule]:
+    """All registered rules (or the named subset, unknown names raise)."""
+    # the AST rule registers on import; keep it one package
+    from repro.analysis.lint import pallas_ast  # noqa: F401
+    if names is None:
+        return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+    out = []
+    for n in names:
+        if n not in _REGISTRY:
+            raise KeyError(f"unknown lint rule {n!r}; known: "
+                           f"{sorted(_REGISTRY)}")
+        out.append(_REGISTRY[n])
+    return out
+
+
+def run_rules(ctx: RuleContext,
+              rules: Optional[Sequence[Rule]] = None
+              ) -> Tuple[List[Finding], List[Finding]]:
+    """Run every applicable rule over `ctx`.
+
+    Returns ``(findings, suppressed)`` — suppressed findings matched a
+    ``(rule, entry-substring)`` pair in `ctx.suppress` and are reported
+    separately so the caller can gate on "zero suppressions in-tree".
+    Per-rule `lint.findings.<rule>_total` counters and the aggregate
+    `lint.findings_total` land in the `repro.obs` registry."""
+    from repro import obs
+    reg = obs.get_registry()
+    findings: List[Finding] = []
+    suppressed: List[Finding] = []
+    for rule in (get_rules() if rules is None else rules):
+        if not rule.applicable(ctx):
+            continue
+        hits = [dataclasses.replace(f, entry=f.entry or ctx.entry)
+                for f in rule.run(ctx)]
+        reg.counter(f"lint.findings.{rule.name}_total").inc(len(hits))
+        for f in hits:
+            if any(f.rule == r and s in f.entry for r, s in ctx.suppress):
+                suppressed.append(f)
+            else:
+                findings.append(f)
+    reg.counter("lint.findings_total").inc(len(findings))
+    return findings, suppressed
+
+
+# ---------------------------------------------------------------------------
+# graph helpers shared by the shape rules
+# ---------------------------------------------------------------------------
+
+
+def _matches(instr: Instruction, targets: Set[Tuple[int, ...]],
+             exempt_dtypes: Tuple[str, ...] = NON_LOGIT_DTYPES) -> bool:
+    return any(s.nonunit() in targets and s.dtype not in exempt_dtypes
+               for s in instr.shapes)
+
+
+def find_logits_defs(graph: HloGraph, targets: Set[Tuple[int, ...]],
+                     vocabs: Iterable[int]) -> List[Instruction]:
+    """Graph core of the logits rule (also backs the bit-compatible
+    `analysis.hlo.logits_intermediates`): taint from vocab-dim-creating
+    producers, stop at kernel bodies, report shape-matching writes."""
+    vocab_dims = {int(v) for v in vocabs}
+
+    def stop(instr: Instruction) -> bool:
+        return instr.in_kernel
+
+    seeds = []
+    for instr in graph:
+        if instr.in_kernel or not _matches(instr, targets):
+            continue
+        if instr.opcode in _ROOT_OPS:
+            seeds.append(instr.name)
+        elif instr.opcode == "broadcast":
+            # broadcasting a V-dim operand (a (V,) bias, a vocab-row
+            # stat) into a (rows, V) buffer creates logits-shaped data;
+            # broadcasting a scalar/row constant does not
+            for op in instr.operands:
+                src = graph.get(op)
+                if src is not None and any(
+                        d in vocab_dims for s in src.shapes
+                        for d in s.nonunit()):
+                    seeds.append(instr.name)
+                    break
+    tainted = graph.propagate(seeds, stop=stop)
+    hits = [i for i in graph
+            if i.name in tainted and _matches(i, targets)
+            and i.opcode not in _VIEW_OPS]
+    hits.sort(key=lambda i: i.lineno)
+    return hits
+
+
+def find_wide_copies(graph: HloGraph, target: Tuple[int, ...]
+                     ) -> List[Instruction]:
+    """Defs of a WIDE (>1 byte/elem) tensor whose non-unit dims equal
+    `target` — the graph core behind `hlo.wide_dequant_intermediates`.
+    Parameters and kernel-internal ops are non-evidence (see that
+    function's docstring)."""
+    hits = []
+    for instr in graph:
+        if instr.opcode == "parameter" or instr.in_kernel:
+            continue
+        for s in instr.shapes:
+            try:
+                wide = s.byte_width > 1
+            except ValueError:
+                wide = True          # unknown dtype: assume the worst
+            if wide and s.nonunit() == tuple(target):
+                hits.append(instr)
+                break
+    hits.sort(key=lambda i: i.lineno)
+    return hits
+
+
+# ---------------------------------------------------------------------------
+# the rule pack
+# ---------------------------------------------------------------------------
+
+
+@register
+class LogitsMaterializationRule(Rule):
+    """No compiled hot path may materialize a (rows, V) logits buffer."""
+
+    name = "logits-materialization"
+    requires = "hlo"
+
+    def run(self, ctx: RuleContext) -> List[Finding]:
+        if ctx.batch is None or not ctx.vocabs:
+            return []
+        out = []
+        for v in dict.fromkeys(ctx.vocabs):     # dedupe V == padded V
+            targets = logits_targets(ctx.batch, v, seq=ctx.seq,
+                                     heads=ctx.heads)
+            for instr in find_logits_defs(ctx.graph, targets, ctx.vocabs):
+                out.append(Finding(
+                    self.name,
+                    f"(rows, {v}) logits-shaped intermediate "
+                    f"materialized by '{instr.opcode}'",
+                    instr.line))
+        return out
+
+
+@register
+class WideDequantRule(Rule):
+    """Quantized (1-byte) operands must be widened only inside kernels.
+
+    Targets are discovered from the module itself: every 1-byte entry
+    parameter of at least `quant_param_bytes` is treated as a quantized
+    pool/weight, and any out-of-kernel wide def matching its shape —
+    and fed (transitively) by it — is a full-size dequantized copy."""
+
+    name = "wide-dequant"
+    requires = "hlo"
+
+    def run(self, ctx: RuleContext) -> List[Finding]:
+        g = ctx.graph
+        pools = [p for p in g.entry_parameters()
+                 if p.shape.byte_width == 1
+                 and p.shape.size_bytes >= ctx.quant_param_bytes]
+        if not pools:
+            return []
+        tainted = g.propagate([p.name for p in pools],
+                              stop=lambda i: i.in_kernel)
+        out = []
+        for p in pools:
+            for instr in find_wide_copies(g, p.shape.nonunit()):
+                if instr.name in tainted:
+                    out.append(Finding(
+                        self.name,
+                        f"full-size wide copy of quantized operand "
+                        f"{p.shape.dtype}{list(p.shape.dims)} "
+                        f"(param %{p.name}) outside a kernel",
+                        instr.line))
+        return out
+
+
+@register
+class DtypePolicyRule(Rule):
+    """No accidental precision widening in compiled hot paths:
+
+      * f64/c128 results anywhere (x64 silently enabled);
+      * any full-shape f32/f64 upcast of a 1-byte parameter;
+      * full-shape f32/f64 upcasts of bf16/f16 parameters larger than
+        `bf16_upcast_bytes` (a silently promoted master copy)."""
+
+    name = "dtype-policy"
+    requires = "hlo"
+
+    def run(self, ctx: RuleContext) -> List[Finding]:
+        g = ctx.graph
+        out = []
+        for instr in g:
+            if instr.in_kernel or instr.opcode in ("parameter", "constant"):
+                continue
+            if any(s.dtype in ("f64", "c128") for s in instr.shapes):
+                out.append(Finding(
+                    self.name,
+                    f"f64 result from '{instr.opcode}' — double precision "
+                    "is never intentional in this stack", instr.line))
+        narrow = [p for p in g.entry_parameters()
+                  if p.shape.dtype in ("bf16", "f16")
+                  or p.shape.byte_width == 1]
+        for p in narrow:
+            one_byte = p.shape.byte_width == 1
+            if (not one_byte
+                    and p.shape.size_bytes < ctx.bf16_upcast_bytes):
+                continue
+            target = p.shape.nonunit()
+            for u in g.users(p.name):
+                instr = g.instructions[u]
+                if instr.opcode != "convert" or instr.in_kernel:
+                    continue
+                if (instr.shape.dtype in ("f32", "f64")
+                        and instr.shape.nonunit() == target):
+                    kind = "1-byte" if one_byte else p.shape.dtype
+                    out.append(Finding(
+                        self.name,
+                        f"full-shape {instr.shape.dtype} upcast of {kind} "
+                        f"param %{p.name} {list(p.shape.dims)}",
+                        instr.line))
+        return out
+
+
+@register
+class BufferDonationRule(Rule):
+    """Entry points that promise donation must compile with a non-empty
+    ``input_output_alias`` table — a missing alias means the train state
+    / decode caches are copied every step (2x live memory)."""
+
+    name = "buffer-donation"
+    requires = "hlo"
+
+    def run(self, ctx: RuleContext) -> List[Finding]:
+        if ctx.expect_donation is None:
+            return []
+        have = ctx.graph.alias_pairs
+        if have >= ctx.expect_donation:
+            return []
+        return [Finding(
+            self.name,
+            f"expected >= {ctx.expect_donation} donated (aliased) "
+            f"buffers, compiled module has {have} — the donated operand "
+            "is being copied",
+            f"HloModule {ctx.graph.module_name or '<module>'} "
+            f"input_output_alias: {have} pairs")]
+
+
+@register
+class VocabCollectivesRule(Rule):
+    """Sharded fused-CE must never regather a vocab-sharded operand:
+    flag all-gather / all-to-all results carrying a full-vocab dim."""
+
+    name = "vocab-collectives"
+    requires = "hlo"
+
+    _OPS = ("all-gather", "all-gather-start", "all-to-all")
+
+    def run(self, ctx: RuleContext) -> List[Finding]:
+        if not ctx.vocabs:
+            return []
+        vocab_dims = {int(v) for v in ctx.vocabs}
+        out = []
+        for instr in ctx.graph:
+            if instr.opcode not in self._OPS:
+                continue
+            for s in instr.shapes:
+                if any(d in vocab_dims for d in s.nonunit()):
+                    out.append(Finding(
+                        self.name,
+                        f"'{instr.opcode}' result carries a full-vocab "
+                        f"dimension {s.dtype}{list(s.dims)} — a "
+                        "vocab-sharded operand is being regathered",
+                        instr.line))
+                    break
+        return out
+
+
+@register
+class JaxprLogitsRule(Rule):
+    """Pre-lowering twin of logits-materialization: walk the jaxpr
+    (pallas_call is opaque there) and flag float eqn outputs whose
+    shape matches a logits target."""
+
+    name = "jaxpr-logits"
+    requires = "jaxpr"
+
+    def run(self, ctx: RuleContext) -> List[Finding]:
+        if ctx.batch is None or not ctx.vocabs:
+            return []
+        from repro.analysis.lint.jaxpr import logits_eqns
+        out = []
+        for v in dict.fromkeys(ctx.vocabs):     # dedupe V == padded V
+            targets = logits_targets(ctx.batch, v, seq=ctx.seq,
+                                     heads=ctx.heads)
+            for path, eqn, aval in logits_eqns(ctx.jaxpr, targets):
+                out.append(Finding(
+                    self.name,
+                    f"eqn '{eqn.primitive.name}' at {path} produces a "
+                    f"(rows, {v}) logits-shaped value "
+                    f"{aval.dtype}{list(aval.shape)}",
+                    path))
+        return out

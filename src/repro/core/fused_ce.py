@@ -17,7 +17,6 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.types import LossConfig, IGNORE_INDEX
 from repro.core.canonical import canonical_loss

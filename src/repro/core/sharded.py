@@ -32,8 +32,7 @@ kernels with global column ids via `col_offset`).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,7 @@ contract a real tokenized corpus loader would provide.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

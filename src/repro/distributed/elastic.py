@@ -20,7 +20,7 @@ from __future__ import annotations
 from typing import Any, Optional, Sequence
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.sharding.rules import AxisRules, param_shardings
 

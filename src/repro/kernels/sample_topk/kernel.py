@@ -34,7 +34,7 @@ The pure-JAX `serve/sampler.py:streaming_topk` is the semantic oracle
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

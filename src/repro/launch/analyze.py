@@ -1,0 +1,384 @@
+"""Static-analysis driver: every invariant rule over every hot path.
+
+    PYTHONPATH=src python -m repro.launch.analyze [--smoke] [--json PATH]
+
+Compiles the canonical entry points — train step (exact and
+gradient-filtered), slab and paged decode, quantized decode, beam
+top-k, masked (constrained) decode, eval scoring, speculative verify —
+for ALL FOUR model families at reduced CPU shapes, parses each compiled
+module into the instruction-graph IR (`analysis/lint/ir.py`), and runs
+the full rule registry (`analysis/lint/rules.py`) over it: logits
+materialization, wide dequant, dtype policy, buffer donation, vocab-dim
+collectives, jaxpr-level logits, and the Pallas kernel AST lint over
+`repro/kernels` sources.
+
+Two deliberately-broken fixtures (the canonical two-stage loss and a
+dense ``h @ lm_head.T`` sampler) run alongside and MUST be flagged —
+they prove the rules still have teeth in the same process that declares
+the hot paths clean.
+
+Output: a pretty per-entry table plus a JSON report
+(`obs.export.dump_json`, ``--json -`` for stdout) with every finding,
+suppression, and the `lint.*` counter snapshot.  Exit status is
+non-zero on any violation: a clean entry with findings, a fixture
+without them, or (under ``--smoke``, the CI gate) ANY suppression in
+use — suppressions (``--suppress rule:entry-substring``) are a local
+triage tool, never a way to ship a finding.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.analysis.lint import RuleContext, get_rules, parse_hlo, run_rules
+from repro.models.registry import get_arch, init_params
+from repro.serve import Engine, PagedEngine, ServeConfig
+from repro.train.step import TrainConfig, build_train_step
+
+_FAMILIES = (
+    ("transformer", "qwen3-0.6b", {}),
+    ("griffin", "recurrentgemma-9b", {}),
+    ("xlstm", "xlstm-125m", {}),
+    ("encdec", "seamless-m4t-medium", {"enc_len": 8}),
+)
+_B, _S = 2, 16          # train rows
+_K = 3                  # speculative draft length (verify scans K+1)
+
+
+def _vocabs(arch):
+    return (arch.vocab_size, arch.padded_vocab)
+
+
+def _train_batch(arch):
+    """Shape structs only — analyze never executes a step."""
+    batch = {"tokens": jax.ShapeDtypeStruct((_B, _S), jnp.int32),
+             "targets": jax.ShapeDtypeStruct((_B, _S), jnp.int32)}
+    if arch.family == "encdec":
+        batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (_B, 8, arch.cfg.d_model), jnp.float32)
+    return batch
+
+
+def _maybe_jaxpr(fn, *args):
+    try:
+        return jax.make_jaxpr(fn)(*args)
+    except Exception:
+        return None                  # jaxpr rules just don't run
+
+
+def _frontend(arch):
+    if arch.family != "encdec":
+        return None
+    return jnp.zeros((1, 8, arch.cfg.d_model),
+                     jnp.dtype(arch.cfg.compute_dtype))
+
+
+def _ctx(entry, txt, arch, batch, *, seq=None, jaxpr=None,
+         expect_donation=None, suppress=()):
+    return RuleContext(entry=entry, graph=parse_hlo(txt), jaxpr=jaxpr,
+                       batch=batch, vocabs=_vocabs(arch), seq=seq,
+                       expect_donation=expect_donation,
+                       suppress=suppress)
+
+
+# ---------------------------------------------------------------------------
+# entry builders: each returns (RuleContext, expect) with expect in
+# {'clean', 'flagged'}
+# ---------------------------------------------------------------------------
+
+
+def _train_entry(name, arch, family, *, loss_impl, eps, suppress):
+    tc = TrainConfig(loss_impl=loss_impl, loss_block_v=128,
+                     total_steps=10, warmup_steps=1, grad_filter_eps=eps)
+    init_fn, step_fn = build_train_step(arch, tc)
+    state = jax.eval_shape(init_fn, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    batch = _train_batch(arch)
+    txt = (jax.jit(step_fn, donate_argnums=(0,))
+           .lower(state, batch).compile().as_text())
+    return _ctx(f"{family}/{name}", txt, arch, _B, seq=_S,
+                jaxpr=_maybe_jaxpr(step_fn, state, batch),
+                expect_donation=1, suppress=suppress)
+
+
+def _family_entries(family, arch_id, sc_kw, suppress):
+    """The per-family hot-path matrix; every entry must be clean."""
+    arch = get_arch(arch_id, reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    fe = _frontend(arch)
+    cur = jnp.zeros((_B, 1), jnp.int32)
+    rng = jax.random.PRNGKey(0)
+
+    yield _train_entry("train_exact", arch, family,
+                       loss_impl="pallas", eps=0.0,
+                       suppress=suppress), "clean"
+    yield _train_entry("train_filtered", arch, family,
+                       loss_impl="pallas", eps=1e-3,
+                       suppress=suppress), "clean"
+
+    # slab decode, donated caches (jitted here with explicit donation so
+    # the buffer-donation rule has compiled evidence even on CPU, where
+    # the engines skip donate_argnums to avoid runtime warnings)
+    from repro.serve.engine import build_serve_fns
+    sc = ServeConfig(batch_size=_B, max_len=48, temperature=0.0, **sc_kw)
+    eng = Engine(arch, params, sc)
+    *_, decode = build_serve_fns(arch, sc)
+    txt = (jax.jit(decode, donate_argnums=(1,))
+           .lower(params, eng.caches, cur, rng).compile().as_text())
+    yield _ctx(f"{family}/decode_slab", txt, arch, _B,
+               jaxpr=_maybe_jaxpr(decode, params, eng.caches, cur, rng),
+               expect_donation=1, suppress=suppress), "clean"
+
+    # paged decode (recurrent families degrade to slab semantics but
+    # still compile through the paged cache tree)
+    peng = PagedEngine(arch, params, ServeConfig(
+        batch_size=_B, max_len=48, paged=True, block_size=8,
+        temperature=0.0, **sc_kw))
+    pmf = peng._mode_fns()
+    txt = (pmf.decode_topk(4).lower(params, peng.caches, cur)
+           .compile().as_text())
+    yield _ctx(f"{family}/decode_paged", txt, arch, _B,
+               suppress=suppress), "clean"
+
+    # beam inner loop: top-k + lse decode on the slab engine
+    mf = eng._mode_fns()
+    txt = (mf.decode_topk(8).lower(params, eng.caches, cur)
+           .compile().as_text())
+    yield _ctx(f"{family}/beam_topk", txt, arch, _B,
+               suppress=suppress), "clean"
+
+    # constrained decode: the s8/u8 allowed-mask tile must NOT trip the
+    # logits rule (dtype exemption), everything else must stay clean
+    v_head = params["lm_head"].shape[0]
+    mask = jnp.ones((_B, v_head), jnp.uint8)
+    txt = (mf.decode_masked()
+           .lower(params, eng.caches, cur, rng, mask)
+           .compile().as_text())
+    yield _ctx(f"{family}/masked_decode", txt, arch, _B,
+               suppress=suppress), "clean"
+
+    # eval scoring through the engine's own slot-prefill view
+    prompt = np.arange(1, 9, dtype=np.int32)
+    cont = np.arange(1, 5, dtype=np.int32)
+    seq = np.concatenate([prompt, cont])
+    batch, slot_caches, true_len, ctx_d = eng._slot_prefill_view(
+        0, seq, fe, match_len=len(prompt))
+    p_pad = 8
+    ids = jnp.asarray(np.pad(cont, (0, p_pad - len(cont)),
+                             constant_values=-1))
+    fn = mf.eval_score(p_pad, bool(ctx_d.get("ext")))
+    txt = (fn.lower(params, slot_caches, batch, jnp.int32(true_len),
+                    jnp.int32(len(cont)), ids).compile().as_text())
+    yield _ctx(f"{family}/eval_score", txt, arch, 1, seq=p_pad,
+               suppress=suppress), "clean"
+
+    # speculative verify: score K+1 drafted tokens per row.  At reduced
+    # vocab the heuristic plan covers ALL of V in one kernel tile — the
+    # exact shape that false-positived the old regex detector; the
+    # provenance rule must keep it clean.
+    from repro.kernels.score_tokens import pallas_score_tokens
+
+    def verify(params, hs, ids):
+        logp, _ = pallas_score_tokens(hs, params["lm_head"], ids,
+                                      valid_vocab=arch.vocab_size)
+        return logp
+
+    rows = _B * (_K + 1)
+    hs = jnp.zeros((rows, arch.cfg.d_model), jnp.float32)
+    vids = jnp.zeros((rows,), jnp.int32)
+    txt = (jax.jit(verify).lower(params, hs, vids).compile().as_text())
+    yield _ctx(f"{family}/spec_verify", txt, arch, _B, seq=_K + 1,
+               jaxpr=_maybe_jaxpr(verify, params, hs, vids),
+               suppress=suppress), "clean"
+
+    if family == "transformer":
+        # quantized serving: int8 KV pools + int8 lm_head — the
+        # wide-dequant and dtype-policy rules get real 1-byte operands
+        qsc = ServeConfig(batch_size=_B, max_len=48, paged=True,
+                          block_size=8, paged_impl="pallas",
+                          quantize_cache=True, head_dtype="int8",
+                          temperature=0.0)
+        qeng = PagedEngine(arch, params, qsc)
+        *_, qdecode = build_serve_fns(qeng.arch, qsc)
+        txt = (jax.jit(qdecode, donate_argnums=(1,))
+               .lower(qeng.params, qeng.caches, cur, rng)
+               .compile().as_text())
+        yield _ctx(f"{family}/decode_quant", txt, arch, _B,
+                   expect_donation=1, suppress=suppress), "clean"
+
+
+def _fixture_entries(suppress):
+    """Deliberately-broken programs that MUST be flagged — the rules'
+    proof-of-teeth, run in the same process as the clean matrix."""
+    arch = get_arch("qwen3-0.6b", reduced=True)
+    params = init_params(arch, jax.random.PRNGKey(0))
+
+    yield _train_entry("fixture_canonical_loss", arch, "transformer",
+                       loss_impl="canonical", eps=0.0,
+                       suppress=suppress), "flagged"
+
+    from repro.models.registry import forward_hidden, init_serve_caches
+    caches = init_serve_caches(arch, params, _B, 48)
+
+    def dense_decode(params, caches, tokens):
+        h, _, caches = forward_hidden(arch, params, {"tokens": tokens},
+                                      caches=caches)
+        z = h[:, -1, :] @ params["lm_head"].T        # (B, V) logits
+        return jnp.argmax(z, axis=-1), caches
+
+    cur = jnp.zeros((_B, 1), jnp.int32)
+    txt = (jax.jit(dense_decode).lower(params, caches, cur)
+           .compile().as_text())
+    yield _ctx("transformer/fixture_dense_sampler", txt, arch, _B,
+               jaxpr=_maybe_jaxpr(dense_decode, params, caches, cur),
+               suppress=suppress), "flagged"
+
+
+def _kernel_ast_entry(suppress):
+    import repro.kernels as K
+    root = pathlib.Path(K.__file__).parent
+    sources = sorted(str(p) for p in root.rglob("*.py"))
+    return RuleContext(entry="kernels/ast", sources=sources,
+                       suppress=suppress), "clean"
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def _parse_suppressions(specs) -> Tuple[Tuple[str, str], ...]:
+    out = []
+    for s in specs or ():
+        rule, _, substr = s.partition(":")
+        if not rule or not substr:
+            raise SystemExit(
+                f"--suppress wants rule:entry-substring, got {s!r}")
+        out.append((rule, substr))
+    return tuple(out)
+
+
+def analyze(families=None, rule_names=None, suppress=(),
+            progress=print) -> Dict:
+    """Run the full matrix; returns the JSON-able report."""
+    rules = get_rules(rule_names)
+    tracer = obs.get_tracer()
+    rows: List[Dict] = []
+    t0 = time.perf_counter()
+
+    def run_one(ctx, expect):
+        te = time.perf_counter()
+        with tracer.span("analyze.entry", cat="lint", entry=ctx.entry):
+            findings, suppressed = run_rules(ctx, rules)
+        ok = bool(findings) if expect == "flagged" else not findings
+        rows.append({
+            "entry": ctx.entry, "expect": expect, "ok": ok,
+            "findings": [f.to_dict() for f in findings],
+            "suppressed": [f.to_dict() for f in suppressed],
+            "seconds": round(time.perf_counter() - te, 3),
+        })
+        progress(f"  {ctx.entry:44s} {expect:8s} "
+                 f"{len(findings):3d} finding(s)  "
+                 f"{'OK' if ok else 'VIOLATION'}")
+
+    with tracer.span("analyze", cat="lint"):
+        for family, arch_id, sc_kw in _FAMILIES:
+            if families and family not in families:
+                continue
+            progress(f"[analyze] {family} ({arch_id})")
+            for ctx, expect in _family_entries(family, arch_id, sc_kw,
+                                              suppress):
+                run_one(ctx, expect)
+        progress("[analyze] fixtures (must be flagged)")
+        for ctx, expect in _fixture_entries(suppress):
+            run_one(ctx, expect)
+        progress("[analyze] kernel sources (AST)")
+        run_one(*_kernel_ast_entry(suppress))
+
+    n_find = sum(len(r["findings"]) for r in rows)
+    n_supp = sum(len(r["suppressed"]) for r in rows)
+    violations = [r["entry"] for r in rows if not r["ok"]]
+    report = {
+        "rules": [r.name for r in rules],
+        "entries": rows,
+        "totals": {"entries": len(rows), "rules": len(rules),
+                   "findings": n_find, "suppressed": n_supp,
+                   "violations": len(violations),
+                   "seconds": round(time.perf_counter() - t0, 3)},
+        "violations": violations,
+        "metrics": {k: v for k, v in obs.get_registry().snapshot().items()
+                    if k.startswith("lint.")},
+    }
+    return report
+
+
+def _print_table(report):
+    print()
+    print(f"{'entry':44s} {'expect':8s} {'findings':>8s} "
+          f"{'suppressed':>10s}  status")
+    print("-" * 80)
+    for r in report["entries"]:
+        print(f"{r['entry']:44s} {r['expect']:8s} "
+              f"{len(r['findings']):8d} {len(r['suppressed']):10d}  "
+              f"{'OK' if r['ok'] else 'VIOLATION'}")
+    t = report["totals"]
+    print("-" * 80)
+    print(f"{t['entries']} entries x {t['rules']} rules: "
+          f"{t['findings']} finding(s), {t['suppressed']} suppressed, "
+          f"{t['violations']} violation(s) in {t['seconds']:.1f}s")
+    for r in report["entries"]:
+        if r["ok"] and not r["findings"]:
+            continue
+        head = "expected (fixture)" if r["ok"] else "VIOLATION"
+        for f in r["findings"][:4]:
+            print(f"  [{head}] {f['entry']} {f['rule']}: {f['message']}")
+            print(f"      at {f['where'][:100]}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: also fail on ANY suppression in use")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump the JSON report ('-' for stdout)")
+    ap.add_argument("--families", nargs="*", default=None,
+                    choices=[f for f, _, _ in _FAMILIES])
+    ap.add_argument("--rules", nargs="*", default=None,
+                    help="rule subset (default: all registered)")
+    ap.add_argument("--suppress", action="append", default=[],
+                    metavar="RULE:ENTRY-SUBSTRING",
+                    help="drop matching findings (recorded, not hidden; "
+                         "--smoke refuses to pass with any in use)")
+    args = ap.parse_args(argv)
+
+    obs.enable(trace=True)
+    report = analyze(families=args.families, rule_names=args.rules,
+                     suppress=_parse_suppressions(args.suppress))
+    _print_table(report)
+    if args.json:
+        obs.export.dump_json(report, args.json, label="analyze report",
+                             tag="analyze")
+
+    bad = report["totals"]["violations"]
+    if args.smoke and report["totals"]["suppressed"]:
+        print(f"[analyze] --smoke: {report['totals']['suppressed']} "
+              "suppression(s) in use — the gate requires zero")
+        bad += 1
+    if bad:
+        print(f"[analyze] FAILED: {bad} violation(s)")
+        return 1
+    print("[analyze] all entries as expected: hot paths clean, "
+          "fixtures flagged")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,9 +33,7 @@ from repro.analysis.hlo import collective_stats, cost_dict, memory_dict
 from repro.analysis import roofline as RL
 from repro.configs.base import Arch, SHAPES, input_specs
 from repro.launch.mesh import make_production_mesh
-from repro.models.registry import (
-    get_arch, ARCH_IDS, forward_hidden, init_params, serve_cache_specs,
-    param_count)
+from repro.models.registry import (get_arch, ARCH_IDS, forward_hidden, init_params, serve_cache_specs)
 from repro.serve.partition import cache_specs, batch_specs
 from repro.serve.sampler import sample_tokens
 from repro.sharding.rules import AxisRules

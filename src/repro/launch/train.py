@@ -17,7 +17,6 @@ host spans line up with device profiles) — see DESIGN.md §11.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import logging
 
 import jax
@@ -30,11 +29,9 @@ from repro.data import DataConfig, SyntheticLM, ShardedLoader
 from repro.distributed.fault import PreemptionHandler, StragglerMonitor
 from repro.launch.mesh import make_local_mesh
 from repro.models.registry import get_arch
-from repro.serve.partition import batch_specs
 from repro.sharding.rules import AxisRules
 from repro.train import (TrainConfig, build_train_step, train_loop,
                          resume_or_init, state_shardings)
-from repro.train.state import state_specs
 from repro.train.step import make_tuning_prewarm
 
 

@@ -11,7 +11,6 @@ Conventions:
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax

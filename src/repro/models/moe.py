@@ -16,7 +16,7 @@ sharding — no collectives inside routing.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,12 +10,12 @@ are masked to -inf inside every loss implementation via
 from __future__ import annotations
 
 import importlib
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import Arch, SHAPES, input_specs
+from repro.configs.base import Arch
 
 # Families whose trunks take the registry-level MTP heads (DESIGN.md §7).
 # Heads are position-wise post-trunk blocks, so any decoder-only LM trunk

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import contextlib
 import time
-from typing import Callable, Optional, Tuple
+from typing import Callable, Tuple
 
 from repro.obs import export, metrics, trace  # noqa: F401 (re-export)
 from repro.obs.metrics import (Counter, Gauge, Histogram, NULL_METRIC,

@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-from typing import Any
 
 from repro.optim import adamw, adafactor, schedules
 from repro.optim.clipping import clip_by_global_norm, global_norm

@@ -14,7 +14,7 @@ beta2_t = 1 - t^-0.8 follow the paper.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -15,13 +15,12 @@ with per-layer remat this bounds activation memory to one microbatch.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import Arch, TuningConfig
 from repro.core import fused_cross_entropy, LossConfig

@@ -1,8 +1,6 @@
 """HLO collective parser + roofline math + sharding-rule repair."""
 
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-import numpy as np
 import pytest
 
 from repro.analysis.hlo import collective_stats, _shape_bytes
@@ -43,6 +41,14 @@ def test_shape_bytes_dtypes():
     assert _shape_bytes("f32", "") == 4       # scalar
     assert _shape_bytes("pred", "8") == 8
     assert _shape_bytes("s8", "4,4") == 16
+    assert _shape_bytes("f8e4m3fn", "16") == 16
+
+
+def test_shape_bytes_unknown_dtype_raises():
+    """Byte accounting must never silently price a new precision at a
+    default width — unknown dtypes raise until added to DTYPE_BYTES."""
+    with pytest.raises(ValueError, match="unknown HLO dtype"):
+        _shape_bytes("f6e3m2", "4,4")
 
 
 def test_roofline_terms_and_dominance():
@@ -120,3 +126,26 @@ def test_logits_intermediates_detects_bv_defs_only():
         "%z = f32[1,512]{1,0} dot(%a, %b)"]
     with pytest.raises(AssertionError):
         assert_logits_free(hlo1, 1, (512,))
+
+
+def test_logits_intermediates_requires_provenance():
+    """Graph semantics (DESIGN.md §13.2): a shape match alone is not a
+    finding — the value must come from a vocab-dim-creating op, and
+    taint never escapes Pallas kernel bodies."""
+    from repro.analysis.hlo import logits_intermediates
+    # iota / parameter / their sums are (B, V)-shaped DATA, not logits
+    clean = "\n".join([
+        "  %i = f32[4,512]{1,0} iota(), iota_dimension=1",
+        "  %p = f32[4,512]{1,0} parameter(0)",
+        "  %s = f32[4,512]{1,0} add(%i, %p)",
+    ])
+    assert logits_intermediates(clean, 4, 512) == []
+    # a kernel-internal dot (interpret-mode leakage) is exempt, and its
+    # taint stops at the kernel boundary
+    kernel = (
+        '  %kd = f32[4,512]{1,0} dot(%h, %w), metadata={'
+        'source_file="/x/kernels/sample_topk/kernel.py" source_line=3}')
+    assert logits_intermediates(kernel, 4, 512) == []
+    # the same dot WITHOUT kernel metadata is a finding
+    plain = "  %kd = f32[4,512]{1,0} dot(%h, %w)"
+    assert len(logits_intermediates(plain, 4, 512)) == 1

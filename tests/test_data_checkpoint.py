@@ -1,7 +1,6 @@
 """Data pipeline determinism + checkpointer fault-tolerance behaviors."""
 
 import os
-import threading
 
 import jax
 import jax.numpy as jnp

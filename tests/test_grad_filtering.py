@@ -25,7 +25,6 @@ import pytest
 
 from repro.core import LossConfig
 from repro.core.filtering import skipped_fraction, tile_skip_mask
-from repro.core.streaming import streaming_stats
 from repro.core.windows import BlockPlan
 from repro.kernels.fused_ce import kernel as K
 

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import SHAPES
-from repro.models.registry import ARCH_IDS, get_arch
+from repro.models.registry import get_arch
 
 
 def test_mesh_module_is_pure():

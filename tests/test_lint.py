@@ -1,0 +1,428 @@
+"""Graph-based static analysis: IR parser, rule pack, AST lint.
+
+Three layers (DESIGN.md §13):
+
+  * parser/graph unit tests on synthetic HLO fragments (def-use edges,
+    cross-computation taint, donation table, unknown dtypes);
+  * rule fixtures — the canonical two-stage loss and a deliberately
+    dense sampler MUST be flagged, while the fused-CE / sample_topk /
+    score_tokens / paged-decode hot paths stay clean across all four
+    model families (the vocab-512 full-tile regression lives here too);
+  * Pallas AST lint — reproduces the PR-6 `pl.program_id`-inside-
+    `pl.when` bug class and the non-pure BlockSpec index-map lambdas on
+    minimal kernel sources, and asserts the real kernel tree is clean.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.lint import (RuleContext, find_logits_defs, find_wide_copies, get_rules, logits_targets, parse_hlo, run_rules)
+from repro.analysis.lint.ir import HloShape
+from repro.analysis.lint.pallas_ast import lint_source
+from repro.models.registry import get_arch, init_params
+
+# ---------------------------------------------------------------------------
+# IR parser + graph
+# ---------------------------------------------------------------------------
+
+_TOY = """\
+HloModule toy, input_output_alias={ {0}: (0, {}, may-alias), {1}: (1, {}, may-alias) }
+
+%fused (p.1: f32[4,64], p.2: f32[512,64]) -> f32[4,512] {
+  %p.1 = f32[4,64]{1,0} parameter(0)
+  %p.2 = f32[512,64]{1,0} parameter(1)
+  ROOT %d = f32[4,512]{1,0} dot(%p.1, %p.2)
+}
+
+ENTRY %main (a: f32[4,64], w: f32[512,64]) -> f32[4,512] {
+  %a = f32[4,64]{1,0} parameter(0)
+  %w = f32[512,64]{1,0} parameter(1)
+  %f = f32[4,512]{1,0} fusion(%a, %w), kind=kLoop, calls=%fused
+  ROOT %e = f32[4,512]{1,0} exponential(%f)
+}
+"""
+
+
+def test_parse_hlo_graph_structure():
+    g = parse_hlo(_TOY)
+    assert g.module_name == "toy"
+    assert g.entry == "main"
+    assert g.alias_pairs == 2              # donation table parsed
+    assert set(g.computations) == {"fused", "main"}
+    f = g.get("f")
+    assert f.opcode == "fusion" and f.called == ("fused",)
+    assert g.get("d").is_root and g.get("d").computation == "fused"
+    assert [p.name for p in g.entry_parameters()] == ["a", "w"]
+    assert g.users("f") == ["e"]
+
+
+def test_taint_crosses_fusion_boundaries():
+    g = parse_hlo(_TOY)
+    # seed the in-fusion dot; taint must reach the fusion RESULT and
+    # its user through the callee-ROOT -> call-result edge
+    tainted = g.propagate(["d"])
+    assert {"d", "f", "e"} <= tainted
+    # and entry operands flow INTO callee parameters
+    assert {"p.1", "d"} <= g.propagate(["a"])
+
+
+def test_propagate_stops_at_kernel_ops():
+    hlo = "\n".join([
+        '  %h = f32[4,64]{1,0} parameter(0)',
+        '  %kd = f32[4,512]{1,0} dot(%h, %w), metadata={op_name="x" '
+        'source_file="/x/kernels/score_tokens/kernel.py" source_line=1}',
+        '  %out = f32[4,512]{1,0} add(%kd, %kd)',
+    ])
+    g = parse_hlo(hlo)
+    assert g.get("kd").in_kernel
+    stop = lambda i: i.in_kernel
+    assert g.propagate(["kd"], stop=stop) == set()   # stopped at seed
+    hits = find_logits_defs(g, logits_targets(4, 512), (512,))
+    assert hits == []                      # kernel tile: not evidence
+
+
+def test_unknown_dtype_raises():
+    with pytest.raises(ValueError, match="unknown HLO dtype"):
+        HloShape("f6e3m2", (4, 4)).size_bytes
+    from repro.analysis.hlo import _shape_bytes
+    assert _shape_bytes("f8e4m3fn", "4,4") == 16    # known 1-byte float
+    with pytest.raises(ValueError, match="unknown HLO dtype"):
+        _shape_bytes("f6e3m2", "4,4")
+
+
+# ---------------------------------------------------------------------------
+# rule pack on synthetic HLO
+# ---------------------------------------------------------------------------
+
+
+def _run(rule_name, ctx):
+    findings, suppressed = run_rules(ctx, get_rules([rule_name]))
+    return findings, suppressed
+
+
+def test_logits_rule_needs_provenance():
+    # shape-matching values NOT fed by a vocab-creating op stay clean:
+    # an iota / parameter / constant of (B, V) is data, not logits
+    hlo = "\n".join([
+        "  %i = f32[4,512]{1,0} iota(), iota_dimension=1",
+        "  %p = f32[4,512]{1,0} parameter(0)",
+        "  %c = f32[4,512]{1,0} add(%i, %p)",
+    ])
+    g = parse_hlo(hlo)
+    assert find_logits_defs(g, logits_targets(4, 512), (512,)) == []
+
+    # ...but a dot-produced value taints its consumers
+    hlo2 = "\n".join([
+        "  %h = f32[4,64]{1,0} parameter(0)",
+        "  %w = f32[512,64]{1,0} parameter(1)",
+        "  %z = f32[4,512]{1,0} dot(%h, %w)",
+        "  %s = f32[4,512]{1,0} exponential(%z)",
+    ])
+    g2 = parse_hlo(hlo2)
+    hits = find_logits_defs(g2, logits_targets(4, 512), (512,))
+    assert [h.name for h in hits] == ["z", "s"]
+
+
+def test_logits_rule_broadcast_of_vocab_operand_seeds():
+    hlo = "\n".join([
+        "  %bias = f32[512]{0} parameter(0)",
+        "  %b = f32[4,512]{1,0} broadcast(%bias), dimensions={1}",
+        "  %zero = f32[] constant(0)",
+        "  %ok = f32[4,512]{1,0} broadcast(%zero), dimensions={}",
+    ])
+    g = parse_hlo(hlo)
+    hits = find_logits_defs(g, logits_targets(4, 512), (512,))
+    assert [h.name for h in hits] == ["b"]     # scalar broadcast clean
+
+
+def test_logits_rule_exempts_mask_dtypes():
+    hlo = "  %m = s8[4,512]{1,0} custom-call()"
+    g = parse_hlo(hlo)
+    assert find_logits_defs(g, logits_targets(4, 512), (512,)) == []
+
+
+def test_donation_rule():
+    ctx = RuleContext(entry="t", graph=parse_hlo(_TOY), expect_donation=2)
+    assert _run("buffer-donation", ctx)[0] == []
+    ctx3 = RuleContext(entry="t", graph=parse_hlo(_TOY), expect_donation=3)
+    findings, _ = _run("buffer-donation", ctx3)
+    assert len(findings) == 1 and "2" in findings[0].message
+    # expect_donation=None disables the check entirely
+    ctx0 = RuleContext(entry="t", graph=parse_hlo(_TOY))
+    assert _run("buffer-donation", ctx0)[0] == []
+
+
+def test_dtype_policy_rule():
+    hlo = "\n".join([
+        "HloModule m",
+        "ENTRY %e (p: bf16[2048,2048], q: s8[64,64]) -> f32[2048,2048] {",
+        "  %p = bf16[2048,2048]{1,0} parameter(0)",
+        "  %q = s8[64,64]{1,0} parameter(1)",
+        "  %w = f32[2048,2048]{1,0} convert(%p)",      # big bf16 upcast
+        "  %qq = f32[64,64]{1,0} convert(%q)",         # 1-byte upcast
+        "  ROOT %d = f64[2048,2048]{1,0} convert(%w)", # f64 anywhere
+        "}",
+    ])
+    ctx = RuleContext(entry="t", graph=parse_hlo(hlo))
+    findings, _ = _run("dtype-policy", ctx)
+    msgs = "\n".join(f.message for f in findings)
+    assert "f64" in msgs and "%p" in msgs and "%q" in msgs
+    assert len(findings) == 3
+
+
+def test_vocab_collectives_rule():
+    hlo = "\n".join([
+        "  %x = f32[8,64]{1,0} parameter(0)",
+        "  %ag = f32[8,512]{1,0} all-gather(%x), dimensions={1}",
+        "  %ar = f32[8,64]{1,0} all-reduce(%x), to_apply=%add",
+    ])
+    ctx = RuleContext(entry="t", graph=parse_hlo(hlo), vocabs=(512,))
+    findings, _ = _run("vocab-collectives", ctx)
+    assert len(findings) == 1 and "all-gather" in findings[0].message
+
+
+def test_wide_dequant_taint():
+    hlo = "\n".join([
+        "HloModule m",
+        "ENTRY %e (p: s8[256,64], w: f32[256,64]) -> f32[256,64] {",
+        "  %p = s8[256,64]{1,0} parameter(0)",
+        "  %w = f32[256,64]{1,0} parameter(1)",       # same shape: clean
+        "  %d = f32[256,64]{1,0} convert(%p)",        # full-size dequant
+        "  ROOT %o = f32[256,64]{1,0} add(%d, %w)",
+        "}",
+    ])
+    g = parse_hlo(hlo)
+    assert [h.name for h in find_wide_copies(g, (64, 256))] == ["d", "o"]
+    ctx = RuleContext(entry="t", graph=g)
+    findings, _ = _run("wide-dequant", ctx)
+    assert findings and all("%p" in f.message for f in findings)
+
+
+def test_suppressions_are_recorded_not_hidden():
+    hlo = "  %z = f32[4,512]{1,0} dot(%h, %w)"
+    ctx = RuleContext(entry="decode", graph=parse_hlo(hlo), batch=4,
+                      vocabs=(512,),
+                      suppress=(("logits-materialization", "decode"),))
+    findings, suppressed = run_rules(
+        ctx, get_rules(["logits-materialization"]))
+    assert findings == [] and len(suppressed) == 1
+    assert suppressed[0].rule == "logits-materialization"
+
+
+def test_rule_counters_land_in_obs():
+    from repro import obs
+    with obs.capture(trace=False) as (reg, _):
+        hlo = "  %z = f32[4,512]{1,0} dot(%h, %w)"
+        ctx = RuleContext(entry="t", graph=parse_hlo(hlo), batch=4,
+                          vocabs=(512,))
+        run_rules(ctx, get_rules(["logits-materialization"]))
+        snap = reg.snapshot()
+    assert snap["lint.findings_total"]["value"] == 1
+    assert snap["lint.findings.logits-materialization_total"]["value"] == 1
+
+
+# ---------------------------------------------------------------------------
+# compiled-path fixtures: hot paths clean, broken programs flagged
+# ---------------------------------------------------------------------------
+
+_FAMILIES = [
+    ("qwen3-0.6b", {}),
+    pytest.param("recurrentgemma-9b", {}, marks=pytest.mark.slow),
+    pytest.param("xlstm-125m", {}, marks=pytest.mark.slow),
+    pytest.param("seamless-m4t-medium", {"enc_len": 8},
+                 marks=pytest.mark.slow),
+]
+
+
+def _arch_params(arch_id):
+    arch = get_arch(arch_id, reduced=True)
+    return arch, init_params(arch, jax.random.PRNGKey(0))
+
+
+def _clean(txt, arch, batch, seq=None):
+    g = parse_hlo(txt)
+    for v in dict.fromkeys((arch.vocab_size, arch.padded_vocab)):
+        hits = find_logits_defs(g, logits_targets(batch, v, seq=seq), (v,))
+        assert hits == [], [h.line for h in hits[:4]]
+
+
+@pytest.mark.parametrize("arch_id,kw", _FAMILIES)
+def test_hot_paths_clean_per_family(arch_id, kw):
+    """sample_topk decode (paged cache tree) + score_tokens eval are
+    provenance-clean in every family's compiled module."""
+    from repro.serve import PagedEngine, ServeConfig
+    arch, params = _arch_params(arch_id)
+    eng = PagedEngine(arch, params, ServeConfig(
+        batch_size=2, max_len=48, paged=True, block_size=8,
+        temperature=0.0, **kw))
+    cur = jnp.zeros((2, 1), jnp.int32)
+    txt = (eng._mode_fns().decode_topk(4)
+           .lower(params, eng.caches, cur).compile().as_text())
+    _clean(txt, arch, 2)
+
+    from repro.kernels.score_tokens import pallas_score_tokens
+
+    def score(params, hs, ids):
+        logp, _ = pallas_score_tokens(hs, params["lm_head"], ids,
+                                      valid_vocab=arch.vocab_size)
+        return logp
+
+    hs = jnp.zeros((8, arch.cfg.d_model), jnp.float32)
+    ids = jnp.zeros((8,), jnp.int32)
+    txt = jax.jit(score).lower(params, hs, ids).compile().as_text()
+    _clean(txt, arch, 8)
+
+
+def test_fused_ce_train_step_clean_and_canonical_flagged():
+    """The paper's invariant, end to end: a pallas fused-CE train step
+    compiles logits-free; the canonical two-stage loss does not."""
+    from repro.train.step import TrainConfig, build_train_step
+    arch, _ = _arch_params("qwen3-0.6b")
+    B, S = 2, 16
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+    def lower(impl):
+        tc = TrainConfig(loss_impl=impl, loss_block_v=128,
+                         total_steps=10, warmup_steps=1)
+        init_fn, step_fn = build_train_step(arch, tc)
+        state = jax.eval_shape(init_fn,
+                               jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return (jax.jit(step_fn, donate_argnums=(0,))
+                .lower(state, batch).compile().as_text())
+
+    _clean(lower("pallas"), arch, B, seq=S)
+
+    g = parse_hlo(lower("canonical"))
+    hits = find_logits_defs(
+        g, logits_targets(B, arch.vocab_size, seq=S), (arch.vocab_size,))
+    assert hits, "canonical two-stage loss must be flagged"
+    # donation: the train state was donated and the alias table shows it
+    assert g.alias_pairs >= 1
+
+
+def test_dense_sampler_flagged():
+    from repro.models.registry import forward_hidden, init_serve_caches
+    arch, params = _arch_params("qwen3-0.6b")
+    caches = init_serve_caches(arch, params, 2, 48)
+
+    def dense_decode(params, caches, tokens):
+        h, _, caches = forward_hidden(arch, params, {"tokens": tokens},
+                                      caches=caches)
+        z = h[:, -1, :] @ params["lm_head"].T
+        return jnp.argmax(z, axis=-1), caches
+
+    txt = (jax.jit(dense_decode)
+           .lower(params, caches, jnp.zeros((2, 1), jnp.int32))
+           .compile().as_text())
+    g = parse_hlo(txt)
+    hits = find_logits_defs(g, logits_targets(2, arch.vocab_size),
+                            (arch.vocab_size,))
+    assert hits and any(h.opcode == "dot" for h in hits)
+
+
+def test_full_vocab_tile_plan_passes_assert_logits_free():
+    """Regression for the vocab-512 false positive (ISSUE 10): at small
+    V the HEURISTIC BlockPlan covers the whole vocabulary in one kernel
+    tile, whose (rows, V) block buffer leaks into interpret-mode HLO.
+    The provenance-based detector must keep it clean — no sub-vocab
+    BlockPlan workaround (the old bench_modes crutch) required."""
+    from repro.analysis.hlo import assert_logits_free, logits_intermediates
+    from repro.kernels.score_tokens import pallas_score_tokens
+    arch, params = _arch_params("qwen3-0.6b")
+    p_pad = 8
+    hs = jnp.zeros((p_pad, arch.cfg.d_model), jnp.float32)
+    ids = jnp.zeros((p_pad,), jnp.int32)
+
+    def score(params, hs, ids):
+        logp, _ = pallas_score_tokens(hs, params["lm_head"], ids,
+                                      valid_vocab=arch.vocab_size)
+        return logp
+
+    txt = jax.jit(score).lower(params, hs, ids).compile().as_text()
+    # the degenerate full-vocab tile IS present in the module...
+    assert f"[{p_pad},{arch.padded_vocab}]" in txt
+    # ...and the graph detector still declares the path logits-free
+    assert_logits_free(txt, p_pad, (arch.vocab_size, arch.padded_vocab))
+    assert logits_intermediates(txt, p_pad, arch.vocab_size) == []
+
+
+# ---------------------------------------------------------------------------
+# Pallas AST lint
+# ---------------------------------------------------------------------------
+
+_PR6_KERNEL = '''
+import jax.experimental.pallas as pl
+
+def kernel(x_ref, o_ref):
+    v = pl.program_id(1)          # fine: hoisted above the when
+
+    @pl.when(v == 0)
+    def _init():
+        i = pl.program_id(0)      # BUG: staged inside the when body
+        o_ref[i, :] = 0.0
+'''
+
+_PR6_FIXED = '''
+import jax.experimental.pallas as pl
+
+def kernel(x_ref, o_ref):
+    v = pl.program_id(1)
+    i = pl.program_id(0)          # hoisted: legal
+
+    @pl.when(v == 0)
+    def _init():
+        o_ref[i, :] = 0.0
+'''
+
+
+def test_ast_lint_reproduces_pr6_program_id_in_when():
+    findings = lint_source(_PR6_KERNEL, "kernel.py")
+    assert len(findings) == 1
+    assert "program_id" in findings[0].message
+    assert findings[0].where == "kernel.py:9"
+    assert lint_source(_PR6_FIXED, "kernel.py") == []
+
+
+def test_ast_lint_when_lambda_form():
+    src = ("import jax.experimental.pallas as pl\n"
+           "def k(o_ref):\n"
+           "    pl.when(pl.program_id(0) == 0)"
+           "(lambda: o_ref.__setitem__(pl.num_programs(0), 0.0))\n")
+    findings = lint_source(src)
+    assert len(findings) == 1 and "num_programs" in findings[0].message
+
+
+def test_ast_lint_blockspec_index_maps():
+    bad_pid = ("import jax.experimental.pallas as pl\n"
+               "spec = pl.BlockSpec((8, 128),"
+               " lambda i, j: (pl.program_id(0), j))\n")
+    findings = lint_source(bad_pid)
+    assert len(findings) == 1 and "index map" in findings[0].message
+
+    late = ("import jax.experimental.pallas as pl\n"
+            "specs = []\n"
+            "for g in range(4):\n"
+            "    specs.append(pl.BlockSpec((8, 128),"
+            " lambda i, j: (g, j)))\n")
+    findings = lint_source(late)
+    assert len(findings) == 1 and "late binding" in findings[0].message
+
+    bound = ("import jax.experimental.pallas as pl\n"
+             "specs = []\n"
+             "for g in range(4):\n"
+             "    specs.append(pl.BlockSpec((8, 128),"
+             " lambda i, j, g=g: (g, j)))\n")
+    assert lint_source(bound) == []
+
+
+def test_repo_kernel_tree_is_ast_clean():
+    import pathlib
+    import repro.kernels as K
+    from repro.analysis.lint.pallas_ast import lint_file
+    root = pathlib.Path(K.__file__).parent
+    findings = []
+    for p in sorted(root.rglob("*.py")):
+        findings += lint_file(str(p))
+    assert findings == [], [f"{f.where}: {f.message}" for f in findings]

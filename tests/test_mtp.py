@@ -11,7 +11,7 @@ import pytest
 
 from repro.analysis.hlo import logits_intermediates
 from repro.configs.base import MTPConfig, with_mtp
-from repro.core import IGNORE_INDEX, LossConfig, fused_cross_entropy
+from repro.core import IGNORE_INDEX, fused_cross_entropy
 from repro.models.mtp import apply_heads, shift_targets
 from repro.models.registry import (MTP_FAMILIES, forward_hidden, get_arch,
                                    init_params, supports_mtp)
@@ -247,9 +247,12 @@ def test_train_step_reports_per_horizon_metrics_with_accum():
 def test_logits_detector_learns_mtp_shapes():
     b, s, n, v = 3, 5, 2, 257
 
+    # a projection (`dot`) so the provenance-based detector (DESIGN.md
+    # §13.2) treats the def as a logits seed — shape match alone is
+    # deliberately no longer a finding
     def line(shape):
         dims = ",".join(str(d) for d in shape)
-        return f"  %x = f32[{dims}] add(f32[{dims}] %a, f32[{dims}] %b)"
+        return f"  %x = f32[{dims}] dot(f32[{dims}] %a, f32[64,64] %b)"
 
     for shape in ((b, s, n, v), (b * s * n, v), (b, n, v), (b * n, v)):
         assert logits_intermediates(line(shape), b, v, seq=s, heads=n), \

@@ -5,7 +5,6 @@ exact math the slab engine runs, so kernel-vs-oracle equivalence plus
 the paged-engine token-identity tests (tests/test_paged_engine.py) pin
 the whole paged decode path."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -14,8 +14,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.compat import make_mesh
-from repro.models.registry import (cache_batch_axes, empty_serve_caches,
-                                   get_arch, init_params)
+from repro.models.registry import empty_serve_caches, get_arch, init_params
 from repro.serve.kvpool import paged_config
 from repro.serve.partition import batch_specs, cache_specs
 from repro.sharding.rules import AxisRules

@@ -9,7 +9,6 @@ and recurrent ('scan' snapshot rollback) alike — with untrained heads
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
